@@ -1,0 +1,72 @@
+"""Kernel microbenchmarks: wall time of the jnp reference paths on CPU
+(interpret-mode Pallas timing is not meaningful — the kernels' TPU value
+is tracked structurally via the dry-run roofline instead), plus the
+zero-skip tile-skip rate and codebook memory-compression factor, which ARE
+hardware-independent."""
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.kernels import ops
+from repro.kernels.ref import zspe_spmm_ref
+
+
+def _time(fn, *args, iters=5):
+    fn(*args)[0].block_until_ready() if isinstance(fn(*args), tuple) else \
+        fn(*args).block_until_ready()
+    t0 = time.time()
+    for _ in range(iters):
+        out = fn(*args)
+        (out[0] if isinstance(out, tuple) else out).block_until_ready()
+    return (time.time() - t0) / iters * 1e6
+
+
+def rows():
+    rng = np.random.default_rng(0)
+    out = []
+    # iid sparsity (worst case for block skipping) + event-structured
+    # sparsity (the chip's actual workload: spatially clustered events)
+    from repro.data.synthetic import EventStream
+    from repro.kernels.zspe_spmm import zspe_spmm as raw_zspe
+
+    for name, s in [
+        ("iid_90pct", jnp.asarray(rng.random((256, 1024)) > 0.9, jnp.float32)),
+        ("event_nmnist_like",
+         EventStream(timesteps=16, height=32, width=32).batch(8)[0]
+         .reshape(128, -1)),
+    ]:
+        k = s.shape[-1]
+        w = jnp.asarray(rng.normal(size=(k, 256)), jnp.float32)
+        ref = jax.jit(zspe_spmm_ref)
+        us = _time(ref, s, w)
+        blk = (64, 128, 128)
+        _, skipped = raw_zspe(s, w, block=blk)
+        total = (s.shape[0] // blk[0]) * (256 // blk[2]) * (k // blk[1])
+        out.append({
+            "name": f"zspe_{name}",
+            "us_per_call_ref": round(us, 1),
+            "sparsity": round(1 - float(s.mean()), 3),
+            "tile_skip_rate": round(float(skipped.sum()) / total, 3),
+        })
+
+    idx = jnp.asarray(rng.integers(0, 16, (1024, 512)), jnp.int8)
+    cb = jnp.sort(jnp.asarray(rng.normal(size=16), jnp.float32))
+    x = jnp.asarray(rng.normal(size=(256, 1024)), jnp.float32)
+    us = _time(jax.jit(lambda a: ops.codebook_matmul_ref(a, idx, cb)), x)
+    out.append({
+        "name": "codebook_matmul",
+        "us_per_call_ref": round(us, 1),
+        "weight_bytes_vs_bf16": round((idx.size * 1) / (idx.size * 2), 3),
+    })
+    return out
+
+
+def main(emit):
+    for r in rows():
+        emit(f"kernel/{r['name']}", r.get("us_per_call_ref", 0),
+             {k: v for k, v in r.items() if k != "name"})
+    return rows()

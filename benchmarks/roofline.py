@@ -1,0 +1,69 @@
+"""Roofline-table assembly: reads dry-run JSON (launch/dryrun.py --out)
+and renders the EXPERIMENTS.md §Roofline table — all three terms,
+dominant bottleneck, MODEL_FLOPS/HLO_FLOPs ratio, roofline fraction."""
+from __future__ import annotations
+
+import json
+import os
+
+
+def load(path: str) -> list[dict]:
+    with open(path) as f:
+        return json.load(f)
+
+
+def table(results: list[dict]) -> list[dict]:
+    rows = []
+    for r in results:
+        if r.get("status") != "ok":
+            rows.append({"cell": f"{r['arch']}/{r['shape']}",
+                         "mesh": r.get("mesh", "?"),
+                         "status": r.get("status"),
+                         "reason": r.get("reason", r.get("error", ""))[:60]})
+            continue
+        rf = r["roofline"]
+        rows.append({
+            "cell": f"{r['arch']}/{r['shape']}",
+            "mesh": r["mesh"],
+            "status": "ok",
+            "t_compute_ms": round(rf["t_compute_s"] * 1e3, 2),
+            "t_memory_ms": round(rf["t_memory_s"] * 1e3, 2),
+            "t_collective_ms": round(rf["t_collective_s"] * 1e3, 2),
+            "bottleneck": rf["bottleneck"],
+            "useful_ratio": round(rf["useful_ratio"], 3),
+            "roofline_frac": round(rf["roofline_fraction"], 3),
+        })
+    return rows
+
+
+def to_markdown(rows: list[dict]) -> str:
+    hdr = ("| cell | mesh | t_comp ms | t_mem ms | t_coll ms | bound | "
+           "useful | roofline frac |")
+    sep = "|" + "---|" * 8
+    lines = [hdr, sep]
+    for r in rows:
+        if r["status"] != "ok":
+            lines.append(f"| {r['cell']} | {r['mesh']} | — | — | — | "
+                         f"{r['status']}: {r.get('reason','')} | — | — |")
+        else:
+            lines.append(
+                f"| {r['cell']} | {r['mesh']} | {r['t_compute_ms']} | "
+                f"{r['t_memory_ms']} | {r['t_collective_ms']} | "
+                f"{r['bottleneck']} | {r['useful_ratio']} | "
+                f"{r['roofline_frac']} |")
+    return "\n".join(lines)
+
+
+def main(emit, path: str = "dryrun_results.json"):
+    if not os.path.exists(path):
+        emit("roofline", 0, {"status": f"no {path}; run launch.dryrun --all"})
+        return []
+    rows = table(load(path))
+    ok = [r for r in rows if r["status"] == "ok"]
+    worst = min(ok, key=lambda r: r["roofline_frac"]) if ok else None
+    emit("roofline", 0, {
+        "cells_ok": len(ok),
+        "worst_cell": worst["cell"] if worst else None,
+        "worst_fraction": worst["roofline_frac"] if worst else None,
+    })
+    return rows

@@ -1,0 +1,39 @@
+"""Benchmark harness — one module per paper table/figure.
+
+Prints ``name,us_per_call,derived`` CSV rows; each module's `main(emit)`
+also returns its full table (dumped to benchmarks/results.json).
+"""
+from __future__ import annotations
+
+import json
+import os
+import sys
+
+
+def main() -> None:
+    sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+    from benchmarks import (fig3_core_efficiency, fig5_noc, fig6_riscv_power,
+                            kernel_bench, roofline, table1_chip)
+
+    results = {}
+    print("name,us_per_call,derived")
+
+    def emit(name, us, derived):
+        print(f"{name},{us:.1f},\"{json.dumps(derived, default=str)}\"")
+
+    results["fig3"] = fig3_core_efficiency.main(emit)
+    results["fig5"] = fig5_noc.main(emit)
+    results["fig6"] = fig6_riscv_power.main(emit)
+    results["table1"] = table1_chip.main(emit)
+    results["kernels"] = kernel_bench.main(emit)
+    dr = os.environ.get("REPRO_DRYRUN_JSON", "dryrun_results.json")
+    results["roofline"] = roofline.main(emit, dr)
+
+    out = os.path.join(os.path.dirname(__file__), "results.json")
+    with open(out, "w") as f:
+        json.dump(results, f, indent=1, default=str)
+    print(f"# full tables -> {out}", file=sys.stderr)
+
+
+if __name__ == "__main__":
+    main()

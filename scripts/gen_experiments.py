@@ -1,0 +1,79 @@
+"""Render EXPERIMENTS.md dynamic tables from dryrun_results.json (+ perf
+iteration JSONs).  The hand-written analysis sections live in the template
+below; tables are injected so numbers always match the artifacts.
+
+Usage: PYTHONPATH=src python scripts/gen_experiments.py
+"""
+import json
+import os
+import sys
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), ".."))
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+from benchmarks import roofline as RB  # noqa: E402
+
+
+def dryrun_summary(results):
+    ok = [r for r in results if r["status"] == "ok"]
+    skip = [r for r in results if r["status"] == "skipped"]
+    fail = [r for r in results if r["status"] == "FAILED"]
+    return ok, skip, fail
+
+
+def mem_table(results, mesh):
+    lines = ["| cell | args GiB | temp GiB | flops/dev | HBM B/dev | coll B/dev | compile s |",
+             "|---|---|---|---|---|---|---|"]
+    for r in results:
+        if r["status"] != "ok" or r["mesh"] != mesh:
+            continue
+        m, rf = r["memory"], r["roofline"]
+        lines.append(
+            f"| {r['arch']}/{r['shape']} | "
+            f"{(m['argument_bytes'] or 0)/2**30:.2f} | "
+            f"{(m['temp_bytes'] or 0)/2**30:.2f} | "
+            f"{rf['hlo_flops']:.2e} | {rf['hlo_bytes']:.2e} | "
+            f"{rf['coll_bytes']:.2e} | {r['compile_s']} |")
+    return "\n".join(lines)
+
+
+def skip_table(results):
+    seen = set()
+    lines = ["| cell | reason |", "|---|---|"]
+    for r in results:
+        if r["status"] == "skipped":
+            key = f"{r['arch']}/{r['shape']}"
+            if key in seen:
+                continue
+            seen.add(key)
+            lines.append(f"| {key} | {r['reason']} |")
+    return "\n".join(lines)
+
+
+def main():
+    res = json.load(open("dryrun_results.json"))
+    ok, skip, fail = dryrun_summary(res)
+    single = [r for r in res if r.get("mesh") == "16x16"]
+    multi = [r for r in res if r.get("mesh") == "2x16x16"]
+
+    roof_rows = RB.table([r for r in single if r["status"] == "ok"])
+    roof_md = RB.to_markdown(roof_rows)
+
+    out = {
+        "n_ok": len(ok), "n_skip": len(skip), "n_fail": len(fail),
+        "n_single_ok": sum(1 for r in single if r["status"] == "ok"),
+        "n_multi_ok": sum(1 for r in multi if r["status"] == "ok"),
+        "mem_single": mem_table(res, "16x16"),
+        "mem_multi": mem_table(res, "2x16x16"),
+        "skips": skip_table(res),
+        "roofline_md": roof_md,
+    }
+    with open("/tmp/exp_tables.json", "w") as f:
+        json.dump(out, f)
+    print(json.dumps({k: v for k, v in out.items()
+                      if not isinstance(v, str)}, indent=1))
+    print("\ntables written to /tmp/exp_tables.json")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,95 @@
+"""Architecture registry + input specs for every (arch x shape) cell.
+
+`input_specs(arch, shape)` returns jax.ShapeDtypeStruct stand-ins for every
+model input of that cell — weak-type-correct, shardable, no device
+allocation — the dry-run lowers against these.
+"""
+from __future__ import annotations
+
+import importlib
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.common import SHAPES, ArchConfig, ShapeConfig
+
+_MODULES = {
+    "moonshot-v1-16b-a3b": "moonshot_v1_16b_a3b",
+    "granite-moe-1b-a400m": "granite_moe_1b_a400m",
+    "zamba2-2.7b": "zamba2_2_7b",
+    "granite-3-8b": "granite_3_8b",
+    "mistral-large-123b": "mistral_large_123b",
+    "yi-9b": "yi_9b",
+    "granite-3-2b": "granite_3_2b",
+    "mamba2-130m": "mamba2_130m",
+    "whisper-tiny": "whisper_tiny",
+    "phi-3-vision-4.2b": "phi_3_vision_4_2b",
+}
+
+ARCH_NAMES = list(_MODULES)
+
+
+def get_arch(name: str, smoke: bool = False) -> ArchConfig:
+    mod = importlib.import_module(f"repro.configs.{_MODULES[name]}")
+    return mod.SMOKE if smoke else mod.ARCH
+
+
+def get_shape(name: str) -> ShapeConfig:
+    return SHAPES[name]
+
+
+def cell_is_runnable(cfg: ArchConfig, shape: ShapeConfig) -> tuple[bool, str]:
+    """Which (arch x shape) cells run; mirrors DESIGN.md §Arch-applicability."""
+    if shape.name == "long_500k" and not cfg.supports_long_context:
+        return False, "long_500k needs sub-quadratic attention (ssm/hybrid only)"
+    return True, ""
+
+
+def runnable_cells(smoke: bool = False):
+    out = []
+    for a in ARCH_NAMES:
+        cfg = get_arch(a, smoke)
+        for s in SHAPES.values():
+            ok, why = cell_is_runnable(cfg, s)
+            out.append((a, s.name, ok, why))
+    return out
+
+
+def input_specs(cfg: ArchConfig, shape: ShapeConfig) -> dict:
+    """ShapeDtypeStruct batch stand-ins for one cell.
+
+    train:   tokens/labels (B, S) int32  (+frames / patch_embeds stubs)
+    prefill: tokens (B, S) int32         (+stubs)
+    decode:  tokens (B, 1) int32; the KV/SSM caches are created separately
+             by the launcher via eval_shape of init_decode_state.
+    """
+    b, s = shape.global_batch, shape.seq_len
+    i32 = jnp.int32
+    f32 = jnp.float32
+
+    def tok(shape_):
+        return jax.ShapeDtypeStruct(shape_, i32)
+
+    if shape.kind == "train":
+        text_len = s - cfg.n_patches if cfg.family == "vlm" else s
+        batch = {"tokens": tok((b, text_len)), "labels": tok((b, text_len))}
+        if cfg.family == "audio":
+            batch["frames"] = jax.ShapeDtypeStruct(
+                (b, cfg.enc_frames, cfg.d_model), f32)
+        if cfg.family == "vlm":
+            batch["patch_embeds"] = jax.ShapeDtypeStruct(
+                (b, cfg.n_patches, cfg.d_model), f32)
+        return batch
+    if shape.kind == "prefill":
+        text_len = s - cfg.n_patches if cfg.family == "vlm" else s
+        batch = {"tokens": tok((b, text_len))}
+        if cfg.family == "audio":
+            batch["frames"] = jax.ShapeDtypeStruct(
+                (b, cfg.enc_frames, cfg.d_model), f32)
+        if cfg.family == "vlm":
+            batch["patch_embeds"] = jax.ShapeDtypeStruct(
+                (b, cfg.n_patches, cfg.d_model), f32)
+        return batch
+    if shape.kind == "decode":
+        return {"tokens": tok((b, 1))}
+    raise ValueError(shape.kind)

@@ -1,0 +1,32 @@
+"""Core library: the paper's contributions as composable JAX modules.
+
+C1  zero-skip sparse spike processing      -> repro.core.zspe
+C2  partial membrane-potential update      -> repro.core.neuron
+C3  non-uniform codebook quantization      -> repro.core.quant
+C4  fullerene-like NoC                     -> repro.core.noc
+C5  heterogeneous SoC / ENU coupling       -> repro.core.soc
+calibrated 55nm energy model               -> repro.core.energy
+"""
+from repro.core.neuron import LIFParams, LIFState, init_state, lif_step, run_timesteps
+from repro.core.quant import CodebookConfig, QuantizedTensor, dequantize, fake_quant, quantize
+from repro.core.zspe import CoreGeometry, CycleModel, zspe_matmul
+from repro.core.energy import (
+    CoreEnergyModel,
+    ChipEnergyModel,
+    RiscvPowerModel,
+    calibrate_chip,
+    calibrate_core,
+)
+from repro.core.noc import (
+    RouterParams,
+    RoutingTable,
+    TopologyMetrics,
+    analyze,
+    comparison_table,
+    fullerene_adjacency,
+    fullerene_metrics,
+    simulate_traffic,
+)
+from repro.core.soc import ChipSimulator, EnuProgram, Mapping, map_network
+
+__all__ = [n for n in dir() if not n.startswith("_")]

@@ -1,0 +1,198 @@
+"""Calibrated 55 nm energy / performance model (paper Figs. 3, 5, 6, Table I).
+
+The chip's published operating points over-determine a small parametric
+model; we solve for the parameters in closed form and then *derive* every
+reported number from workload statistics (spike sparsity measured from real
+simulated SNNs).  Nothing downstream hard-codes a paper value.
+
+Conventions
+-----------
+* `sparsity` s = fraction of ZERO input spikes in a timestep.
+* SOPs are counted *nominally* (all synaptic positions of valid-spike rows
+  and zero rows alike), matching the paper's Fig. 3 axis convention — with
+  zero-skip the datapath does work only for the (1-s) valid fraction, so
+  both GSOP/s and pJ/SOP improve monotonically with sparsity, exactly as in
+  Fig. 3 (best points at the sparse end; the >40%-sparsity guarantees
+  0.426 GSOP/s / 1.196 pJ/SOP).
+
+Core model (per nominal SOP, f in GHz):
+    cycles(s) = a + b * (1 - s)                 # ZSPE pipeline occupancy
+    GSOP/s     = f / cycles(s)
+    pJ/SOP(s)  = alpha * cycles(s) + gamma * (1 - s)   [+ delta if full-update]
+
+Calibration anchors (paper section II-A / III):
+    GSOP/s best            = 0.627   @ 200 MHz, s -> 1
+    GSOP/s at s = 0.4      = 0.426
+    pJ/SOP best            = 0.627   @ s -> 1
+    pJ/SOP at s = 0.4      = 1.196
+    baseline (no skip, full update) is 2.69x worse at the best point
+"""
+from __future__ import annotations
+
+import dataclasses
+
+# ---------------------------------------------------------------------------
+# Published anchor measurements (inputs to calibration, used nowhere else)
+# ---------------------------------------------------------------------------
+ANCHOR_GSOPS_BEST = 0.627        # GSOP/s @ 200 MHz
+ANCHOR_GSOPS_S40 = 0.426
+ANCHOR_PJ_BEST = 0.627           # pJ/SOP
+ANCHOR_PJ_S40 = 1.196
+ANCHOR_IMPROVEMENT = 2.69        # vs traditional scheme
+ANCHOR_FREQ_GHZ = 0.2
+
+# Chip-level anchors (Table I, 100 MHz / 1.08 V)
+ANCHOR_CHIP_PJ_NMNIST = 0.96
+ANCHOR_CHIP_PJ_DVS = 1.17
+ANCHOR_CHIP_PJ_CIFAR = 1.24
+NMNIST_ASSUMED_SPARSITY = 0.90   # typical NMNIST event sparsity (assumption,
+                                 # cross-checked against simulated nets)
+
+# RISC-V anchors (Fig. 6)
+ANCHOR_RISCV_AVG_MW = 0.434
+ANCHOR_RISCV_BASELINE_MW = ANCHOR_RISCV_AVG_MW / (1.0 - 0.43)  # -43% claim
+RISCV_SLEEP_FRACTION_OF_ACTIVE = 0.05  # clock-gated domain residual power
+
+# Physical configuration (Table I "This work")
+N_CORES = 20
+NEURONS_PER_CORE = 8192
+TOTAL_NEURONS = N_CORES * NEURONS_PER_CORE          # 163 840 ("160 K")
+SYNAPSES_PER_CORE = 64 * 2**20                      # 64 Mi
+TOTAL_SYNAPSES = N_CORES * SYNAPSES_PER_CORE        # 1280 Mi ("1280 M")
+DIE_AREA_MM2 = 5.42
+CORE_AREA_MM2 = 3.41                                # without pads
+CHIP_POWER_MIN_MW = 2.8
+CHIP_POWER_MAX_MW = 113.0
+
+
+@dataclasses.dataclass(frozen=True)
+class CoreEnergyModel:
+    """Closed-form calibrated core model."""
+
+    a: float          # cycles per nominal SOP, sparsity-independent part
+    b: float          # cycles per nominal SOP, density-proportional part
+    alpha: float      # pJ per cycle-unit (pipeline + static)
+    gamma: float      # pJ per *performed* SOP (SPE datapath)
+    delta_upd: float  # pJ per nominal SOP for full (non-partial) MP updates
+
+    # ----- throughput -----
+    def cycles_per_sop(self, sparsity: float, zero_skip: bool = True) -> float:
+        dens = (1.0 - sparsity) if zero_skip else 1.0
+        return self.a + self.b * dens
+
+    def gsops(self, sparsity: float, freq_ghz: float = ANCHOR_FREQ_GHZ,
+              zero_skip: bool = True) -> float:
+        return freq_ghz / self.cycles_per_sop(sparsity, zero_skip)
+
+    # ----- energy -----
+    def pj_per_sop(self, sparsity: float, zero_skip: bool = True,
+                   partial_update: bool = True) -> float:
+        dens = (1.0 - sparsity) if zero_skip else 1.0
+        e = self.alpha * self.cycles_per_sop(sparsity, zero_skip) + self.gamma * dens
+        if not partial_update:
+            e += self.delta_upd
+        return e
+
+    def pj_per_sop_baseline(self) -> float:
+        """Traditional scheme: no zero-skip, full MP update (s-independent)."""
+        return self.pj_per_sop(0.0, zero_skip=False, partial_update=False)
+
+    def improvement_vs_baseline(self, sparsity: float = 1.0) -> float:
+        return self.pj_per_sop_baseline() / self.pj_per_sop(sparsity)
+
+    def core_power_mw(self, sparsity: float, freq_ghz: float = ANCHOR_FREQ_GHZ,
+                      duty: float = 1.0) -> float:
+        """Dynamic power of one busy core = pJ/SOP * GSOP/s (mW)."""
+        return self.pj_per_sop(sparsity) * self.gsops(sparsity, freq_ghz) * duty
+
+
+def calibrate_core() -> CoreEnergyModel:
+    """Solve the five core anchors exactly."""
+    f = ANCHOR_FREQ_GHZ
+    a = f / ANCHOR_GSOPS_BEST                       # s -> 1 limit
+    b = (f / ANCHOR_GSOPS_S40 - a) / (1.0 - 0.4)
+    alpha = ANCHOR_PJ_BEST / a                      # s -> 1: pJ = alpha * a
+    gamma = (ANCHOR_PJ_S40 - alpha * (a + 0.6 * b)) / 0.6
+    base_no_upd = alpha * (a + b) + gamma
+    delta = ANCHOR_IMPROVEMENT * ANCHOR_PJ_BEST - base_no_upd
+    return CoreEnergyModel(a=a, b=b, alpha=alpha, gamma=gamma, delta_upd=delta)
+
+
+@dataclasses.dataclass(frozen=True)
+class ChipEnergyModel:
+    """System-level model: cores + NoC + DMA/controller + RISC-V overheads."""
+
+    core: CoreEnergyModel
+    sys_pj_per_sop: float        # NoC + DMA + CPU amortized per nominal SOP
+
+    def chip_pj_per_sop(self, sparsity: float) -> float:
+        return self.core.pj_per_sop(sparsity) + self.sys_pj_per_sop
+
+    def required_sparsity_for(self, target_pj: float) -> float:
+        """Invert the model: sparsity at which chip pJ/SOP == target."""
+        core_target = target_pj - self.sys_pj_per_sop
+        # core pJ(s) = alpha*a + (alpha*b + gamma) * (1 - s)
+        c = self.core
+        dens = (core_target - c.alpha * c.a) / (c.alpha * c.b + c.gamma)
+        return 1.0 - dens
+
+    def chip_power_mw(self, sparsity: float, active_cores: int,
+                      freq_ghz: float = 0.1, riscv: "RiscvPowerModel | None" = None,
+                      duty: float = 1.0) -> float:
+        p = self.chip_pj_per_sop(sparsity) * self.core.gsops(sparsity, freq_ghz)
+        total = p * active_cores * duty
+        if riscv is not None:
+            total += riscv.average_power_mw(duty_active=0.1)
+        return total
+
+
+def calibrate_chip(core: CoreEnergyModel | None = None) -> ChipEnergyModel:
+    """One chip-level free parameter, pinned by the NMNIST point."""
+    core = core or calibrate_core()
+    sys_pj = ANCHOR_CHIP_PJ_NMNIST - core.pj_per_sop(NMNIST_ASSUMED_SPARSITY)
+    return ChipEnergyModel(core=core, sys_pj_per_sop=sys_pj)
+
+
+@dataclasses.dataclass(frozen=True)
+class RiscvPowerModel:
+    """Duty-cycled CPU (Fig. 6): HFCLK domain sleeps between network phases."""
+
+    p_active_mw: float = ANCHOR_RISCV_BASELINE_MW
+    sleep_fraction: float = RISCV_SLEEP_FRACTION_OF_ACTIVE
+
+    def average_power_mw(self, duty_active: float) -> float:
+        p_sleep = self.p_active_mw * self.sleep_fraction
+        return self.p_active_mw * duty_active + p_sleep * (1.0 - duty_active)
+
+    def duty_for_average(self, target_mw: float) -> float:
+        p_sleep = self.p_active_mw * self.sleep_fraction
+        return (target_mw - p_sleep) / (self.p_active_mw - p_sleep)
+
+    def saving_vs_baseline(self, duty_active: float) -> float:
+        return 1.0 - self.average_power_mw(duty_active) / self.p_active_mw
+
+
+# ---------------------------------------------------------------------------
+# Table-I style derived metrics
+# ---------------------------------------------------------------------------
+
+def neuron_density_per_mm2() -> float:
+    return TOTAL_NEURONS / DIE_AREA_MM2
+
+
+def power_density_mw_per_mm2(power_mw: float = CHIP_POWER_MIN_MW) -> float:
+    return power_mw / DIE_AREA_MM2
+
+
+def workload_energy_pj(
+    chip: ChipEnergyModel,
+    nominal_sops: float,
+    sparsity: float,
+    noc_hops: float = 0.0,
+    noc_energy_pj: float = 0.0,
+) -> float:
+    """Total energy for a workload; NoC energy may be passed explicitly from
+    the routing simulator instead of the amortized `sys_pj_per_sop`."""
+    core_pj = chip.core.pj_per_sop(sparsity) * nominal_sops
+    sys_pj = chip.sys_pj_per_sop * nominal_sops if noc_energy_pj == 0.0 else noc_energy_pj
+    return core_pj + sys_pj

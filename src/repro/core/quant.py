@@ -1,0 +1,233 @@
+"""Non-uniform (codebook / LUT) weight quantization — paper C3.
+
+On the chip, *all synapses in a core share an N x W-bit weight table*
+(N, W in {4, 8, 16}); each synapse stores only a log2(N)-bit index.  We
+reproduce exactly that: a weight tensor is represented by
+
+    idx      : int8  same shape as the weight (values in [0, N))
+    codebook : (G, N) float — per-group ("per-core") table whose entries are
+               themselves W-bit fixed-point values (the chip stores them in
+               the register table at W-bit precision)
+    scale    : (G,) float — the fixed-point step (chip: implicit in training)
+
+Codebooks are fit by 1-D k-means (Lloyd), which is the standard way to
+obtain the chip's offline non-uniform levels.  A straight-through estimator
+makes the representation trainable (QAT).
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+VALID_N = (4, 8, 16)
+VALID_W = (4, 8, 16)
+
+
+@dataclasses.dataclass(frozen=True)
+class CodebookConfig:
+    n_levels: int = 16          # N: entries in the shared table
+    bit_width: int = 8          # W: precision of each stored entry
+    group_size: int = 0         # 0 => one codebook per tensor ("per-core");
+                                # else one per `group_size` output columns
+    kmeans_iters: int = 25
+
+    def __post_init__(self):
+        assert self.n_levels in VALID_N, f"N must be in {VALID_N}"
+        assert self.bit_width in VALID_W, f"W must be in {VALID_W}"
+
+    @property
+    def index_bits(self) -> int:
+        return max(1, (self.n_levels - 1).bit_length())
+
+    def bits_per_weight(self) -> float:
+        """Storage cost per synapse (indexes dominate; table is amortized)."""
+        return float(self.index_bits)
+
+
+class QuantizedTensor(NamedTuple):
+    idx: jax.Array        # int8, shape == original weight shape
+    codebook: jax.Array   # (G, N) float32, W-bit fixed-point values
+    scale: jax.Array      # (G,) float32 fixed-point step
+    group_axis_size: int  # static: columns per group (0 = whole tensor)
+
+    @property
+    def shape(self):
+        return self.idx.shape
+
+
+def _fixed_point(values: jax.Array, bit_width: int) -> tuple[jax.Array, jax.Array]:
+    """Snap codebook entries to signed W-bit fixed point (chip table format)."""
+    qmax = 2.0 ** (bit_width - 1) - 1.0
+    scale = jnp.maximum(jnp.max(jnp.abs(values), axis=-1), 1e-8) / qmax
+    q = jnp.clip(jnp.round(values / scale[..., None]), -qmax - 1, qmax)
+    return q * scale[..., None], scale
+
+
+def _kmeans_1d(x: jax.Array, n: int, iters: int) -> jax.Array:
+    """Lloyd's algorithm on a flat value vector -> (n,) sorted centroids."""
+    # Percentile init is robust for bell-shaped weight distributions.
+    qs = (jnp.arange(n, dtype=jnp.float32) + 0.5) / n
+    cents = jnp.quantile(x, qs)
+
+    def body(c, _):
+        d = jnp.abs(x[:, None] - c[None, :])            # (M, n)
+        assign = jnp.argmin(d, axis=1)
+        one_hot = jax.nn.one_hot(assign, n, dtype=x.dtype)
+        tot = one_hot.sum(axis=0)
+        new = jnp.where(tot > 0, (one_hot * x[:, None]).sum(axis=0) / jnp.maximum(tot, 1), c)
+        return new, None
+
+    cents, _ = jax.lax.scan(body, cents, None, length=iters)
+    return jnp.sort(cents)
+
+
+def _group_view(w: jax.Array, group_size: int) -> tuple[jax.Array, int]:
+    """Reshape (..., cols) -> (G, elems_per_group)."""
+    flat = w.reshape(-1, w.shape[-1])
+    if group_size <= 0 or group_size >= w.shape[-1]:
+        return w.reshape(1, -1), 0
+    assert w.shape[-1] % group_size == 0, "group_size must divide last dim"
+    g = w.shape[-1] // group_size
+    return (
+        flat.reshape(flat.shape[0], g, group_size)
+        .transpose(1, 0, 2)
+        .reshape(g, -1),
+        group_size,
+    )
+
+
+@partial(jax.jit, static_argnames=("cfg",))
+def _quantize_arrays(w: jax.Array, cfg: CodebookConfig):
+    grouped, gsize = _group_view(w.astype(jnp.float32), cfg.group_size)
+    cents = jax.vmap(lambda v: _kmeans_1d(v, cfg.n_levels, cfg.kmeans_iters))(grouped)
+    cents, scale = _fixed_point(cents, cfg.bit_width)
+
+    def assign(vals, c):
+        return jnp.argmin(jnp.abs(vals[:, None] - c[None, :]), axis=1).astype(jnp.int8)
+
+    idx_g = jax.vmap(assign)(grouped, cents)            # (G, elems)
+    if gsize == 0:
+        idx = idx_g.reshape(w.shape)
+    else:
+        flat = w.reshape(-1, w.shape[-1])
+        g = w.shape[-1] // gsize
+        idx = (
+            idx_g.reshape(g, flat.shape[0], gsize)
+            .transpose(1, 0, 2)
+            .reshape(w.shape)
+        )
+    return idx, cents, scale
+
+
+def quantize(w: jax.Array, cfg: CodebookConfig) -> QuantizedTensor:
+    """Fit codebook(s) and assign every weight its nearest index.
+
+    `group_axis_size` stays a static python int (NOT a traced pytree leaf)
+    so `dequantize` can branch on it under jit/QAT tracing.
+    """
+    idx, cents, scale = _quantize_arrays(w, cfg)
+    gsize = 0 if (cfg.group_size <= 0 or cfg.group_size >= w.shape[-1]) \
+        else cfg.group_size
+    return QuantizedTensor(idx=idx, codebook=cents, scale=scale,
+                           group_axis_size=gsize)
+
+
+def dequantize(q: QuantizedTensor) -> jax.Array:
+    """Reference dequantization: w = codebook[idx]."""
+    if q.group_axis_size == 0:
+        return q.codebook[0][q.idx]
+    gsize = q.group_axis_size
+    cols = q.idx.shape[-1]
+    g = cols // gsize
+    flat = q.idx.reshape(-1, g, gsize)                  # (rows, G, gsize)
+    out = jax.vmap(lambda cb, ix: cb[ix], in_axes=(0, 1), out_axes=1)(q.codebook, flat)
+    return out.reshape(q.idx.shape)
+
+
+def _make_fake_quant(cfg_n: int, cfg_w: int):
+    cfg = CodebookConfig(n_levels=cfg_n, bit_width=cfg_w)
+
+    @jax.custom_vjp
+    def fq(w):
+        return dequantize(quantize(w, cfg))
+
+    def fwd(w):
+        return fq(w), None
+
+    def bwd(_, g):
+        return (g,)            # straight-through estimator
+
+    fq.defvjp(fwd, bwd)
+    return fq
+
+
+_FQ_CACHE: dict = {}
+
+
+def fake_quant(w: jax.Array, cfg_n: int, cfg_w: int) -> jax.Array:
+    """QAT forward: quantize->dequantize with a whole-tensor codebook;
+    gradient passes straight through (STE).  N/W are captured statically
+    (closure, cached) so the custom_vjp sees a single array argument."""
+    key = (cfg_n, cfg_w)
+    if key not in _FQ_CACHE:
+        _FQ_CACHE[key] = _make_fake_quant(cfg_n, cfg_w)
+    return _FQ_CACHE[key](w)
+
+
+def quantization_error(w: jax.Array, cfg: CodebookConfig) -> jax.Array:
+    """RMS relative error — used by tests and the PTQ calibration report."""
+    wq = dequantize(quantize(w, cfg))
+    return jnp.sqrt(jnp.mean((w - wq) ** 2)) / jnp.maximum(jnp.sqrt(jnp.mean(w**2)), 1e-12)
+
+
+def memory_bytes(shape: tuple[int, ...], cfg: CodebookConfig, n_groups: int = 1) -> int:
+    """Bytes to store a quantized tensor (indexes + tables), chip accounting."""
+    import math
+
+    n_elems = math.prod(shape)
+    idx_bits = n_elems * cfg.index_bits
+    table_bits = n_groups * cfg.n_levels * cfg.bit_width
+    return (idx_bits + table_bits + 7) // 8
+
+
+# ---------------------------------------------------------------------------
+# 4-bit index packing — the chip's real storage format for N=16 tables
+# (log2(16) = 4 bits/synapse; two indexes per byte)
+# ---------------------------------------------------------------------------
+
+def pack_indexes_4bit(idx: jax.Array) -> jax.Array:
+    """int8 indexes in [0,16) -> packed uint8, two per byte (last dim
+    halved; odd last dims are zero-padded)."""
+    assert idx.dtype == jnp.int8
+    flat = idx.reshape(*idx.shape[:-1], -1)
+    n = flat.shape[-1]
+    if n % 2:
+        flat = jnp.pad(flat, [(0, 0)] * (flat.ndim - 1) + [(0, 1)])
+    lo = flat[..., 0::2].astype(jnp.uint8)
+    hi = flat[..., 1::2].astype(jnp.uint8)
+    return (lo | (hi << 4)).astype(jnp.uint8)
+
+
+def unpack_indexes_4bit(packed: jax.Array, last_dim: int) -> jax.Array:
+    """Inverse of pack_indexes_4bit; `last_dim` restores odd sizes."""
+    lo = (packed & 0xF).astype(jnp.int8)
+    hi = ((packed >> 4) & 0xF).astype(jnp.int8)
+    inter = jnp.stack([lo, hi], axis=-1).reshape(*packed.shape[:-1], -1)
+    return inter[..., :last_dim]
+
+
+def packed_memory_bytes(shape: tuple[int, ...], cfg: CodebookConfig,
+                        n_groups: int = 1) -> int:
+    """Bytes with 4-bit packing (N<=16): half the int8-index footprint."""
+    import math
+
+    n_elems = math.prod(shape)
+    if cfg.n_levels <= 16:
+        idx_bytes = (n_elems + 1) // 2
+    else:
+        idx_bytes = n_elems
+    return idx_bytes + (n_groups * cfg.n_levels * cfg.bit_width + 7) // 8

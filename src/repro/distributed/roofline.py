@@ -1,0 +1,207 @@
+"""Roofline-term extraction from compiled dry-run artifacts.
+
+Terms (per-device; the SPMD module IS the per-device program):
+    compute    = HLO_FLOPs / peak_FLOPs            [s]
+    memory     = HLO_bytes / HBM_bandwidth          [s]
+    collective = collective_bytes / ICI_bandwidth   [s]
+
+cost_analysis() provides flops + bytes; collective bytes are parsed from
+the post-SPMD optimized HLO (compiled.as_text()) by summing the output
+shapes of all-gather / all-reduce / reduce-scatter / all-to-all /
+collective-permute ops.  Ops inside loop bodies (scan over layers) are
+multiplied by the trip count of the enclosing while-loop when it can be
+inferred from the HLO.
+"""
+from __future__ import annotations
+
+import dataclasses
+import re
+
+# TPU v5e-class hardware constants (per chip)
+PEAK_FLOPS_BF16 = 197e12         # FLOP/s
+HBM_BW = 819e9                   # B/s
+ICI_BW = 50e9                    # B/s per link (we count one link)
+
+_DTYPE_BYTES = {
+    "pred": 1, "s4": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2,
+    "s32": 4, "u32": 4, "s64": 8, "u64": 8,
+    "f8e4m3fn": 1, "f8e5m2": 1, "bf16": 2, "f16": 2, "f32": 4, "f64": 8,
+    "c64": 8, "c128": 16,
+}
+
+_COLLECTIVES = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+                "collective-permute")
+
+_SHAPE_RE = re.compile(r"([a-z0-9]+)\[([0-9,]*)\]")
+_OP_RE = re.compile(
+    r"^\s*(?:ROOT\s+)?%?[\w.\-]+\s*=\s*(\(?[^)=]*\)?)\s*"
+    r"(" + "|".join(_COLLECTIVES) + r")[\w\-]*\(", re.M)
+
+
+def _shape_bytes(type_str: str) -> int:
+    total = 0
+    for dtype, dims in _SHAPE_RE.findall(type_str):
+        if dtype not in _DTYPE_BYTES:
+            continue
+        n = 1
+        if dims:
+            for d in dims.split(","):
+                if d:
+                    n *= int(d)
+        total += n * _DTYPE_BYTES[dtype]
+    return total
+
+
+def collective_bytes(hlo_text: str) -> dict:
+    """Sum output bytes per collective kind from optimized HLO text.
+
+    Loop-body collectives (scan over layers) appear once in the text but
+    execute `trip_count` times; we scale by the trip count of the
+    enclosing while loop, detected per HLO computation region.
+    """
+    # Map computation name -> trip count (best effort: constant compare in
+    # while condition bodies is hard to recover; instead use the iteration
+    # bound that XLA prints as known trip count when available).
+    trip_counts = _while_trip_counts(hlo_text)
+
+    per_kind: dict[str, float] = {k: 0.0 for k in _COLLECTIVES}
+    count: dict[str, int] = {k: 0 for k in _COLLECTIVES}
+    current_comp = ""
+    for line in hlo_text.splitlines():
+        m = re.match(r"^(%?[\w.\-]+)\s*(?:\([^)]*\))?\s*->", line.strip())
+        if line and not line.startswith(" ") and "{" in line:
+            cm = re.match(r"^\s*(?:ENTRY\s+)?%?([\w.\-]+)", line)
+            if cm:
+                current_comp = cm.group(1)
+        om = _OP_RE.match(line)
+        if om:
+            ty, kind = om.group(1), om.group(2)
+            mult = trip_counts.get(current_comp, 1)
+            per_kind[kind] += _shape_bytes(ty) * mult
+            count[kind] += 1
+    total = sum(per_kind.values())
+    return {"total": total, "per_kind": per_kind, "op_counts": count}
+
+
+def _while_trip_counts(hlo_text: str) -> dict[str, int]:
+    """Best-effort: computations used as while bodies with constant bounds.
+
+    XLA HLO prints known trip counts as metadata rarely; instead detect the
+    canonical counted-loop pattern: the body computation's name, and the
+    loop bound from `compare(..., s32[] constant(N)), direction=LT`.
+    Fallback: multiplier 1 (under-counts, noted in EXPERIMENTS.md).
+    """
+    counts: dict[str, int] = {}
+    # pattern: while(...), condition=%cond_name, body=%body_name
+    for m in re.finditer(r"while\(.*?\)[^\n]*condition=%?([\w.\-]+)[^\n]*body=%?([\w.\-]+)",
+                         hlo_text):
+        cond, body = m.group(1), m.group(2)
+        # find the constant bound inside the condition computation
+        cm = re.search(
+            re.escape(cond) + r"[\s\S]{0,2000}?constant\((\d+)\)", hlo_text)
+        if cm:
+            counts[body] = int(cm.group(1))
+    return counts
+
+
+@dataclasses.dataclass
+class RooflineReport:
+    name: str
+    flops: float                 # per-device HLO flops
+    bytes_accessed: float        # per-device HLO bytes
+    coll_bytes: float            # per-device collective bytes
+    model_flops: float           # 6*N*D (or 2*N*D decode) global
+    chips: int
+    per_kind: dict
+    op_counts: dict
+
+    @property
+    def t_compute(self) -> float:
+        return self.flops / PEAK_FLOPS_BF16
+
+    @property
+    def t_memory(self) -> float:
+        return self.bytes_accessed / HBM_BW
+
+    @property
+    def t_collective(self) -> float:
+        return self.coll_bytes / ICI_BW
+
+    @property
+    def bottleneck(self) -> str:
+        terms = {"compute": self.t_compute, "memory": self.t_memory,
+                 "collective": self.t_collective}
+        return max(terms, key=terms.get)
+
+    @property
+    def t_bound(self) -> float:
+        return max(self.t_compute, self.t_memory, self.t_collective)
+
+    @property
+    def useful_flops_ratio(self) -> float:
+        """MODEL_FLOPS / (HLO flops x chips) — remat/redundancy waste."""
+        total = self.flops * self.chips
+        return self.model_flops / total if total else 0.0
+
+    @property
+    def roofline_fraction(self) -> float:
+        """Fraction of the compute roofline achieved if the step ran at the
+        bound of its slowest term: (model_flops/chips/peak) / t_bound."""
+        ideal = self.model_flops / self.chips / PEAK_FLOPS_BF16
+        return ideal / self.t_bound if self.t_bound else 0.0
+
+    def row(self) -> dict:
+        return {
+            "name": self.name,
+            "t_compute_s": self.t_compute,
+            "t_memory_s": self.t_memory,
+            "t_collective_s": self.t_collective,
+            "bottleneck": self.bottleneck,
+            "hlo_flops": self.flops,
+            "hlo_bytes": self.bytes_accessed,
+            "coll_bytes": self.coll_bytes,
+            "model_flops": self.model_flops,
+            "useful_ratio": self.useful_flops_ratio,
+            "roofline_fraction": self.roofline_fraction,
+            "collective_ops": self.op_counts,
+        }
+
+
+def analyze_compiled(name: str, lowered, compiled, model_flops: float,
+                     chips: int) -> RooflineReport:
+    """All three terms from the trip-count-aware static HLO analysis.
+
+    compiled.cost_analysis() counts while bodies once (verified: a
+    10-iteration scan reports 1 body's flops), so scan-over-layers
+    programs under-report by ~n_layers; hlo_analysis recomputes flops,
+    HBM bytes and collective bytes with one consistent trip-scaling rule.
+    """
+    from repro.distributed.hlo_analysis import analyze as hlo_analyze
+
+    text = compiled.as_text()
+    costs = hlo_analyze(text)
+    return RooflineReport(
+        name=name, flops=costs.flops, bytes_accessed=costs.hbm_bytes,
+        coll_bytes=costs.coll_bytes, model_flops=model_flops, chips=chips,
+        per_kind=costs.per_kind, op_counts=costs.op_counts)
+
+
+def model_flops_for(cfg, shape) -> float:
+    """6*N_active*D for train; 2*N_active per generated token for decode;
+    2*N_active*D for prefill."""
+    n = cfg.active_param_count()
+    if shape.kind == "train":
+        tokens = shape.global_batch * shape.seq_len
+        return 6.0 * n * tokens
+    if shape.kind == "prefill":
+        tokens = shape.global_batch * shape.seq_len
+        return 2.0 * n * tokens
+    # decode: one token per sequence + attention reads over the cache
+    tokens = shape.global_batch
+    flops = 2.0 * n * tokens
+    if cfg.family in ("dense", "moe", "vlm", "audio"):
+        # KV dot products: 2 * 2 * kv*hd * S per layer per sequence
+        eff_s = min(shape.seq_len, cfg.sliding_window or shape.seq_len)
+        flops += (4.0 * cfg.n_layers * cfg.n_kv_heads * cfg.hd
+                  * eff_s * tokens)
+    return flops

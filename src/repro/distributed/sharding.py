@@ -1,0 +1,203 @@
+"""Logical-axis -> mesh-axis sharding rules with divisibility fallback.
+
+The mesh hierarchy mirrors the paper's NoC hierarchy (DESIGN.md §2):
+    "model" axis  <-> the 20-core level-1 fullerene domain (TP/EP)
+    "data"  axis  <-> level-1 router-parallel traffic (DP/FSDP)
+    "pod"   axis  <-> the level-2 router scale-up path (multi-pod DP)
+
+Rules map a logical axis name to an ordered list of candidate mesh axes;
+the first candidate whose size divides the tensor dimension (and is not
+already used by another dim of the same tensor) wins, else the dim is
+replicated.  This keeps every explicit sharding constraint legal for every
+architecture (e.g. 8 kv heads on a 16-way model axis fall back cleanly).
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Any
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+
+# Candidates per logical axis, in preference order.  Tuples are compound
+# (multi-axis) shardings.
+DEFAULT_RULES: dict[str, list] = {
+    "layers": [],
+    "vocab": ["model"],
+    "heads": ["model"],
+    "kv_heads": ["model"],
+    "mlp": ["model"],
+    "experts": ["model"],
+    "embed": [("pod", "data"), "data"],       # FSDP / ZeRO-3 axis
+    "batch": [("pod", "data"), "data"],
+    "seq": ["model"],                          # sequence parallelism
+    "cache_batch": [("pod", "data"), "data"],
+    "cache_heads": ["model"],
+    "cache_seq": ["model"],                    # flash-decoding fallback
+}
+
+
+@dataclasses.dataclass(frozen=True)
+class ShardingRules:
+    rules: Any = None
+
+    def get(self, logical: str | None) -> list:
+        if logical is None:
+            return []
+        table = self.rules or DEFAULT_RULES
+        return table.get(logical, [])
+
+
+# Pure ZeRO-3: no TP/SP — params and batch sharded over ALL axes jointly.
+# Wins when per-layer params << per-layer activations x SP-gather count
+# (mistral-large-123b train_4k, §Perf H2).
+FSDP_RULES = dict(
+    DEFAULT_RULES,
+    vocab=[], heads=[], kv_heads=[], mlp=[], experts=[], seq=[],
+    embed=[("pod", "data", "model"), ("data", "model"), "data"],
+    batch=[("pod", "data", "model"), ("data", "model"), "data"],
+)
+
+
+def _axis_size(mesh: Mesh, axis) -> int:
+    if isinstance(axis, tuple):
+        return math.prod(mesh.shape[a] for a in axis)
+    return mesh.shape[axis]
+
+
+def _axis_names(axis) -> tuple:
+    return axis if isinstance(axis, tuple) else (axis,)
+
+
+def spec_for(shape: tuple[int, ...], logical: tuple, mesh: Mesh,
+             rules: ShardingRules = ShardingRules()) -> P:
+    """Build a PartitionSpec for `shape` from logical axis names.
+
+    Each dim takes the first rule candidate that (a) exists in the mesh,
+    (b) divides the dim size, (c) doesn't reuse a mesh axis already
+    assigned to another dim.  Otherwise the dim is replicated.
+    """
+    assert len(shape) == len(logical), (shape, logical)
+    used: set = set()
+    out = []
+    for dim, name in zip(shape, logical):
+        placed = None
+        for cand in rules.get(name):
+            names = _axis_names(cand)
+            if any(n not in mesh.shape for n in names):
+                continue
+            if any(n in used for n in names):
+                continue
+            if dim % _axis_size(mesh, cand) != 0:
+                continue
+            placed = cand
+            used.update(names)
+            break
+        out.append(placed)
+    return P(*out)
+
+
+def tree_specs(specs_tree: Any, shapes_tree: Any, mesh: Mesh,
+               rules: ShardingRules = ShardingRules()) -> Any:
+    """Map parallel (logical-spec, shape) trees -> PartitionSpec tree."""
+
+    flat_specs, tdef = jax.tree.flatten(
+        specs_tree, is_leaf=lambda x: isinstance(x, tuple))
+    flat_shapes = tdef.flatten_up_to(shapes_tree)
+    out = []
+    for logical, shaped in zip(flat_specs, flat_shapes):
+        shape = shaped.shape if hasattr(shaped, "shape") else shaped
+        out.append(spec_for(tuple(shape), tuple(logical), mesh, rules))
+    return tdef.unflatten(out)
+
+
+def named(mesh: Mesh, spec: P) -> NamedSharding:
+    return NamedSharding(mesh, spec)
+
+
+def tree_named(mesh: Mesh, spec_tree: Any) -> Any:
+    return jax.tree.map(
+        lambda s: NamedSharding(mesh, s), spec_tree,
+        is_leaf=lambda x: isinstance(x, P))
+
+
+# ---------------------------------------------------------------------------
+# Activation constraints
+# ---------------------------------------------------------------------------
+
+def make_residual_constraint(mesh: Mesh, seq_parallel: bool = True,
+                             rules: ShardingRules = ShardingRules()):
+    """Sharding constraint applied to the (B, S, d) residual stream between
+    blocks: batch over DP axes, sequence over "model" (sequence parallel).
+    Returns a callable usable as transformer.forward_*(constraint=...)."""
+
+    def constrain(x):
+        if x.ndim != 3:
+            return x
+        b, s, _ = x.shape
+        pb = spec_for((b,), ("batch",), mesh, rules)[0]
+        ps = None
+        if seq_parallel and s > 1:
+            used = () if pb is None else (pb if isinstance(pb, tuple) else (pb,))
+            cands = [c for c in rules.get("seq")
+                     if all(a not in used for a in _axis_names(c))]
+            for c in cands:
+                if all(a in mesh.shape for a in _axis_names(c)) \
+                        and s % _axis_size(mesh, c) == 0:
+                    ps = c
+                    break
+        return jax.lax.with_sharding_constraint(
+            x, NamedSharding(mesh, P(pb, ps, None)))
+
+    return constrain
+
+
+def batch_specs(batch_tree: Any, mesh: Mesh,
+                rules: ShardingRules = ShardingRules()) -> Any:
+    """Input batch sharding: leading dim = batch, others replicated."""
+
+    def one(x):
+        shape = x.shape
+        if len(shape) == 0:
+            return P()
+        pb = spec_for((shape[0],), ("batch",), mesh, rules)[0]
+        return P(pb, *([None] * (len(shape) - 1)))
+
+    return jax.tree.map(one, batch_tree)
+
+
+def decode_state_specs(state_shapes: Any, mesh: Mesh) -> Any:
+    """PartitionSpecs for a transformer.DecodeState shape-tree.
+
+    KV caches (L, B, kv, S, hd): batch -> DP, kv-heads -> model when
+    divisible else seq -> model (flash-decoding style).  SSM caches
+    (L, B, H, N, P): batch -> DP, heads -> model when divisible.
+    """
+
+    def one(x):
+        shape = tuple(x.shape)
+        nd = len(shape)
+        if nd == 0:
+            return P()
+        if nd == 5:   # (L, B, kv, S, hd) KV cache
+            pb = spec_for((shape[1],), ("cache_batch",), mesh)[0]
+            ph = spec_for((shape[2],), ("cache_heads",), mesh)[0]
+            ps = None
+            if ph is None:
+                ps = spec_for((shape[3],), ("cache_seq",), mesh)[0]
+            return P(None, pb, ph, ps, None)
+        if nd == 4:   # (L, B, H, NP) ssm-ish or (B, kv, S, hd) unstacked
+            pb = spec_for((shape[1],), ("cache_batch",), mesh)[0]
+            ph = spec_for((shape[2],), ("cache_heads",), mesh)[0]
+            return P(None, pb, ph, None)
+        if nd == 3:   # (B, F, d) encoder output / (L, B, CH) conv cache
+            pb = spec_for((shape[0],), ("cache_batch",), mesh)[0]
+            return P(pb, None, None)
+        if nd == 2:
+            pb = spec_for((shape[0],), ("cache_batch",), mesh)[0]
+            return P(pb, None)
+        return P(*([None] * nd))
+
+    return jax.tree.map(one, state_shapes)

@@ -1,0 +1,97 @@
+"""Pallas TPU kernel: matmul with on-the-fly codebook dequantization (C3).
+
+The chip stores synapse weights as log2(N)-bit indexes into a per-core
+N x W-bit shared table and dequantizes at the SPE input.  The TPU analogue:
+weight *indexes* live in HBM as int8 (4-8x fewer bytes than bf16 weights),
+are DMA'd tile-by-tile into VMEM, expanded to real values against the
+(tiny, VMEM-resident) codebook, and fed to the MXU.
+
+Dequant strategy: with N <= 16 levels we expand via N vectorized
+compare+select passes (`w = sum_l cb[l] * (idx == l)`) — pure VPU work, no
+dynamic gather, which lowers cleanly on TPU and vectorizes on the 8x128
+VREG lanes.  The MXU then consumes the dequantized f32/bf16 tile.
+
+Grid: (M/bm, N/bn, K/bk), K innermost for accumulation in a VMEM scratch
+accumulator (f32).  Index tiles are (bk, bn) int8 -> dequantized once per
+(k, n) tile and reused across the whole M row of the grid via pallas'
+automatic revisiting-window reuse.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+DEFAULT_BLOCK = (128, 128, 128)  # (bm, bk, bn) — MXU-aligned
+
+
+def _dequant_tile(idx_tile: jax.Array, codebook: jax.Array) -> jax.Array:
+    """(bk, bn) int8 -> f32 via N compare+select passes (N <= 16)."""
+    n_levels = codebook.shape[-1]
+    out = jnp.zeros(idx_tile.shape, jnp.float32)
+    for l in range(n_levels):
+        out = out + jnp.where(idx_tile == l, codebook[l], 0.0)
+    return out
+
+
+def _kernel(x_ref, idx_ref, cb_ref, o_ref, acc_ref, *, n_levels: int, bk_steps: int):
+    k = pl.program_id(2)
+
+    @pl.when(k == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    x = x_ref[...].astype(jnp.float32)          # (bm, bk)
+    idx = idx_ref[...]                          # (bk, bn) int8
+    cb = cb_ref[...]                            # (n_levels,) f32 in VMEM
+    w = _dequant_tile(idx, cb)                  # (bk, bn) f32
+    acc_ref[...] += jnp.dot(x, w, preferred_element_type=jnp.float32)
+
+    @pl.when(k == bk_steps - 1)
+    def _done():
+        o_ref[...] = acc_ref[...].astype(o_ref.dtype)
+
+
+@functools.partial(
+    jax.jit, static_argnames=("block", "interpret", "out_dtype")
+)
+def codebook_matmul(
+    x: jax.Array,
+    idx: jax.Array,
+    codebook: jax.Array,
+    *,
+    block: tuple[int, int, int] = DEFAULT_BLOCK,
+    interpret: bool = True,
+    out_dtype=jnp.float32,
+) -> jax.Array:
+    """x (M, K) @ codebook[idx (K, N)] -> (M, N).
+
+    Shapes must be divisible by `block`; use ops.codebook_matmul for the
+    padded general-purpose entry point.  `codebook` is (n_levels,).
+    """
+    m, k = x.shape
+    k2, n = idx.shape
+    assert k == k2, (x.shape, idx.shape)
+    bm, bk, bn = block
+    assert m % bm == 0 and k % bk == 0 and n % bn == 0, (x.shape, idx.shape, block)
+    n_levels = codebook.shape[0]
+    bk_steps = k // bk
+
+    grid = (m // bm, n // bn, bk_steps)
+    return pl.pallas_call(
+        functools.partial(_kernel, n_levels=n_levels, bk_steps=bk_steps),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bm, bk), lambda i, j, kk: (i, kk)),
+            pl.BlockSpec((bk, bn), lambda i, j, kk: (kk, j)),
+            pl.BlockSpec((n_levels,), lambda i, j, kk: (0,)),
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j, kk: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((m, n), out_dtype),
+        scratch_shapes=[pltpu.VMEM((bm, bn), jnp.float32)],
+        interpret=interpret,
+    )(x, idx, codebook)

@@ -1,0 +1,122 @@
+"""Pallas TPU kernel: flash attention (tiled online-softmax SDPA).
+
+Why it exists here: the dry-run HLO shows that XLA cannot fuse the
+QK^T -> softmax -> PV chain, so every (B, H, S, S) score tile round-trips
+HBM — for mistral-large train_4k that is the dominant memory-roofline term
+(~25 TB/device/step, EXPERIMENTS.md §Perf H2).  This kernel keeps score
+tiles in VMEM: HBM traffic collapses to the q/k/v/out I/O.
+
+Algorithm (standard flash attention, adapted to TPU tile shapes):
+  grid = (batch*kv_heads*q_groups, S/bq); the kernel loops over kv blocks
+  with `jax.lax.fori_loop`, carrying (acc, row_max, row_sum) in VMEM
+  scratch.  Causal masking skips fully-masked kv blocks.  MXU-aligned
+  block sizes (bq, bk multiples of 128; hd is the lane dim).
+
+Validated against ref.flash_attention_ref in interpret mode (tests).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _kernel(q_ref, k_ref, v_ref, o_ref, acc_ref, m_ref, l_ref, *,
+            bq: int, bk: int, kv_steps: int, causal: bool, scale: float):
+    qi = pl.program_id(1)
+
+    q = q_ref[0]                                     # (bq, hd)
+    acc_ref[...] = jnp.zeros_like(acc_ref)
+    m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+    l_ref[...] = jnp.zeros_like(l_ref)
+
+    def body(step, _):
+        k = k_ref[0, pl.dslice(step * bk, bk), :]
+        v = v_ref[0, pl.dslice(step * bk, bk), :]
+        s = jax.lax.dot_general(
+            q, k, (((1,), (1,)), ((), ())),
+            preferred_element_type=jnp.float32) * scale   # (bq, bk)
+        if causal:
+            rows = qi * bq + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 0)
+            cols = step * bk + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 1)
+            s = jnp.where(cols <= rows, s, NEG_INF)
+        m_prev = m_ref[...]
+        m_new = jnp.maximum(m_prev, jnp.max(s, axis=1, keepdims=True))
+        p = jnp.exp(s - m_new)                            # (bq, bk)
+        alpha = jnp.exp(m_prev - m_new)
+        l_ref[...] = l_ref[...] * alpha + jnp.sum(p, axis=1, keepdims=True)
+        acc_ref[...] = acc_ref[...] * alpha + jax.lax.dot_general(
+            p.astype(v.dtype), v, (((1,), (0,)), ((), ())),
+            preferred_element_type=jnp.float32)
+        m_ref[...] = m_new
+        return ()
+
+    if causal:
+        # kv blocks beyond the diagonal are fully masked; skip them
+        last = jnp.minimum(kv_steps, (qi + 1) * bq // bk + 1)
+    else:
+        last = kv_steps
+    jax.lax.fori_loop(0, last, body, ())
+    o_ref[0] = (acc_ref[...] / jnp.maximum(l_ref[...], 1e-30)).astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("causal", "bq", "bk", "interpret"))
+def flash_attention(
+    q: jax.Array,          # (B, H, S, hd)
+    k: jax.Array,          # (B, H, T, hd) — kv heads pre-broadcast to H
+    v: jax.Array,
+    *,
+    causal: bool = True,
+    bq: int = 128,
+    bk: int = 128,
+    interpret: bool = True,
+) -> jax.Array:
+    b, h, s, hd = q.shape
+    t = k.shape[2]
+    assert s % bq == 0 and t % bk == 0, (s, t, bq, bk)
+    scale = hd ** -0.5
+    kv_steps = t // bk
+
+    q3 = q.reshape(b * h, s, hd)
+    k3 = k.reshape(b * h, t, hd)
+    v3 = v.reshape(b * h, t, hd)
+
+    grid = (b * h, s // bq)
+    out = pl.pallas_call(
+        functools.partial(_kernel, bq=bq, bk=bk, kv_steps=kv_steps,
+                          causal=causal, scale=scale),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, bq, hd), lambda g, i: (g, i, 0)),
+            pl.BlockSpec((1, t, hd), lambda g, i: (g, 0, 0)),
+            pl.BlockSpec((1, t, hd), lambda g, i: (g, 0, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, bq, hd), lambda g, i: (g, i, 0)),
+        out_shape=jax.ShapeDtypeStruct((b * h, s, hd), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((bq, hd), jnp.float32),
+            pltpu.VMEM((bq, 1), jnp.float32),
+            pltpu.VMEM((bq, 1), jnp.float32),
+        ],
+        interpret=interpret,
+    )(q3, k3, v3)
+    return out.reshape(b, h, s, hd)
+
+
+def hbm_io_bytes(b: int, h: int, s: int, t: int, hd: int,
+                 dtype_bytes: int = 2, with_backward: bool = True) -> int:
+    """Analytic HBM traffic of the kernel (the roofline-adjustment term):
+    fwd reads q,k,v + writes o; bwd reads q,k,v,o,do + writes dq,dk,dv
+    (scores recomputed in VMEM).  Used by §Perf H2."""
+    q = b * h * s * hd * dtype_bytes
+    kv = 2 * b * h * t * hd * dtype_bytes
+    fwd = (q + kv) + q                    # read q,k,v ; write o
+    if not with_backward:
+        return fwd
+    bwd = (2 * q + kv) + q + (q + kv)     # read q,o,do,k,v ; write dq,dk,dv
+    return fwd + bwd

@@ -1,0 +1,152 @@
+"""Public jit'd entry points for the Pallas kernels.
+
+Handle padding to block multiples, interpret-mode selection (CPU container
+runs interpret=True; on a real TPU set REPRO_PALLAS_INTERPRET=0), and
+custom VJPs where the kernels appear in training graphs.
+"""
+from __future__ import annotations
+
+import os
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import codebook_matmul as _cbm
+from repro.kernels import lif_update as _lif
+from repro.kernels import zspe_spmm as _zspe
+from repro.kernels import ref as _ref
+
+
+def _interpret_default() -> bool:
+    env = os.environ.get("REPRO_PALLAS_INTERPRET")
+    if env is not None:
+        return env not in ("0", "false", "False")
+    return jax.default_backend() != "tpu"
+
+
+def _pad_to(x: jax.Array, mults: tuple[int, ...], value=0) -> jax.Array:
+    pads = []
+    for dim, m in zip(x.shape, mults):
+        rem = (-dim) % m
+        pads.append((0, rem))
+    if all(p == (0, 0) for p in pads):
+        return x
+    return jnp.pad(x, pads, constant_values=value)
+
+
+def _pick_block(m: int, k: int, n: int) -> tuple[int, int, int]:
+    """MXU-aligned blocks, shrunk for small problems (tests / smoke nets)."""
+    def pick(d, pref):
+        for c in (pref, 256, 128, 64, 32, 16, 8):
+            if c <= pref and d >= c:
+                return c
+        return 8
+    return (pick(m, 128), pick(k, 128), pick(n, 128))
+
+
+# ---------------------------------------------------------------------------
+# codebook matmul
+# ---------------------------------------------------------------------------
+
+@partial(jax.custom_vjp, nondiff_argnums=(3,))
+def codebook_matmul(x: jax.Array, idx: jax.Array, codebook: jax.Array,
+                    interpret: bool | None = None) -> jax.Array:
+    """x (..., K) @ codebook[idx (K, N)] with arbitrary shapes (padded)."""
+    return _codebook_matmul_fwd_impl(x, idx, codebook, interpret)
+
+
+def _codebook_matmul_fwd_impl(x, idx, codebook, interpret):
+    interp = _interpret_default() if interpret is None else interpret
+    lead = x.shape[:-1]
+    k = x.shape[-1]
+    n = idx.shape[-1]
+    x2 = x.reshape(-1, k)
+    m = x2.shape[0]
+    bm, bk, bn = _pick_block(m, k, n)
+    xp = _pad_to(x2, (bm, bk))
+    ip = _pad_to(idx, (bk, bn))
+    out = _cbm.codebook_matmul(xp, ip, codebook.astype(jnp.float32),
+                               block=(bm, bk, bn), interpret=interp)
+    return out[:m, :n].reshape(*lead, n)
+
+
+def _cbm_fwd(x, idx, codebook, interpret):
+    return _codebook_matmul_fwd_impl(x, idx, codebook, interpret), (x, idx, codebook)
+
+
+def _cbm_bwd(interpret, res, g):
+    x, idx, codebook = res
+    w = _dequant(idx, codebook)
+    gx = jnp.einsum("...n,kn->...k", g, w).astype(x.dtype)
+    # codebook grad: dL/dcb[l] = sum over positions with idx==l of (x^T g)
+    xtg = jnp.einsum("...k,...n->kn", x.astype(jnp.float32), g.astype(jnp.float32))
+    one_hot = jax.nn.one_hot(idx.astype(jnp.int32), codebook.shape[0],
+                             dtype=jnp.float32)
+    gcb = jnp.einsum("kn,knl->l", xtg, one_hot).astype(codebook.dtype)
+    return gx, None, gcb
+
+
+codebook_matmul.defvjp(_cbm_fwd, _cbm_bwd)
+
+
+def _dequant(idx: jax.Array, codebook: jax.Array) -> jax.Array:
+    return codebook[idx.astype(jnp.int32)]
+
+
+# ---------------------------------------------------------------------------
+# zero-skip spike matmul
+# ---------------------------------------------------------------------------
+
+def zspe_spmm(spikes: jax.Array, weights: jax.Array,
+              interpret: bool | None = None,
+              with_stats: bool = False):
+    """spikes (..., K) {0,1} x weights (K, N).
+
+    with_stats=True additionally returns the skipped-tile counters used to
+    drive the energy model with measured skip rates.
+    """
+    interp = _interpret_default() if interpret is None else interpret
+    lead = spikes.shape[:-1]
+    k = spikes.shape[-1]
+    n = weights.shape[-1]
+    s2 = spikes.reshape(-1, k)
+    m = s2.shape[0]
+    bm, bk, bn = _pick_block(m, k, n)
+    sp = _pad_to(s2, (bm, bk))
+    wp = _pad_to(weights, (bk, bn))
+    out, skipped = _zspe.zspe_spmm(sp, wp, block=(bm, bk, bn), interpret=interp)
+    out = out[:m, :n].reshape(*lead, n)
+    if with_stats:
+        return out, skipped
+    return out
+
+
+# ---------------------------------------------------------------------------
+# fused LIF update
+# ---------------------------------------------------------------------------
+
+def lif_update(v, elapsed, current, *, threshold=1.0, leak=0.9, reset=0.0,
+               interpret: bool | None = None):
+    """(..., N) fused partial-update LIF step via the Pallas kernel."""
+    interp = _interpret_default() if interpret is None else interpret
+    lead = v.shape[:-1]
+    n = v.shape[-1]
+    v2 = v.reshape(-1, n)
+    e2 = elapsed.reshape(-1, n)
+    c2 = current.reshape(-1, n)
+    b = v2.shape[0]
+    bb = 8 if b >= 8 else b
+    bn = 128 if n >= 128 else n
+    vp, ep, cp = (_pad_to(a, (bb, bn)) for a in (v2, e2, c2))
+    vo, eo, sp, upd = _lif.lif_update(
+        vp, ep, cp, threshold=threshold, leak=leak, reset=reset,
+        block=(bb, bn), interpret=interp)
+    crop = lambda a: a[:b, :n].reshape(*lead, n)
+    return crop(vo), crop(eo), crop(sp), crop(upd)
+
+
+# Re-export oracles for convenience
+codebook_matmul_ref = _ref.codebook_matmul_ref
+zspe_spmm_ref = _ref.zspe_spmm_ref
+lif_update_ref = _ref.lif_update_ref

@@ -1,0 +1,79 @@
+"""Pure-jnp oracles for every Pallas kernel in this package.
+
+These define the *semantics*; kernels must match them to float tolerance
+(tests/test_kernels.py sweeps shapes and dtypes in interpret mode).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def codebook_matmul_ref(
+    x: jax.Array, idx: jax.Array, codebook: jax.Array
+) -> jax.Array:
+    """x (M, K) @ dequant(idx (K, N), codebook).
+
+    codebook is (n_levels,) for a per-tensor table (the paper's per-core
+    shared table) or (G, n_levels) with G groups along N (one "core" per
+    group of columns).
+    """
+    if codebook.ndim == 1:
+        w = codebook[idx.astype(jnp.int32)]
+    else:
+        g = codebook.shape[0]
+        n = idx.shape[1]
+        assert n % g == 0
+        gs = n // g
+        blocks = idx.reshape(idx.shape[0], g, gs).astype(jnp.int32)
+        w = jax.vmap(lambda cb, ix: cb[ix], in_axes=(0, 1), out_axes=1)(
+            codebook, blocks
+        ).reshape(idx.shape[0], n)
+    return jnp.dot(x.astype(jnp.float32), w.astype(jnp.float32))
+
+
+def zspe_spmm_ref(spikes: jax.Array, weights: jax.Array) -> jax.Array:
+    """Binary spike matrix (M, K) x dense weights (K, N) -> f32 (M, N)."""
+    return jnp.dot(spikes.astype(jnp.float32), weights.astype(jnp.float32))
+
+
+def lif_update_ref(
+    v: jax.Array,
+    elapsed: jax.Array,
+    current: jax.Array,
+    *,
+    threshold: float,
+    leak: float,
+    reset: float,
+) -> tuple[jax.Array, jax.Array, jax.Array, jax.Array]:
+    """Fused partial-update LIF step (matches core.neuron.lif_step with
+    partial_update=True, hard reset).
+
+    Returns (v_new, elapsed_new, spikes, updated_mask).
+    """
+    has_input = current != 0.0
+    pending = elapsed + 1
+    decay = jnp.where(has_input, leak ** pending.astype(v.dtype), 1.0)
+    v_int = v * decay + current
+    v_eff = jnp.where(has_input, v_int, -jnp.inf)
+    spikes = (v_eff >= threshold).astype(v.dtype)
+    new_elapsed = jnp.where(has_input, 0, pending).astype(elapsed.dtype)
+    v_new = jnp.where(spikes > 0, reset, jnp.where(has_input, v_int, v))
+    return v_new, new_elapsed, spikes, has_input
+
+
+def flash_attention_ref(q, k, v, causal: bool = True) -> jax.Array:
+    """Oracle for kernels/flash_attention.py: plain SDPA, f32 softmax.
+
+    q/k/v: (B, H, S|T, hd) with kv heads pre-broadcast to H.
+    """
+    b, h, s, hd = q.shape
+    t = k.shape[2]
+    scores = jnp.einsum("bhsd,bhtd->bhst", q.astype(jnp.float32),
+                        k.astype(jnp.float32)) / (hd ** 0.5)
+    if causal:
+        mask = jnp.arange(t)[None, :] <= jnp.arange(s)[:, None]
+        scores = jnp.where(mask[None, None], scores, -1e30)
+    probs = jax.nn.softmax(scores, axis=-1)
+    out = jnp.einsum("bhst,bhtd->bhsd", probs, v.astype(jnp.float32))
+    return out.astype(q.dtype)

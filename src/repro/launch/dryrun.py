@@ -1,0 +1,140 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+# ^ must be the very first two lines: jax locks the device count on first
+# init, and the dry-run (and ONLY the dry-run) needs 512 placeholder devices.
+
+# Multi-pod dry-run launcher.
+#
+# Lowers + compiles every (architecture x input-shape) cell against the
+# production meshes — (16, 16) single-pod and (2, 16, 16) multi-pod — and
+# extracts memory analysis, cost analysis and roofline terms.  No device
+# allocation happens: all inputs are ShapeDtypeStructs.
+#
+# Usage:
+#   python -m repro.launch.dryrun --arch granite-3-8b --shape train_4k
+#   python -m repro.launch.dryrun --all --both-meshes --out results.json
+
+import argparse
+import json
+import time
+import traceback
+
+import jax
+
+from repro.configs import registry as R
+from repro.distributed import roofline as RL
+from repro.launch import mesh as MESH
+from repro.launch import steps as ST
+
+
+def run_cell(arch: str, shape_name: str, multi_pod: bool = False,
+             seq_parallel: bool = True, verbose: bool = True) -> dict:
+    cfg = R.get_arch(arch)
+    shape = R.get_shape(shape_name)
+    ok, why = R.cell_is_runnable(cfg, shape)
+    if not ok:
+        return {"arch": arch, "shape": shape_name, "status": "skipped",
+                "reason": why}
+
+    mesh = MESH.make_production_mesh(multi_pod=multi_pod)
+    chips = mesh.size
+    batch = R.input_specs(cfg, shape)
+    t0 = time.time()
+
+    with mesh:
+        if shape.kind == "train":
+            lowered = ST.lower_train(cfg, mesh, batch, seq_parallel=seq_parallel)
+        elif shape.kind == "prefill":
+            lowered = ST.lower_prefill(cfg, mesh, batch, cache_len=shape.seq_len)
+        else:  # decode
+            lowered = ST.lower_decode(cfg, mesh, batch=shape.global_batch,
+                                      cache_len=shape.seq_len)
+        t_lower = time.time() - t0
+        compiled = lowered.compile()
+        t_compile = time.time() - t0 - t_lower
+
+    mem = compiled.memory_analysis()
+    report = RL.analyze_compiled(
+        f"{arch}/{shape_name}", lowered, compiled,
+        model_flops=RL.model_flops_for(cfg, shape), chips=chips)
+
+    out = {
+        "arch": arch,
+        "shape": shape_name,
+        "mesh": "2x16x16" if multi_pod else "16x16",
+        "status": "ok",
+        "lower_s": round(t_lower, 1),
+        "compile_s": round(t_compile, 1),
+        "memory": {
+            "argument_bytes": getattr(mem, "argument_size_in_bytes", None),
+            "output_bytes": getattr(mem, "output_size_in_bytes", None),
+            "temp_bytes": getattr(mem, "temp_size_in_bytes", None),
+            "peak_bytes": (getattr(mem, "temp_size_in_bytes", 0) or 0)
+                          + (getattr(mem, "argument_size_in_bytes", 0) or 0),
+        },
+        "roofline": report.row(),
+    }
+    if verbose:
+        m = out["memory"]
+        r = out["roofline"]
+        print(f"[{out['mesh']}] {arch:24s} {shape_name:12s} "
+              f"args={_gb(m['argument_bytes'])} temp={_gb(m['temp_bytes'])} "
+              f"flops/dev={r['hlo_flops']:.3e} bytes/dev={r['hlo_bytes']:.3e} "
+              f"coll={r['coll_bytes']:.3e} bound={r['bottleneck']} "
+              f"(lower {out['lower_s']}s compile {out['compile_s']}s)",
+              flush=True)
+    return out
+
+
+def _gb(x):
+    return f"{x / 2**30:.2f}GiB" if x is not None else "?"
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None)
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--both-meshes", action="store_true")
+    ap.add_argument("--no-seq-parallel", action="store_true")
+    ap.add_argument("--out", default=None)
+    args = ap.parse_args()
+
+    cells = []
+    if args.all:
+        for a in R.ARCH_NAMES:
+            for s in ("train_4k", "prefill_32k", "decode_32k", "long_500k"):
+                cells.append((a, s))
+    else:
+        assert args.arch and args.shape, "--arch/--shape or --all"
+        cells = [(args.arch, args.shape)]
+
+    meshes = [args.multi_pod]
+    if args.both_meshes:
+        meshes = [False, True]
+
+    results = []
+    for mp in meshes:
+        for arch, shape in cells:
+            try:
+                results.append(run_cell(arch, shape, multi_pod=mp,
+                                        seq_parallel=not args.no_seq_parallel))
+            except Exception as e:  # a dry-run failure is a bug — surface it
+                traceback.print_exc()
+                results.append({"arch": arch, "shape": shape,
+                                "mesh": "2x16x16" if mp else "16x16",
+                                "status": "FAILED", "error": str(e)[-2000:]})
+    if args.out:
+        with open(args.out, "w") as f:
+            json.dump(results, f, indent=1, default=str)
+    n_ok = sum(1 for r in results if r["status"] == "ok")
+    n_skip = sum(1 for r in results if r["status"] == "skipped")
+    n_fail = sum(1 for r in results if r["status"] == "FAILED")
+    print(f"\ndry-run: {n_ok} ok, {n_skip} skipped (documented), {n_fail} FAILED")
+    if n_fail:
+        raise SystemExit(1)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,43 @@
+"""Production mesh construction.
+
+The mesh hierarchy maps the paper's NoC hierarchy onto TPU axes:
+  "model" = intra-domain TP/EP (the 20-core fullerene level-1 domain),
+  "data"  = DP/FSDP across level-1 router domains,
+  "pod"   = the level-2 router scale-up axis (multi-pod DCN).
+
+Defined as functions (never module-level constants) so importing this
+module never touches jax device state.
+"""
+from __future__ import annotations
+
+import jax
+
+
+SINGLE_POD = (16, 16)                 # 256 chips (one v5e pod slice)
+MULTI_POD = (2, 16, 16)               # 2 pods = 512 chips
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    shape = MULTI_POD if multi_pod else SINGLE_POD
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    n = 1
+    for s in shape:
+        n *= s
+    devices = jax.devices()[:n]
+    if len(devices) < n:
+        raise RuntimeError(
+            f"need {n} devices, have {len(devices)} — the dry-run launcher "
+            f"must set XLA_FLAGS=--xla_force_host_platform_device_count=512 "
+            f"before importing jax")
+    import numpy as np
+    dev_array = np.asarray(devices).reshape(shape)
+    return jax.sharding.Mesh(dev_array, axes)
+
+
+def make_host_mesh(model: int = 1):
+    """Small mesh over whatever devices exist (tests / smoke runs)."""
+    n = len(jax.devices())
+    data = n // model
+    import numpy as np
+    dev = np.asarray(jax.devices()[: data * model]).reshape(data, model)
+    return jax.sharding.Mesh(dev, ("data", "model"))

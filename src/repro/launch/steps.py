@@ -1,0 +1,210 @@
+"""Step builders: train / prefill / decode with full sharding annotations.
+
+Everything here is mesh-parametric and returns (jitted_fn, arg_shapes,
+in_shardings, out_shardings) so the dry-run, the trainer and the server
+share one code path.
+"""
+from __future__ import annotations
+
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.distributed import sharding as SH
+from repro.models import transformer as T
+from repro.models.common import ArchConfig
+from repro.optim import adamw
+
+
+def param_shapes_and_specs(cfg: ArchConfig):
+    """Param ShapeDtypeStructs + logical axis names, with no allocation.
+
+    init_model builds the logical-spec tree as plain python during tracing,
+    so one eval_shape pass yields both.
+    """
+    captured = {}
+
+    def capture():
+        p, s = T.init_model(cfg, jax.random.PRNGKey(0))
+        captured["specs"] = s
+        return p
+
+    shapes = jax.eval_shape(capture)
+    return shapes, captured["specs"]
+
+
+# ---------------------------------------------------------------------------
+# Train
+# ---------------------------------------------------------------------------
+
+def make_train_step(cfg: ArchConfig, mesh, opt_cfg: adamw.AdamWConfig | None = None,
+                    seq_parallel: bool = True,
+                    rules: SH.ShardingRules = SH.ShardingRules()):
+    opt_cfg = opt_cfg or adamw.AdamWConfig()
+    constraint = SH.make_residual_constraint(mesh, seq_parallel, rules)
+
+    def train_step(params, opt_state, batch):
+        loss, grads = jax.value_and_grad(
+            lambda p: T.forward_train(p, cfg, batch, constraint))(params)
+        new_p, new_opt, metrics = adamw.apply(opt_cfg, grads, opt_state, params)
+        return new_p, new_opt, {"loss": loss, **metrics}
+
+    return train_step
+
+
+def train_shardings(cfg: ArchConfig, mesh, batch_struct: dict,
+                    rules: SH.ShardingRules = SH.ShardingRules()):
+    p_shapes, p_logical = param_shapes_and_specs(cfg)
+    p_spec = SH.tree_specs(p_logical, p_shapes, mesh, rules)
+    opt_shapes = jax.eval_shape(adamw.init, p_shapes)
+    opt_spec = adamw.AdamWState(
+        step=P(),
+        m=p_spec,
+        v=p_spec,
+    )
+    b_spec = SH.batch_specs(batch_struct, mesh, rules)
+    metrics_spec = {"loss": P(), "grad_norm": P(), "lr": P()}
+    inn = (p_spec, opt_spec, b_spec)
+    out = (p_spec, opt_spec, metrics_spec)
+    return p_shapes, opt_shapes, inn, out
+
+
+def lower_train(cfg: ArchConfig, mesh, batch_struct: dict,
+                opt_cfg: adamw.AdamWConfig | None = None,
+                seq_parallel: bool = True, donate: bool = True,
+                rules: SH.ShardingRules = SH.ShardingRules()):
+    fn = make_train_step(cfg, mesh, opt_cfg, seq_parallel, rules)
+    p_shapes, opt_shapes, inn, out = train_shardings(cfg, mesh, batch_struct,
+                                                     rules)
+    ns = lambda tree: jax.tree.map(
+        lambda s: NamedSharding(mesh, s), tree,
+        is_leaf=lambda x: isinstance(x, P))
+    jitted = jax.jit(
+        fn,
+        in_shardings=ns(inn),
+        out_shardings=ns(out),
+        donate_argnums=(0, 1) if donate else (),
+    )
+    return jitted.lower(p_shapes, opt_shapes, batch_struct)
+
+
+# ---------------------------------------------------------------------------
+# Serve: prefill / decode
+# ---------------------------------------------------------------------------
+
+def make_prefill_step(cfg: ArchConfig, mesh, cache_len: int,
+                      seq_parallel: bool = True):
+    constraint = SH.make_residual_constraint(mesh, seq_parallel)
+
+    def prefill_step(params, batch):
+        return T.forward_prefill(params, cfg, batch, cache_len, constraint)
+
+    return prefill_step
+
+
+def make_decode_step(cfg: ArchConfig, mesh):
+    constraint = SH.make_residual_constraint(mesh, seq_parallel=False)
+    pt = None
+    if cfg.quant_serving:
+        from repro.quant.lm_quant import make_param_transform
+        pt = make_param_transform(cfg.dtype)
+
+    def decode_step(params, state, tokens):
+        return T.forward_decode(params, cfg, state, tokens, constraint,
+                                param_transform=pt)
+
+    return decode_step
+
+
+def _quantize_param_structs(cfg: ArchConfig, shapes, logical,
+                            pack_4bit: bool = False):
+    """quant_serving (C3): blocks weights become index tensors + per-layer
+    codebooks in the *argument structure* — the compiled decode step reads
+    1 byte/weight (int8) or 0.5 byte/weight (4-bit packed, the chip's real
+    synapse format) from HBM instead of 2 (bf16)."""
+    from repro.quant.lm_quant import _quantizable
+    import jax.numpy as jnp
+
+    qshapes = dict(shapes)
+    qspecs = dict(logical)
+    new_blocks, new_specs = {}, {}
+    for name, leaf in shapes["blocks"].items():
+        if _quantizable(name, leaf):
+            L = leaf.shape[0]
+            if pack_4bit and leaf.shape[-1] % 2 == 0:
+                packed = leaf.shape[:-1] + (leaf.shape[-1] // 2,)
+                new_blocks[name] = {
+                    "idx4": jax.ShapeDtypeStruct(packed, jnp.uint8),
+                    "cb": jax.ShapeDtypeStruct((L, 16), jnp.float32),
+                }
+                new_specs[name] = {
+                    "idx4": logical["blocks"][name],
+                    "cb": ("layers", None),
+                }
+            else:
+                new_blocks[name] = {
+                    "idx": jax.ShapeDtypeStruct(leaf.shape, jnp.int8),
+                    "cb": jax.ShapeDtypeStruct((L, 16), jnp.float32),
+                }
+                new_specs[name] = {
+                    "idx": logical["blocks"][name],
+                    "cb": ("layers", None),
+                }
+        else:
+            new_blocks[name] = leaf
+            new_specs[name] = logical["blocks"][name]
+    qshapes["blocks"] = new_blocks
+    qspecs["blocks"] = new_specs
+    return qshapes, qspecs
+
+
+def serve_shardings(cfg: ArchConfig, mesh, batch: int, cache_len: int):
+    p_shapes, p_logical = param_shapes_and_specs(cfg)
+    if cfg.quant_serving:
+        p_shapes, p_logical = _quantize_param_structs(
+            cfg, p_shapes, p_logical,
+            pack_4bit=(cfg.quant_serving == "4bit"))
+    p_spec = SH.tree_specs(p_logical, p_shapes, mesh)
+    state_shapes = jax.eval_shape(
+        lambda: T.init_decode_state(cfg, batch, cache_len))
+    state_spec = SH.decode_state_specs(state_shapes, mesh)
+    pb = SH.spec_for((batch,), ("batch",), mesh)[0]
+    pv = SH.spec_for((batch, cfg.vocab), ("batch", "vocab"), mesh)
+    logits_spec = P(pb, pv[1])
+    return p_shapes, p_spec, state_shapes, state_spec, logits_spec
+
+
+def lower_prefill(cfg: ArchConfig, mesh, batch_struct: dict, cache_len: int):
+    b = batch_struct["tokens"].shape[0]
+    p_shapes, p_spec, state_shapes, state_spec, logits_spec = serve_shardings(
+        cfg, mesh, b, cache_len)
+    fn = make_prefill_step(cfg, mesh, cache_len)
+    ns = lambda tree: jax.tree.map(
+        lambda s: NamedSharding(mesh, s), tree,
+        is_leaf=lambda x: isinstance(x, P))
+    jitted = jax.jit(
+        fn,
+        in_shardings=(ns(p_spec), ns(SH.batch_specs(batch_struct, mesh))),
+        out_shardings=(ns(logits_spec), ns(state_spec)),
+    )
+    return jitted.lower(p_shapes, batch_struct)
+
+
+def lower_decode(cfg: ArchConfig, mesh, batch: int, cache_len: int,
+                 donate: bool = True):
+    p_shapes, p_spec, state_shapes, state_spec, logits_spec = serve_shardings(
+        cfg, mesh, batch, cache_len)
+    fn = make_decode_step(cfg, mesh)
+    ns = lambda tree: jax.tree.map(
+        lambda s: NamedSharding(mesh, s), tree,
+        is_leaf=lambda x: isinstance(x, P))
+    tok_struct = jax.ShapeDtypeStruct((batch, 1), jnp.int32)
+    tok_spec = P(SH.spec_for((batch,), ("batch",), mesh)[0], None)
+    jitted = jax.jit(
+        fn,
+        in_shardings=(ns(p_spec), ns(state_spec), NamedSharding(mesh, tok_spec)),
+        out_shardings=(ns(logits_spec), ns(state_spec)),
+        donate_argnums=(1,) if donate else (),
+    )
+    return jitted.lower(p_shapes, state_shapes, tok_struct)

@@ -1,0 +1,62 @@
+"""Production training launcher.
+
+    python -m repro.launch.train --arch granite-3-2b --steps 1000 \
+        --batch 32 --seq 1024 --ckpt /data/ckpts/granite2b
+
+On a real cluster each controller process runs this with
+jax.distributed.initialize() handled by the environment; on the CPU
+container it runs over the host mesh.  The step function, shardings and
+checkpoint layout are identical to the dry-run's.
+"""
+from __future__ import annotations
+
+import argparse
+
+import jax
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--smoke", action="store_true",
+                    help="use the reduced smoke config (CPU-sized)")
+    ap.add_argument("--steps", type=int, default=100)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=128)
+    ap.add_argument("--lr", type=float, default=3e-4)
+    ap.add_argument("--ckpt", default="/tmp/repro_train_ckpt")
+    ap.add_argument("--save-every", type=int, default=50)
+    ap.add_argument("--model-parallel", type=int, default=1)
+    args = ap.parse_args()
+
+    import dataclasses
+
+    import jax.numpy as jnp
+
+    from repro.configs import registry as R
+    from repro.launch.mesh import make_host_mesh
+    from repro.train.trainer import Trainer, TrainJobConfig
+
+    cfg = R.get_arch(args.arch, smoke=args.smoke)
+    if args.smoke:
+        cfg = dataclasses.replace(cfg, dtype=jnp.float32)
+    job = TrainJobConfig(batch=args.batch, seq_len=args.seq,
+                         num_steps=args.steps, save_every=args.save_every,
+                         ckpt_dir=args.ckpt, lr=args.lr)
+    mesh = make_host_mesh(model=args.model_parallel)
+    print(f"arch={cfg.name} params~{cfg.param_count()/1e6:.1f}M "
+          f"mesh={dict(mesh.shape)} steps={args.steps}")
+    tr = Trainer(cfg, job, mesh=mesh)
+
+    def on_metrics(step, m, dt):
+        if step % 10 == 0:
+            print(f"step {step:5d} loss {float(m['loss']):.4f} "
+                  f"gnorm {float(m['grad_norm']):.3f} ({dt*1e3:.0f} ms)",
+                  flush=True)
+
+    tr.run(on_metrics=on_metrics)
+    print("done; checkpoints in", args.ckpt)
+
+
+if __name__ == "__main__":
+    main()

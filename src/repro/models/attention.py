@@ -1,0 +1,230 @@
+"""GQA attention with RoPE, sliding window, prefill + decode KV-cache paths.
+
+Decode supports two cache shardings (see DESIGN.md §5):
+  * kv-head sharded ("model" axis) when n_kv_heads % tp == 0
+  * sequence-sharded cache (flash-decoding style) otherwise — softmax
+    partials combine through XLA's all-reduce of the sharded reduction.
+The code itself is sharding-agnostic; the launcher picks PartitionSpecs.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.common import ArchConfig, Initializer, apply_rope
+
+NEG_INF = -1e30
+
+
+def init_attention(init: Initializer, cfg: ArchConfig, n_layers: int,
+                   prefix: dict, specs: dict, cross: bool = False):
+    """Stacked attention params for `n_layers` layers."""
+    d, h, kv, hd = cfg.d_model, cfg.n_heads, cfg.n_kv_heads, cfg.hd
+    init.dense(prefix, specs, "wq", (d, h * hd), ("embed", "heads"), stacked=n_layers)
+    init.dense(prefix, specs, "wk", (d, kv * hd), ("embed", "kv_heads"), stacked=n_layers)
+    init.dense(prefix, specs, "wv", (d, kv * hd), ("embed", "kv_heads"), stacked=n_layers)
+    init.dense(prefix, specs, "wo", (h * hd, d), ("heads", "embed"),
+               scale=(h * hd) ** -0.5 / (2 * max(n_layers, 1)) ** 0.5,
+               stacked=n_layers)
+    if cross:
+        init.dense(prefix, specs, "xwq", (d, h * hd), ("embed", "heads"), stacked=n_layers)
+        init.dense(prefix, specs, "xwk", (d, kv * hd), ("embed", "kv_heads"), stacked=n_layers)
+        init.dense(prefix, specs, "xwv", (d, kv * hd), ("embed", "kv_heads"), stacked=n_layers)
+        init.dense(prefix, specs, "xwo", (h * hd, d), ("heads", "embed"), stacked=n_layers)
+
+
+class KVCache(NamedTuple):
+    k: jax.Array   # (B, kv, S_max, hd)
+    v: jax.Array   # (B, kv, S_max, hd)
+
+
+def _qkv(x, p, cfg: ArchConfig, positions, rope: bool = True,
+         q_name="wq", k_name="wk", v_name="wv"):
+    b, s, _ = x.shape
+    h, kv, hd = cfg.n_heads, cfg.n_kv_heads, cfg.hd
+    q = jnp.einsum("bsd,dk->bsk", x, p[q_name]).reshape(b, s, h, hd)
+    k = jnp.einsum("bsd,dk->bsk", x, p[k_name]).reshape(b, s, kv, hd)
+    v = jnp.einsum("bsd,dk->bsk", x, p[v_name]).reshape(b, s, kv, hd)
+    if rope:
+        q = apply_rope(q, positions, cfg.rope_theta)
+        k = apply_rope(k, positions, cfg.rope_theta)
+    return q, k, v
+
+
+def _sdpa(q, k, v, mask, cfg: ArchConfig):
+    """q (B,S,H,hd), k/v (B,T,kv,hd) -> (B,S,H*hd); GQA via head grouping.
+
+    Inputs stay in their storage dtype (bf16) and the MXU accumulates in
+    f32 via preferred_element_type — materializing `k.astype(f32)` instead
+    would let XLA hoist a full-cache conversion out of the decode layer
+    loop (observed: 2x18 GiB of hoisted converts on moonshot decode_32k;
+    EXPERIMENTS.md §Perf H3).  Softmax runs in f32; probs are cast back to
+    the storage dtype for the PV matmul (MaxText convention).
+    """
+    b, s, h, hd = q.shape
+    t, kv = k.shape[1], k.shape[2]
+    g = h // kv
+    q = q.reshape(b, s, kv, g, hd)
+    scores = jnp.einsum("bskgh,btkh->bkgst", q, k,
+                        preferred_element_type=jnp.float32) / (hd ** 0.5)
+    scores = jnp.where(mask[:, None, None, :, :], scores, NEG_INF)
+    probs = jax.nn.softmax(scores, axis=-1)
+    out = jnp.einsum("bkgst,btkh->bskgh", probs.astype(v.dtype), v,
+                     preferred_element_type=jnp.float32)
+    return out.reshape(b, s, h * hd).astype(v.dtype)
+
+
+def _sdpa_chunked(q, k, v, cfg: ArchConfig, chunk: int):
+    """Query-chunked attention (flash-style memory behaviour).
+
+    Live score tensor shrinks from O(S·T) to O(chunk·T) per head: the
+    hillclimb fix for the 32k-prefill quadratic-memory wall (EXPERIMENTS.md
+    §Perf H2).  Each chunk's softmax row is complete, so no online
+    max/sum bookkeeping is needed; numerics match `_sdpa` exactly.
+    """
+    b, s, h, hd = q.shape
+    t, kvh = k.shape[1], k.shape[2]
+    assert s % chunk == 0, (s, chunk)
+    g = h // kvh
+    nc = s // chunk
+    qr = (q.reshape(b, nc, chunk, kvh, g, hd)
+          .transpose(1, 0, 2, 3, 4, 5))                      # (nc, b, c, kv, g, hd)
+    cols = jnp.arange(t)
+
+    def body(_, qc_i):
+        qc, ci = qc_i                                        # (b, c, kv, g, hd)
+        rows = ci * chunk + jnp.arange(chunk)
+        m = cols[None, :] <= rows[:, None]
+        if cfg.sliding_window > 0:
+            m &= cols[None, :] > rows[:, None] - cfg.sliding_window
+        scores = jnp.einsum("bckgh,btkh->bkgct", qc, k,
+                            preferred_element_type=jnp.float32) / (hd ** 0.5)
+        scores = jnp.where(m[None, None, None], scores, NEG_INF)
+        probs = jax.nn.softmax(scores, axis=-1)
+        out = jnp.einsum("bkgct,btkh->bckgh", probs.astype(v.dtype), v,
+                         preferred_element_type=jnp.float32)
+        return None, out.astype(v.dtype)
+
+    _, outs = jax.lax.scan(body, None, (qr, jnp.arange(nc)))
+    return (outs.transpose(1, 0, 2, 3, 4, 5)
+            .reshape(b, s, h * hd))
+
+
+def causal_mask(s: int, window: int = 0, offset: int = 0) -> jax.Array:
+    """(s, s+offset) causal (optionally sliding-window) mask."""
+    rows = jnp.arange(s)[:, None] + offset
+    cols = jnp.arange(s + offset)[None, :]
+    m = cols <= rows
+    if window > 0:
+        m &= cols > rows - window
+    return m
+
+
+def attention_train(x, p, cfg: ArchConfig, positions=None):
+    """Full self-attention forward (train / prefill compute)."""
+    b, s, _ = x.shape
+    if positions is None:
+        positions = jnp.arange(s)[None, :]
+    q, k, v = _qkv(x, p, cfg, positions)
+    if cfg.attn_chunk and s % cfg.attn_chunk == 0 and s > cfg.attn_chunk:
+        out = _sdpa_chunked(q, k, v, cfg, cfg.attn_chunk)
+    else:
+        mask = causal_mask(s, cfg.sliding_window)[None]
+        out = _sdpa(q, k, v, jnp.broadcast_to(mask, (b, s, s)), cfg)
+    return jnp.einsum("bsk,kd->bsd", out, p["wo"])
+
+
+def attention_encoder(x, p, cfg: ArchConfig):
+    """Bidirectional attention (whisper encoder)."""
+    b, s, _ = x.shape
+    positions = jnp.arange(s)[None, :]
+    q, k, v = _qkv(x, p, cfg, positions)
+    mask = jnp.ones((b, s, s), bool)
+    out = _sdpa(q, k, v, mask, cfg)
+    return jnp.einsum("bsk,kd->bsd", out, p["wo"])
+
+
+def attention_cross(x, enc_out, p, cfg: ArchConfig):
+    """Cross-attention: queries from decoder x, keys/values from encoder."""
+    b, s, _ = x.shape
+    t = enc_out.shape[1]
+    h, kv, hd = cfg.n_heads, cfg.n_kv_heads, cfg.hd
+    q = jnp.einsum("bsd,dk->bsk", x, p["xwq"]).reshape(b, s, h, hd)
+    k = jnp.einsum("btd,dk->btk", enc_out, p["xwk"]).reshape(b, t, kv, hd)
+    v = jnp.einsum("btd,dk->btk", enc_out, p["xwv"]).reshape(b, t, kv, hd)
+    mask = jnp.ones((b, s, t), bool)
+    out = _sdpa(q, k, v, mask, cfg)
+    return jnp.einsum("bsk,kd->bsd", out, p["xwo"])
+
+
+def attention_prefill(x, p, cfg: ArchConfig, cache_len: int):
+    """Prefill: same compute as train + returns the populated KV cache."""
+    b, s, _ = x.shape
+    positions = jnp.arange(s)[None, :]
+    q, k, v = _qkv(x, p, cfg, positions)
+    if cfg.attn_chunk and s % cfg.attn_chunk == 0 and s > cfg.attn_chunk:
+        out = _sdpa_chunked(q, k, v, cfg, cfg.attn_chunk)
+    else:
+        mask = causal_mask(s, cfg.sliding_window)[None]
+        out = _sdpa(q, k, v, jnp.broadcast_to(mask, (b, s, s)), cfg)
+    kc = jnp.zeros((b, cfg.n_kv_heads, cache_len, cfg.hd), x.dtype)
+    vc = jnp.zeros_like(kc)
+    kc = jax.lax.dynamic_update_slice_in_dim(kc, k.transpose(0, 2, 1, 3), 0, axis=2)
+    vc = jax.lax.dynamic_update_slice_in_dim(vc, v.transpose(0, 2, 1, 3), 0, axis=2)
+    return jnp.einsum("bsk,kd->bsd", out, p["wo"]), KVCache(kc, vc)
+
+
+KV_INT8_SCALE = 0.05    # fixed-point step for int8 KV caches (perf option)
+
+
+def _quant_kv(x: jax.Array, dtype) -> jax.Array:
+    if dtype == jnp.int8:
+        return jnp.clip(jnp.round(x.astype(jnp.float32) / KV_INT8_SCALE),
+                        -127, 127).astype(jnp.int8)
+    return x.astype(dtype)
+
+
+def _dequant_kv(x: jax.Array, out_dtype) -> jax.Array:
+    if x.dtype == jnp.int8:
+        return (x.astype(jnp.float32) * KV_INT8_SCALE).astype(out_dtype)
+    return x
+
+
+def attention_decode(x, p, cfg: ArchConfig, cache: KVCache, pos: jax.Array):
+    """One-token decode against a (B, kv, S_max, hd) cache.
+
+    `pos` is the current length (scalar int32, uniform across batch).
+    Perf options (EXPERIMENTS.md §Perf):
+      * int8 KV cache (cfg.kv_cache_dtype) — halves decode HBM traffic;
+      * ring-buffer window cache — when the cache is smaller than the
+        context (sliding-window archs), writes wrap at `pos % S_max` and
+        the mask admits the full (rotated) window; softmax is order-
+        invariant so causal semantics are preserved.
+    """
+    b, s, _ = x.shape
+    assert s == 1
+    positions = jnp.full((1, 1), 0, jnp.int32) + pos
+    q, k, v = _qkv(x, p, cfg, positions)
+    k_new = k.transpose(0, 2, 1, 3)                     # (B, kv, 1, hd)
+    v_new = v.transpose(0, 2, 1, 3)
+    t = cache.k.shape[2]
+    write_pos = pos % t                                 # ring buffer when t<ctx
+    kc = jax.lax.dynamic_update_slice_in_dim(
+        cache.k, _quant_kv(k_new, cache.k.dtype), write_pos, axis=2)
+    vc = jax.lax.dynamic_update_slice_in_dim(
+        cache.v, _quant_kv(v_new, cache.v.dtype), write_pos, axis=2)
+
+    slots = jnp.arange(t)[None, :]
+    valid = slots <= pos                                # normal operation
+    if cfg.sliding_window > 0:
+        if cfg.sliding_window < t:
+            valid &= slots > pos - cfg.sliding_window
+        else:                                           # ring buffer full
+            valid = valid | (pos >= t)
+    mask = jnp.broadcast_to(valid[:, None, :], (b, 1, t))
+    kd = _dequant_kv(kc, x.dtype).transpose(0, 2, 1, 3)
+    vd = _dequant_kv(vc, x.dtype).transpose(0, 2, 1, 3)
+    out = _sdpa(q, kd, vd, mask, cfg)
+    return jnp.einsum("bsk,kd->bsd", out, p["wo"]), KVCache(kc, vc)

@@ -1,0 +1,235 @@
+"""Shared model substrate: configs, norms, RoPE, init + logical sharding.
+
+Every parameter is created together with a *logical axis* tuple; the
+distributed layer (repro.distributed.sharding) maps logical axes onto mesh
+axes.  This keeps model code mesh-agnostic — the fullerene-hierarchy
+mapping (pod = level-2 router domain) lives entirely in the rules.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+Params = dict
+Specs = dict
+
+
+# ---------------------------------------------------------------------------
+# Architecture configuration
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class ArchConfig:
+    name: str
+    family: str                  # dense | moe | ssm | hybrid | audio | vlm
+    n_layers: int
+    d_model: int
+    n_heads: int
+    n_kv_heads: int
+    d_ff: int
+    vocab: int
+    head_dim: int = 0            # 0 -> d_model // n_heads
+    # MoE
+    n_experts: int = 0
+    top_k: int = 0
+    capacity_factor: float = 1.25
+    moe_group_size: int = 1024   # tokens per dispatch group (mesh-TF style)
+    # SSM (mamba2 / SSD)
+    ssm_state: int = 0
+    ssm_expand: int = 2
+    ssm_head_dim: int = 64
+    ssm_chunk: int = 256
+    ssm_conv: int = 4
+    # hybrid (zamba2): one *shared* attention block every `attn_every` layers
+    attn_every: int = 0
+    # enc-dec (whisper): encoder layers + frame count from the stub frontend
+    enc_layers: int = 0
+    enc_frames: int = 1500
+    # vlm (phi-3-vision): patch embeddings from the stub CLIP frontend
+    n_patches: int = 0
+    # misc
+    rope_theta: float = 10000.0
+    sliding_window: int = 0      # 0 = full causal attention
+    norm_eps: float = 1e-5
+    dtype: Any = jnp.bfloat16
+    # perf options (hillclimbed; 0/False = paper-faithful baseline)
+    attn_chunk: int = 0          # >0: query-chunked attention (flash-style)
+    kv_cache_dtype: Any = None   # e.g. jnp.int8 for quantized KV cache
+    quant_serving: Any = False   # C3 codebook weights in decode: True|"4bit"
+    constrain_ffn_out: bool = False  # shard ffn/moe output pre-residual
+                                     # (lets XLA emit reduce-scatter)
+    remat_policy: str = "nothing"    # nothing | dots | everything
+
+    @property
+    def hd(self) -> int:
+        if self.head_dim:
+            return self.head_dim
+        return self.d_model // self.n_heads if self.n_heads else 0
+
+    @property
+    def is_attention_free(self) -> bool:
+        return self.family == "ssm"
+
+    @property
+    def supports_long_context(self) -> bool:
+        """Sub-quadratic path exists (see DESIGN.md §Arch-applicability)."""
+        return self.family in ("ssm", "hybrid")
+
+    # --- derived sizes -----------------------------------------------------
+    def param_count(self) -> int:
+        """Analytic parameter count (used for 6ND model-flops in roofline)."""
+        d, ff, v = self.d_model, self.d_ff, self.vocab
+        hd = self.hd
+        attn = d * self.n_heads * hd + 2 * d * self.n_kv_heads * hd + self.n_heads * hd * d
+        dense_mlp = 3 * d * ff
+        emb = v * d
+        per_layer: float
+        if self.family == "moe":
+            moe = self.n_experts * 3 * d * ff + d * self.n_experts
+            per_layer = attn + moe
+            n_full = self.n_layers
+            total = n_full * per_layer + 2 * emb + d
+        elif self.family == "ssm":
+            total = self.n_layers * self._ssm_layer_params() + 2 * emb + d
+        elif self.family == "hybrid":
+            n_attn = self.n_layers // max(self.attn_every, 1)
+            total = (self.n_layers * self._ssm_layer_params()
+                     + (attn + dense_mlp) + 2 * emb + d)  # one shared block
+            del n_attn
+        elif self.family == "audio":
+            enc = self.enc_layers * (attn + dense_mlp)
+            dec = self.n_layers * (2 * attn + dense_mlp)  # self + cross
+            total = enc + dec + 2 * emb + d
+        else:  # dense, vlm
+            total = self.n_layers * (attn + dense_mlp) + 2 * emb + d
+        return int(total)
+
+    def active_param_count(self) -> int:
+        """Activated params per token (MoE: top-k experts only)."""
+        if self.family != "moe":
+            return self.param_count()
+        d, ff = self.d_model, self.d_ff
+        hd = self.hd
+        attn = d * self.n_heads * hd + 2 * d * self.n_kv_heads * hd + self.n_heads * hd * d
+        act_moe = self.top_k * 3 * d * ff + d * self.n_experts
+        return int(self.n_layers * (attn + act_moe) + 2 * self.vocab * d + d)
+
+    def _ssm_layer_params(self) -> int:
+        d = self.d_model
+        d_in = self.ssm_expand * d
+        nh = d_in // self.ssm_head_dim
+        n = self.ssm_state
+        in_proj = d * (2 * d_in + 2 * n + nh)
+        out_proj = d_in * d
+        conv = (d_in + 2 * n) * self.ssm_conv
+        return in_proj + out_proj + conv + 2 * nh + d_in
+
+
+@dataclasses.dataclass(frozen=True)
+class ShapeConfig:
+    """One assigned input-shape cell."""
+
+    name: str                   # train_4k | prefill_32k | decode_32k | long_500k
+    kind: str                   # train | prefill | decode
+    seq_len: int
+    global_batch: int
+
+
+SHAPES = {
+    "train_4k": ShapeConfig("train_4k", "train", 4096, 256),
+    "prefill_32k": ShapeConfig("prefill_32k", "prefill", 32768, 32),
+    "decode_32k": ShapeConfig("decode_32k", "decode", 32768, 128),
+    "long_500k": ShapeConfig("long_500k", "decode", 524288, 1),
+}
+
+
+# ---------------------------------------------------------------------------
+# Initialization with logical axes
+# ---------------------------------------------------------------------------
+
+class Initializer:
+    """Collects params and their logical axis names in parallel trees."""
+
+    def __init__(self, key: jax.Array, dtype=jnp.bfloat16):
+        self.key = key
+        self.dtype = dtype
+        self.params: Params = {}
+        self.specs: Specs = {}
+
+    def _next(self) -> jax.Array:
+        self.key, k = jax.random.split(self.key)
+        return k
+
+    def dense(self, tree: Params, specs: Specs, name: str,
+              shape: tuple[int, ...], axes: tuple[str | None, ...],
+              scale: float | None = None, stacked: int = 0):
+        """Normal(0, scale) init; `stacked` prepends a layer axis."""
+        fan_in = shape[0] if len(shape) >= 2 else shape[-1]
+        std = scale if scale is not None else fan_in ** -0.5
+        full_shape = ((stacked,) + shape) if stacked else shape
+        full_axes = (("layers",) + axes) if stacked else axes
+        tree[name] = (jax.random.normal(self._next(), full_shape, jnp.float32)
+                      * std).astype(self.dtype)
+        specs[name] = full_axes
+
+    def zeros(self, tree, specs, name, shape, axes, stacked: int = 0, dtype=None):
+        full_shape = ((stacked,) + shape) if stacked else shape
+        full_axes = (("layers",) + axes) if stacked else axes
+        tree[name] = jnp.zeros(full_shape, dtype or self.dtype)
+        specs[name] = full_axes
+
+    def ones(self, tree, specs, name, shape, axes, stacked: int = 0, dtype=None):
+        full_shape = ((stacked,) + shape) if stacked else shape
+        full_axes = (("layers",) + axes) if stacked else axes
+        tree[name] = jnp.ones(full_shape, dtype or self.dtype)
+        specs[name] = full_axes
+
+
+# ---------------------------------------------------------------------------
+# Primitive layers (pure functions)
+# ---------------------------------------------------------------------------
+
+def rms_norm(x: jax.Array, w: jax.Array, eps: float = 1e-5) -> jax.Array:
+    dt = x.dtype
+    x = x.astype(jnp.float32)
+    x = x * jax.lax.rsqrt(jnp.mean(x * x, axis=-1, keepdims=True) + eps)
+    return (x * w.astype(jnp.float32)).astype(dt)
+
+
+def rope_freqs(hd: int, theta: float) -> jax.Array:
+    return 1.0 / (theta ** (jnp.arange(0, hd, 2, jnp.float32) / hd))
+
+
+def apply_rope(x: jax.Array, positions: jax.Array, theta: float) -> jax.Array:
+    """x: (..., S, H, hd), positions: broadcastable to (..., S)."""
+    hd = x.shape[-1]
+    freqs = rope_freqs(hd, theta)                       # (hd/2,)
+    angles = positions[..., None].astype(jnp.float32) * freqs  # (..., S, hd/2)
+    cos = jnp.cos(angles)[..., None, :]                 # (..., S, 1, hd/2)
+    sin = jnp.sin(angles)[..., None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], axis=-1)
+    return out.astype(x.dtype)
+
+
+def swiglu(x, wi, wg, wo):
+    h = jnp.einsum("...d,df->...f", x, wi) * jax.nn.silu(
+        jnp.einsum("...d,df->...f", x, wg))
+    return jnp.einsum("...f,fd->...d", h, wo)
+
+
+def cross_entropy_loss(logits: jax.Array, labels: jax.Array,
+                       mask: jax.Array | None = None,
+                       z_loss: float = 1e-4) -> jax.Array:
+    """Stable CE with z-loss; logits (..., V) f32, labels (...,) int32."""
+    logits = logits.astype(jnp.float32)
+    lse = jax.scipy.special.logsumexp(logits, axis=-1)
+    ll = jnp.take_along_axis(logits, labels[..., None], axis=-1)[..., 0]
+    loss = lse - ll + z_loss * lse ** 2
+    if mask is not None:
+        loss = loss * mask
+        return loss.sum() / jnp.maximum(mask.sum(), 1.0)
+    return loss.mean()

@@ -1,0 +1,206 @@
+"""Mamba2 (SSD — state-space duality, arXiv:2405.21060) in pure JAX.
+
+Chunked SSD forward for train/prefill (O(S) with quadratic intra-chunk
+blocks that map onto the MXU) and a single-step recurrence for decode.
+This is the sub-quadratic path that makes the `long_500k` shape lowerable
+for the ssm/hybrid architectures.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.common import ArchConfig, Initializer, rms_norm
+
+
+class SSMCache(NamedTuple):
+    conv: jax.Array    # (B, K-1, conv_ch) rolling conv window
+    state: jax.Array   # (B, H, N, P) SSM state
+
+
+def dims(cfg: ArchConfig):
+    d_in = cfg.ssm_expand * cfg.d_model
+    nh = d_in // cfg.ssm_head_dim
+    return d_in, nh, cfg.ssm_state, cfg.ssm_head_dim
+
+
+def conv_channels(cfg: ArchConfig) -> int:
+    d_in, _, n, _ = dims(cfg)
+    return d_in + 2 * n
+
+
+def init_mamba2(init: Initializer, cfg: ArchConfig, n_layers: int,
+                prefix: dict, specs: dict, shard_heads: bool = True):
+    d = cfg.d_model
+    d_in, nh, n, p = dims(cfg)
+    h_ax = "heads" if shard_heads else None
+    proj_out = 2 * d_in + 2 * n + nh
+    init.dense(prefix, specs, "in_proj", (d, proj_out), ("embed", h_ax),
+               stacked=n_layers)
+    init.dense(prefix, specs, "out_proj", (d_in, d), (h_ax, "embed"),
+               scale=d_in ** -0.5 / (2 * n_layers) ** 0.5, stacked=n_layers)
+    init.dense(prefix, specs, "conv_w", (conv_channels(cfg), cfg.ssm_conv),
+               (h_ax, None), scale=cfg.ssm_conv ** -0.5, stacked=n_layers)
+    init.zeros(prefix, specs, "conv_b", (conv_channels(cfg),), (h_ax,),
+               stacked=n_layers)
+    # A_log init so that -exp(A_log) in [-1, ...): uniform-ish
+    init.ones(prefix, specs, "A_log", (nh,), (h_ax,), stacked=n_layers,
+              dtype=jnp.float32)
+    init.zeros(prefix, specs, "D", (nh,), (h_ax,), stacked=n_layers,
+               dtype=jnp.float32)
+    init.zeros(prefix, specs, "dt_bias", (nh,), (h_ax,), stacked=n_layers,
+               dtype=jnp.float32)
+    init.ones(prefix, specs, "gnorm", (d_in,), (h_ax,), stacked=n_layers)
+
+
+def _split_proj(zxbcdt, cfg: ArchConfig):
+    d_in, nh, n, _ = dims(cfg)
+    z, x, B, C, dt = jnp.split(
+        zxbcdt, [d_in, 2 * d_in, 2 * d_in + n, 2 * d_in + 2 * n], axis=-1)
+    return z, x, B, C, dt
+
+
+def _causal_conv_train(xbc: jax.Array, w: jax.Array, b: jax.Array) -> jax.Array:
+    """Depthwise causal conv, (B, S, CH) with kernel (CH, K)."""
+    k = w.shape[-1]
+    pad = jnp.pad(xbc, ((0, 0), (k - 1, 0), (0, 0)))
+    out = jax.lax.conv_general_dilated(
+        pad, w.T[:, None, :].astype(xbc.dtype),          # (K, 1, CH) OIW->?
+        window_strides=(1,), padding="VALID",
+        dimension_numbers=("NWC", "WIO", "NWC"),
+        feature_group_count=xbc.shape[-1],
+    )
+    return jax.nn.silu(out + b.astype(out.dtype))
+
+
+def _causal_conv_step(xbc: jax.Array, conv_state: jax.Array, w, b):
+    """One-token conv: (B, 1, CH) with rolling state (B, K-1, CH)."""
+    window = jnp.concatenate([conv_state, xbc], axis=1)   # (B, K, CH)
+    out = jnp.einsum("bkc,ck->bc", window.astype(jnp.float32),
+                     w.astype(jnp.float32))[:, None, :]
+    new_state = window[:, 1:, :]
+    return jax.nn.silu(out + b.astype(jnp.float32)).astype(xbc.dtype), new_state
+
+
+def ssd_chunked(x, dt, A, B, C, chunk: int, init_state=None):
+    """SSD scan.  x (b,s,h,p), dt (b,s,h), A (h,), B/C (b,s,n).
+
+    Returns (y (b,s,h,p), final_state (b,h,n,p)).
+    """
+    b, s, h, p = x.shape
+    n = B.shape[-1]
+    assert s % chunk == 0, (s, chunk)
+    nc = s // chunk
+    xc = x.reshape(b, nc, chunk, h, p)
+    dtc = dt.reshape(b, nc, chunk, h)
+    Bc = B.reshape(b, nc, chunk, n)
+    Cc = C.reshape(b, nc, chunk, n)
+
+    dA = dtc * A                                          # (b,nc,l,h), negative
+    dA_cum = jnp.cumsum(dA, axis=2)
+
+    # --- intra-chunk (quadratic in chunk length, MXU-friendly) ---
+    diff = dA_cum[:, :, :, None, :] - dA_cum[:, :, None, :, :]  # (b,nc,i,j,h)
+    tri = jnp.tril(jnp.ones((chunk, chunk), bool))
+    L = jnp.where(tri[None, None, :, :, None], jnp.exp(diff), 0.0)
+    CB = jnp.einsum("bcin,bcjn->bcij", Cc.astype(jnp.float32),
+                    Bc.astype(jnp.float32))
+    w_intra = L * dtc[:, :, None, :, :]                   # (b,nc,i,j,h)
+    y_intra = jnp.einsum("bcij,bcijh,bcjhp->bcihp", CB, w_intra,
+                         xc.astype(jnp.float32))
+
+    # --- chunk end-states ---
+    decay_states = jnp.exp(dA_cum[:, :, -1:, :] - dA_cum)  # (b,nc,l,h)
+    wts = decay_states * dtc                               # (b,nc,l,h)
+    S = jnp.einsum("bcjh,bcjn,bcjhp->bchnp", wts, Bc.astype(jnp.float32),
+                   xc.astype(jnp.float32))                 # (b,nc,h,n,p)
+
+    # --- inter-chunk recurrence ---
+    chunk_decay = jnp.exp(dA_cum[:, :, -1, :])             # (b,nc,h)
+    s0 = (jnp.zeros((b, h, n, p), jnp.float32) if init_state is None
+          else init_state.astype(jnp.float32))
+
+    def body(carry, inp):
+        s_c, dec = inp                                     # (b,h,n,p), (b,h)
+        new = carry * dec[..., None, None] + s_c
+        return new, carry                                  # emit *entering* state
+
+    final, S_prev = jax.lax.scan(
+        body, s0, (S.transpose(1, 0, 2, 3, 4), chunk_decay.transpose(1, 0, 2)))
+
+    # --- inter-chunk contribution ---
+    state_decay = jnp.exp(dA_cum)                          # (b,nc,l,h)
+    y_inter = jnp.einsum("bcih,bcin,cbhnp->bcihp", state_decay,
+                         Cc.astype(jnp.float32), S_prev)
+    y = (y_intra + y_inter).reshape(b, s, h, p)
+    return y, final
+
+
+def mamba2_forward(x, p, cfg: ArchConfig, cache: SSMCache | None = None,
+                   return_cache: bool = False):
+    """Full-sequence forward (train / prefill).  x (B, S, d)."""
+    b, s, _ = x.shape
+    d_in, nh, n, hp = dims(cfg)
+    zxbcdt = jnp.einsum("bsd,dk->bsk", x, p["in_proj"])
+    z, xin, B, C, dt = _split_proj(zxbcdt, cfg)
+    pre_conv_xbc = jnp.concatenate([xin, B, C], axis=-1)
+    xbc = _causal_conv_train(pre_conv_xbc, p["conv_w"], p["conv_b"])
+    xin, B, C = jnp.split(xbc, [d_in, d_in + n], axis=-1)
+
+    A = -jnp.exp(p["A_log"].astype(jnp.float32))
+    dt_act = jax.nn.softplus(dt.astype(jnp.float32) + p["dt_bias"])
+    xh = xin.reshape(b, s, nh, hp)
+    # pad sequence to a chunk multiple if needed (prefill convenience)
+    pad = (-s) % cfg.ssm_chunk
+    if pad:
+        xh = jnp.pad(xh, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        dt_act = jnp.pad(dt_act, ((0, 0), (0, pad), (0, 0)))
+        B = jnp.pad(B, ((0, 0), (0, pad), (0, 0)))
+        C = jnp.pad(C, ((0, 0), (0, pad), (0, 0)))
+    y, final = ssd_chunked(xh, dt_act, A, B, C, cfg.ssm_chunk)
+    y = y[:, :s]
+    y = y + p["D"][None, None, :, None] * xin.reshape(b, s, nh, hp).astype(jnp.float32)
+    y = y.reshape(b, s, d_in).astype(x.dtype)
+    y = rms_norm(y * jax.nn.silu(z), p["gnorm"], cfg.norm_eps)
+    out = jnp.einsum("bsk,kd->bsd", y, p["out_proj"])
+    if return_cache:
+        k = cfg.ssm_conv
+        tail = pre_conv_xbc[:, -(k - 1):, :]              # raw conv window
+        return out, SSMCache(conv=tail, state=final)
+    return out
+
+
+def mamba2_decode(x, p, cfg: ArchConfig, cache: SSMCache):
+    """One-token step.  x (B, 1, d) -> (B, 1, d), new cache."""
+    b, _, _ = x.shape
+    d_in, nh, n, hp = dims(cfg)
+    zxbcdt = jnp.einsum("bsd,dk->bsk", x, p["in_proj"])
+    z, xin, B, C, dt = _split_proj(zxbcdt, cfg)
+    raw_xbc = jnp.concatenate([xin, B, C], axis=-1)        # (B, 1, CH)
+    xbc, new_conv = _causal_conv_step(raw_xbc, cache.conv, p["conv_w"], p["conv_b"])
+    xin, B, C = jnp.split(xbc, [d_in, d_in + n], axis=-1)
+
+    A = -jnp.exp(p["A_log"].astype(jnp.float32))           # (h,)
+    dt_act = jax.nn.softplus(dt[:, 0].astype(jnp.float32) + p["dt_bias"])  # (B,h)
+    xh = xin[:, 0].reshape(b, nh, hp).astype(jnp.float32)
+    Bv = B[:, 0].astype(jnp.float32)                       # (B, n)
+    Cv = C[:, 0].astype(jnp.float32)
+    decay = jnp.exp(dt_act * A)                            # (B, h)
+    upd = jnp.einsum("bh,bn,bhp->bhnp", dt_act, Bv, xh)
+    state = cache.state.astype(jnp.float32) * decay[..., None, None] + upd
+    y = jnp.einsum("bn,bhnp->bhp", Cv, state)
+    y = y + p["D"][None, :, None] * xh
+    y = y.reshape(b, 1, d_in).astype(x.dtype)
+    y = rms_norm(y * jax.nn.silu(z), p["gnorm"], cfg.norm_eps)
+    out = jnp.einsum("bsk,kd->bsd", y, p["out_proj"])
+    return out, SSMCache(conv=new_conv, state=state)
+
+
+def init_cache(cfg: ArchConfig, batch: int, dtype) -> SSMCache:
+    d_in, nh, n, hp = dims(cfg)
+    return SSMCache(
+        conv=jnp.zeros((batch, cfg.ssm_conv - 1, conv_channels(cfg)), dtype),
+        state=jnp.zeros((batch, nh, n, hp), jnp.float32),
+    )

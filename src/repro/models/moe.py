@@ -1,0 +1,92 @@
+"""Mixture-of-Experts layer: top-k routing with capacity-bounded group-local
+dispatch (mesh-TF / t5x style), expert-parallel over the "model" mesh axis.
+
+Tokens are reshaped into G groups of `group_size`; each group dispatches
+into per-expert capacity buffers via one-hot einsums, which lowers to
+all-to-all + gather collectives under GSPMD.  Capacity scales as
+group_size * k * capacity_factor / E, so dispatch tensors stay
+O(tokens * k * cf) — independent of E.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.common import ArchConfig, Initializer
+
+
+def init_moe(init: Initializer, cfg: ArchConfig, n_layers: int,
+             prefix: dict, specs: dict):
+    d, ff, e = cfg.d_model, cfg.d_ff, cfg.n_experts
+    init.dense(prefix, specs, "router", (d, e), ("embed", "experts"),
+               scale=d ** -0.5, stacked=n_layers)
+    init.dense(prefix, specs, "moe_wi", (e, d, ff), ("experts", "embed", "mlp"),
+               stacked=n_layers)
+    init.dense(prefix, specs, "moe_wg", (e, d, ff), ("experts", "embed", "mlp"),
+               stacked=n_layers)
+    init.dense(prefix, specs, "moe_wo", (e, ff, d), ("experts", "mlp", "embed"),
+               scale=ff ** -0.5 / (2 * n_layers) ** 0.5, stacked=n_layers)
+
+
+def capacity(cfg: ArchConfig, group_size: int) -> int:
+    c = int(group_size * cfg.top_k * cfg.capacity_factor / cfg.n_experts)
+    return max(c, cfg.top_k)
+
+
+def top_k_dispatch(probs: jax.Array, k: int, cap: int):
+    """probs (G, S, E) -> dispatch (G, S, E, C) bool-ish f32, combine same.
+
+    Position-in-expert via cumulative sum in routing priority order
+    (k-th choice processed after all (k-1)-th choices, t5x convention).
+    Overflowing tokens are dropped (their combine weight is 0) — the
+    chip-equivalent of output-buffer backpressure.
+    """
+    g, s, e = probs.shape
+    remaining = probs
+    # fill counter per expert, carried across the k rounds
+    fill = jnp.zeros((g, e), jnp.float32)
+    dispatch = jnp.zeros((g, s, e, cap), jnp.float32)
+    combine = jnp.zeros((g, s, e, cap), jnp.float32)
+    for _ in range(k):
+        idx = jnp.argmax(remaining, axis=-1)                     # (G, S)
+        onehot = jax.nn.one_hot(idx, e, dtype=jnp.float32)       # (G, S, E)
+        gate = jnp.sum(probs * onehot, axis=-1)                  # (G, S)
+        # position of each token within its expert's buffer this round
+        pos_in_e = jnp.cumsum(onehot, axis=1) - onehot + fill[:, None, :]
+        pos = jnp.sum(pos_in_e * onehot, axis=-1)                # (G, S)
+        keep = pos < cap
+        pos_oh = jax.nn.one_hot(pos.astype(jnp.int32), cap, dtype=jnp.float32)
+        d = onehot[..., None] * pos_oh[:, :, None, :] * keep[..., None, None]
+        dispatch = dispatch + d
+        combine = combine + d * gate[..., None, None]
+        fill = fill + jnp.sum(onehot * keep[..., None], axis=1)
+        remaining = remaining * (1.0 - onehot)
+    return dispatch, combine
+
+
+def moe_ffn(x: jax.Array, p: dict, cfg: ArchConfig):
+    """x (B, S, d) -> (B, S, d) + aux load-balancing loss."""
+    b, s, d = x.shape
+    tokens = b * s
+    gs = min(cfg.moe_group_size, tokens)
+    while tokens % gs != 0:          # largest divisor <= preferred size
+        gs -= 1
+    g = tokens // gs
+    xg = x.reshape(g, gs, d)
+
+    logits = jnp.einsum("gsd,de->gse", xg, p["router"]).astype(jnp.float32)
+    probs = jax.nn.softmax(logits, axis=-1)
+    cap = capacity(cfg, gs)
+    dispatch, combine = top_k_dispatch(probs, cfg.top_k, cap)
+
+    # aux loss (Switch-style load balancing)
+    density = dispatch.sum(axis=(1, 3)) / gs                     # (G, E)
+    router_mean = probs.mean(axis=1)                             # (G, E)
+    aux = jnp.mean(density * router_mean) * cfg.n_experts ** 2
+
+    xin = jnp.einsum("gsec,gsd->egcd", dispatch.astype(x.dtype), xg)
+    h = (jnp.einsum("egcd,edf->egcf", xin, p["moe_wi"])
+         * jax.nn.silu(jnp.einsum("egcd,edf->egcf", xin, p["moe_wg"])))
+    out_e = jnp.einsum("egcf,efd->egcd", h, p["moe_wo"])
+    out = jnp.einsum("gsec,egcd->gsd", combine.astype(x.dtype), out_e)
+    return out.reshape(b, s, d), aux

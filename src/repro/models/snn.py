@@ -1,0 +1,124 @@
+"""Spiking neural network model — the paper's native workload.
+
+A feed-forward LIF MLP driven by event spike trains, built from the core
+modules: ZSPE spike-matmul semantics (C1), partial-MP-update LIF neurons
+(C2) and per-layer ("per-core") codebook weights (C3).  Trainable with
+surrogate-gradient BPTT; after training it can be quantized and mapped
+onto the ChipSimulator for cycle/energy accounting, or run through the
+Pallas kernels (ops.zspe_spmm / ops.lif_update) for the TPU path.
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import Sequence
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.neuron import LIFParams, LIFState, lif_step
+from repro.core.quant import CodebookConfig, dequantize, fake_quant, quantize
+
+
+@dataclasses.dataclass(frozen=True)
+class SNNConfig:
+    layer_sizes: tuple = (2312, 512, 10)
+    timesteps: int = 20
+    lif: LIFParams = LIFParams()
+    qat: bool = False                       # train with fake-quant (STE)
+    quant: CodebookConfig = CodebookConfig(n_levels=16, bit_width=8)
+
+
+def init_params(cfg: SNNConfig, key: jax.Array) -> list[jax.Array]:
+    params = []
+    sizes = cfg.layer_sizes
+    for i, (a, b) in enumerate(zip(sizes[:-1], sizes[1:])):
+        key, k = jax.random.split(key)
+        params.append(jax.random.normal(k, (a, b), jnp.float32)
+                      * (2.0 / a) ** 0.5)
+    return params
+
+
+def _layer_weights(w: jax.Array, cfg: SNNConfig) -> jax.Array:
+    if cfg.qat:
+        return fake_quant(w, cfg.quant.n_levels, cfg.quant.bit_width)
+    return w
+
+
+@partial(jax.jit, static_argnames=("cfg",))
+def forward(params: Sequence[jax.Array], cfg: SNNConfig,
+            spikes: jax.Array) -> tuple[jax.Array, dict]:
+    """spikes (B, T, N_in) -> (spike-count logits (B, n_out), stats).
+
+    stats: per-layer spike sparsity + total SOPs, feeding the energy model.
+    """
+    b, t, _ = spikes.shape
+    weights = [_layer_weights(w, cfg) for w in params]
+    states = [
+        LIFState(v=jnp.zeros((b, w.shape[1])),
+                 elapsed=jnp.zeros((b, w.shape[1]), jnp.int32))
+        for w in weights
+    ]
+
+    nominal_per_step = b * float(
+        sum(wa * wb for wa, wb in zip(cfg.layer_sizes[:-1], cfg.layer_sizes[1:])))
+
+    def step(carry, s_t):
+        states = carry
+        cur_in = s_t
+        new_states = []
+        spikes_out = None
+        tot_sops = 0.0
+        touched = 0.0
+        for w, st in zip(weights, states):
+            current = cur_in @ w                      # ZSPE semantics
+            nnz = jnp.sum(cur_in != 0)
+            tot_sops += nnz * w.shape[1]
+            st2, out, upd = lif_step(st, current, cfg.lif)
+            touched += jnp.sum(upd)
+            new_states.append(st2)
+            cur_in = out
+            spikes_out = out
+        return new_states, (spikes_out, tot_sops, touched)
+
+    states, (out_spikes, sops, touched) = jax.lax.scan(
+        step, states, spikes.transpose(1, 0, 2))
+    counts = out_spikes.sum(axis=0)                   # (B, n_out)
+    nominal_total = nominal_per_step * t
+    stats = {
+        "performed_sops": sops.sum(),
+        "nominal_sops": jnp.asarray(nominal_total),
+        "sparsity": 1.0 - sops.sum() / nominal_total,
+        "touched": touched.sum(),
+    }
+    return counts, stats
+
+
+def loss_fn(params, cfg: SNNConfig, spikes, labels):
+    counts, stats = forward(params, cfg, spikes)
+    # rate-coded readout: softmax over spike counts
+    logp = jax.nn.log_softmax(counts)
+    loss = -jnp.mean(jnp.take_along_axis(logp, labels[:, None], axis=1))
+    return loss, stats
+
+
+def accuracy(params, cfg: SNNConfig, spikes, labels) -> jax.Array:
+    counts, _ = forward(params, cfg, spikes)
+    return jnp.mean((jnp.argmax(counts, axis=-1) == labels).astype(jnp.float32))
+
+
+@partial(jax.jit, static_argnames=("cfg", "lr"))
+def sgd_step(params, cfg: SNNConfig, spikes, labels, lr: float = 0.5):
+    (loss, stats), grads = jax.value_and_grad(loss_fn, has_aux=True)(
+        params, cfg, spikes, labels)
+    new_params = [p - lr * g for p, g in zip(params, grads)]
+    return new_params, loss, stats
+
+
+def quantize_for_chip(params, cfg: SNNConfig):
+    """Post-training quantization to the chip's per-core codebooks."""
+    return [quantize(w, cfg.quant) for w in params]
+
+
+def dequantized(qparams):
+    return [dequantize(q) for q in qparams]

@@ -1,0 +1,126 @@
+"""Spiking convolutional network — the paper's DVS-Gesture / CIFAR-10
+workload class (the chip maps conv layers onto cores via im2col-style
+synapse fan-in; we do the same: each conv layer's SOPs/sparsity feed the
+identical energy model).
+
+Conv LIF layers with surrogate-gradient BPTT; average-pool between
+stages; rate-coded readout.  Kept deliberately compact — the dense-SNN
+model (models/snn.py) carries the full feature set; this adds the conv
+workload shape for Table I's DVS/CIFAR rows.
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.neuron import LIFParams, LIFState, lif_step
+
+
+@dataclasses.dataclass(frozen=True)
+class ConvSNNConfig:
+    in_shape: tuple = (16, 16, 2)         # H, W, C (DVS: 2 polarity channels)
+    channels: tuple = (8, 16)             # conv channels per stage
+    kernel: int = 3
+    n_classes: int = 10
+    timesteps: int = 8
+    lif: LIFParams = LIFParams()
+
+
+def init_params(cfg: ConvSNNConfig, key: jax.Array) -> dict:
+    params = {}
+    c_in = cfg.in_shape[-1]
+    for i, c_out in enumerate(cfg.channels):
+        key, k = jax.random.split(key)
+        fan_in = cfg.kernel * cfg.kernel * c_in
+        params[f"conv{i}"] = jax.random.normal(
+            k, (cfg.kernel, cfg.kernel, c_in, c_out)) * (2.0 / fan_in) ** 0.5
+        c_in = c_out
+    h = cfg.in_shape[0] // (2 ** len(cfg.channels))
+    w = cfg.in_shape[1] // (2 ** len(cfg.channels))
+    key, k = jax.random.split(key)
+    params["head"] = jax.random.normal(
+        k, (h * w * c_in, cfg.n_classes)) * (2.0 / (h * w * c_in)) ** 0.5
+    return params
+
+
+def _conv(x, w):
+    return jax.lax.conv_general_dilated(
+        x, w, window_strides=(1, 1), padding="SAME",
+        dimension_numbers=("NHWC", "HWIO", "NHWC"))
+
+
+def _pool(x):
+    return jax.lax.reduce_window(
+        x, 0.0, jax.lax.add, (1, 2, 2, 1), (1, 2, 2, 1), "VALID") / 4.0
+
+
+@partial(jax.jit, static_argnames=("cfg",))
+def forward(params: dict, cfg: ConvSNNConfig, spikes: jax.Array):
+    """spikes (B, T, H, W, C) -> (counts (B, classes), stats)."""
+    b, t = spikes.shape[:2]
+    h, w, _ = cfg.in_shape
+
+    def make_state(shape):
+        return LIFState(v=jnp.zeros(shape), elapsed=jnp.zeros(shape, jnp.int32))
+
+    shapes = []
+    hh, ww, cc = h, w, cfg.in_shape[-1]
+    for c_out in cfg.channels:
+        shapes.append((b, hh, ww, c_out))
+        hh, ww, cc = hh // 2, ww // 2, c_out
+    head_state_shape = (b, cfg.n_classes)
+    states = [make_state(s) for s in shapes] + [make_state(head_state_shape)]
+
+    def step(carry, s_t):
+        states = carry
+        x = s_t                                       # (B, H, W, C) {0,1}
+        new_states = []
+        sops = 0.0
+        nominal = 0.0
+        for i, _ in enumerate(cfg.channels):
+            wgt = params[f"conv{i}"]
+            cur = _conv(x, wgt)
+            fan = wgt.shape[0] * wgt.shape[1] * wgt.shape[2] * wgt.shape[3]
+            sops += jnp.sum(x != 0) * wgt.shape[-1] * wgt.shape[0] * wgt.shape[1]
+            nominal += x.size * wgt.shape[-1] * wgt.shape[0] * wgt.shape[1]
+            st, out, _ = lif_step(states[i], cur, cfg.lif)
+            new_states.append(st)
+            x = _pool(out)
+        flat = x.reshape(b, -1)
+        cur = flat @ params["head"]
+        sops += jnp.sum(flat != 0) * cfg.n_classes
+        nominal += flat.size * cfg.n_classes
+        st, out, _ = lif_step(states[-1], cur, cfg.lif)
+        new_states.append(st)
+        return new_states, (out, sops, nominal)
+
+    states, (outs, sops, nominal) = jax.lax.scan(
+        step, states, spikes.transpose(1, 0, 2, 3, 4))
+    counts = outs.sum(axis=0)
+    stats = {
+        "performed_sops": sops.sum(),
+        "nominal_sops": nominal.sum(),
+        "sparsity": 1.0 - sops.sum() / jnp.maximum(nominal.sum(), 1.0),
+    }
+    return counts, stats
+
+
+def loss_fn(params, cfg, spikes, labels):
+    counts, stats = forward(params, cfg, spikes)
+    logp = jax.nn.log_softmax(counts)
+    return -jnp.mean(jnp.take_along_axis(logp, labels[:, None], 1)), stats
+
+
+@partial(jax.jit, static_argnames=("cfg", "lr"))
+def sgd_step(params, cfg, spikes, labels, lr: float = 0.3):
+    (loss, stats), grads = jax.value_and_grad(loss_fn, has_aux=True)(
+        params, cfg, spikes, labels)
+    return jax.tree.map(lambda p, g: p - lr * g, params, grads), loss, stats
+
+
+def accuracy(params, cfg, spikes, labels):
+    counts, _ = forward(params, cfg, spikes)
+    return jnp.mean((jnp.argmax(counts, -1) == labels).astype(jnp.float32))

@@ -1,0 +1,585 @@
+"""Unified LM substrate: dense / MoE / SSM / hybrid / enc-dec / VLM models
+with scan-over-layers, train loss, prefill and one-token decode paths.
+
+All families share one parameter layout convention:
+    params = {"embed": (V, d), "unembed": (d, V), "final_norm": (d,),
+              "blocks": {stacked per-layer tensors, leading axis = layers},
+              ...family extras}
+and a parallel `specs` tree of logical axis names (see common.Initializer).
+
+Decode caches are NamedTuples stacked along a leading `layers` axis so the
+layer scan can carry them.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import attention as ATT
+from repro.models import mamba2 as M2
+from repro.models import moe as MOE
+from repro.models.common import (
+    ArchConfig,
+    Initializer,
+    cross_entropy_loss,
+    rms_norm,
+    swiglu,
+)
+
+
+# ---------------------------------------------------------------------------
+# Init
+# ---------------------------------------------------------------------------
+
+def _shard_ssm_heads(cfg: ArchConfig) -> bool:
+    """mamba2-130m has 24 heads (not divisible by tp=16): replicate heads."""
+    _, nh, _, _ = M2.dims(cfg)
+    return nh % 16 == 0
+
+
+def init_model(cfg: ArchConfig, key: jax.Array):
+    init = Initializer(key, cfg.dtype)
+    params: dict = {}
+    specs: dict = {}
+    init.dense(params, specs, "embed", (cfg.vocab, cfg.d_model),
+               ("vocab", "embed"), scale=1.0)
+    init.dense(params, specs, "unembed", (cfg.d_model, cfg.vocab),
+               ("embed", "vocab"))
+    init.ones(params, specs, "final_norm", (cfg.d_model,), (None,))
+
+    blocks: dict = {}
+    bspecs: dict = {}
+    L = cfg.n_layers
+    if cfg.family in ("dense", "vlm", "moe"):
+        ATT.init_attention(init, cfg, L, blocks, bspecs)
+        init.ones(blocks, bspecs, "ln1", (cfg.d_model,), (None,), stacked=L)
+        init.ones(blocks, bspecs, "ln2", (cfg.d_model,), (None,), stacked=L)
+        if cfg.family == "moe":
+            MOE.init_moe(init, cfg, L, blocks, bspecs)
+        else:
+            _init_mlp(init, cfg, L, blocks, bspecs)
+    elif cfg.family == "ssm":
+        M2.init_mamba2(init, cfg, L, blocks, bspecs,
+                       shard_heads=_shard_ssm_heads(cfg))
+        init.ones(blocks, bspecs, "ln1", (cfg.d_model,), (None,), stacked=L)
+    elif cfg.family == "hybrid":
+        M2.init_mamba2(init, cfg, L, blocks, bspecs, shard_heads=True)
+        init.ones(blocks, bspecs, "ln1", (cfg.d_model,), (None,), stacked=L)
+        # one *shared* attention block (zamba2), applied every attn_every
+        shared: dict = {}
+        sspecs: dict = {}
+        ATT.init_attention(init, cfg, 0, shared, sspecs)
+        _unstack(shared, sspecs)
+        init.ones(shared, sspecs, "ln_attn", (cfg.d_model,), (None,))
+        params["shared_attn"] = shared
+        specs["shared_attn"] = sspecs
+    elif cfg.family == "audio":
+        # decoder blocks (self + cross attention + mlp)
+        ATT.init_attention(init, cfg, L, blocks, bspecs, cross=True)
+        init.ones(blocks, bspecs, "ln1", (cfg.d_model,), (None,), stacked=L)
+        init.ones(blocks, bspecs, "ln_x", (cfg.d_model,), (None,), stacked=L)
+        init.ones(blocks, bspecs, "ln2", (cfg.d_model,), (None,), stacked=L)
+        _init_mlp(init, cfg, L, blocks, bspecs)
+        enc: dict = {}
+        especs: dict = {}
+        EL = cfg.enc_layers
+        ATT.init_attention(init, cfg, EL, enc, especs)
+        init.ones(enc, especs, "ln1", (cfg.d_model,), (None,), stacked=EL)
+        init.ones(enc, especs, "ln2", (cfg.d_model,), (None,), stacked=EL)
+        _init_mlp(init, cfg, EL, enc, especs)
+        params["encoder"] = enc
+        specs["encoder"] = especs
+        init.ones(params, specs, "enc_final_norm", (cfg.d_model,), (None,))
+    else:
+        raise ValueError(cfg.family)
+
+    params["blocks"] = blocks
+    specs["blocks"] = bspecs
+    return params, specs
+
+
+def _init_mlp(init, cfg, n_layers, tree, specs):
+    d, ff = cfg.d_model, cfg.d_ff
+    init.dense(tree, specs, "mlp_wi", (d, ff), ("embed", "mlp"), stacked=n_layers)
+    init.dense(tree, specs, "mlp_wg", (d, ff), ("embed", "mlp"), stacked=n_layers)
+    init.dense(tree, specs, "mlp_wo", (ff, d), ("mlp", "embed"),
+               scale=ff ** -0.5 / (2 * max(n_layers, 1)) ** 0.5, stacked=n_layers)
+
+
+def _unstack(tree: dict, specs: dict):
+    """Remove the 0-length layer axis from init with stacked=0."""
+    for k in list(tree.keys()):
+        if tree[k].ndim >= 1 and tree[k].shape[0] == 0:
+            raise AssertionError("stacked=0 must not be used with Initializer")
+    # init_attention(stacked=0) produces unstacked params already — noop.
+
+
+# ---------------------------------------------------------------------------
+# Blocks
+# ---------------------------------------------------------------------------
+
+def _attn_mlp_block(x, lp, cfg: ArchConfig, *, moe: bool, constraint=None):
+    h = ATT.attention_train(rms_norm(x, lp["ln1"], cfg.norm_eps), lp, cfg)
+    x = x + h
+    y = rms_norm(x, lp["ln2"], cfg.norm_eps)
+    if moe:
+        f, aux = MOE.moe_ffn(y, lp, cfg)
+    else:
+        f, aux = swiglu(y, lp["mlp_wi"], lp["mlp_wg"], lp["mlp_wo"]), 0.0
+    if cfg.constrain_ffn_out and constraint is not None:
+        # shard the ffn output before the residual add: the partial-sum
+        # all-reduce becomes reduce-scatter + local add (§Perf H1)
+        f = constraint(f)
+    return x + f, aux
+
+
+def _ssm_block(x, lp, cfg: ArchConfig):
+    return x + M2.mamba2_forward(rms_norm(x, lp["ln1"], cfg.norm_eps), lp, cfg)
+
+
+# ---------------------------------------------------------------------------
+# Forward: training loss
+# ---------------------------------------------------------------------------
+
+def embed_tokens(params, cfg: ArchConfig, tokens: jax.Array) -> jax.Array:
+    return params["embed"].astype(cfg.dtype)[tokens]
+
+
+def _maybe_concat_patches(x, batch, cfg: ArchConfig):
+    if cfg.family == "vlm" and "patch_embeds" in batch:
+        x = jnp.concatenate([batch["patch_embeds"].astype(x.dtype), x], axis=1)
+    return x
+
+
+REMAT_POLICIES = {
+    "nothing": jax.checkpoint_policies.nothing_saveable,
+    "dots": jax.checkpoint_policies.dots_with_no_batch_dims_saveable,
+    "everything": jax.checkpoint_policies.everything_saveable,
+}
+
+
+def _scan_blocks(x, params, cfg: ArchConfig, block_fn, constraint=None):
+    """Remat'd scan over stacked layer params.  The remat policy is a perf
+    knob (§Perf H1): full remat re-executes the sequence-parallel
+    all-gathers in the backward pass; saving dot outputs trades HBM for
+    collective traffic."""
+
+    policy = REMAT_POLICIES[getattr(cfg, "remat_policy", "nothing")]
+
+    @functools.partial(jax.checkpoint, policy=policy)
+    def body(carry, lp):
+        out, aux = block_fn(carry, lp)
+        if constraint is not None:
+            out = constraint(out)
+        return out, aux
+
+    x, auxs = jax.lax.scan(body, x, params["blocks"])
+    return x, auxs
+
+
+def forward_train(params, cfg: ArchConfig, batch: dict,
+                  constraint=None) -> jax.Array:
+    """Returns scalar loss.  batch: tokens (B,S), labels (B,S) [+ extras]."""
+    tokens = batch["tokens"]
+    x = embed_tokens(params, cfg, tokens)
+    x = _maybe_concat_patches(x, batch, cfg)
+    if constraint is not None:
+        x = constraint(x)
+
+    aux_total = 0.0
+    if cfg.family in ("dense", "vlm"):
+        x, _ = _scan_blocks(x, params, cfg,
+                            lambda c, lp: _attn_mlp_block(
+                                c, lp, cfg, moe=False, constraint=constraint),
+                            constraint)
+    elif cfg.family == "moe":
+        x, auxs = _scan_blocks(x, params, cfg,
+                               lambda c, lp: _attn_mlp_block(
+                                   c, lp, cfg, moe=True, constraint=constraint),
+                               constraint)
+        aux_total = 0.01 * jnp.sum(auxs)
+    elif cfg.family == "ssm":
+        x, _ = _scan_blocks(x, params, cfg,
+                            lambda c, lp: (_ssm_block(c, lp, cfg), 0.0),
+                            constraint)
+    elif cfg.family == "hybrid":
+        x = _hybrid_forward(x, params, cfg, constraint)
+    elif cfg.family == "audio":
+        enc = _encoder_forward(params, cfg, batch["frames"], constraint)
+        x = _decoder_forward(x, params, cfg, enc, constraint)
+    else:
+        raise ValueError(cfg.family)
+
+    x = rms_norm(x, params["final_norm"], cfg.norm_eps)
+    if cfg.family == "vlm" and "patch_embeds" in batch:
+        x = x[:, batch["patch_embeds"].shape[1]:]      # loss on text positions
+    logits = jnp.einsum("bsd,dv->bsv", x, params["unembed"].astype(cfg.dtype))
+    loss = cross_entropy_loss(logits, batch["labels"],
+                              batch.get("loss_mask"))
+    return loss + aux_total
+
+
+def _hybrid_forward(x, params, cfg: ArchConfig, constraint=None):
+    """zamba2: shared attention block before every `attn_every` SSM layers."""
+    k = cfg.attn_every or 6
+    L = cfg.n_layers
+    assert L % k == 0, (L, k)
+    groups = L // k
+    stacked = jax.tree.map(
+        lambda a: a.reshape(groups, k, *a.shape[1:]), params["blocks"])
+    shared = params["shared_attn"]
+
+    def group_body(carry, group_params):
+        h = ATT.attention_train(
+            rms_norm(carry, shared["ln_attn"], cfg.norm_eps), shared, cfg)
+        if cfg.sliding_window:
+            pass  # window applied inside attention via cfg
+        carry = carry + h
+        if constraint is not None:
+            carry = constraint(carry)
+
+        @functools.partial(jax.checkpoint,
+                           policy=jax.checkpoint_policies.nothing_saveable)
+        def inner(c, lp):
+            out = _ssm_block(c, lp, cfg)
+            if constraint is not None:
+                out = constraint(out)
+            return out, 0.0
+
+        carry, _ = jax.lax.scan(inner, carry, group_params)
+        return carry, 0.0
+
+    x, _ = jax.lax.scan(jax.checkpoint(group_body), x, stacked)
+    return x
+
+
+def _encoder_forward(params, cfg: ArchConfig, frames, constraint=None):
+    """whisper encoder over stub frame embeddings (B, F, d)."""
+    x = frames.astype(cfg.dtype)
+
+    @functools.partial(jax.checkpoint, policy=jax.checkpoint_policies.nothing_saveable)
+    def body(c, lp):
+        h = ATT.attention_encoder(rms_norm(c, lp["ln1"], cfg.norm_eps), lp, cfg)
+        c = c + h
+        f = swiglu(rms_norm(c, lp["ln2"], cfg.norm_eps), lp["mlp_wi"], lp["mlp_wg"], lp["mlp_wo"])
+        c = c + f
+        if constraint is not None:
+            c = constraint(c)
+        return c, 0.0
+
+    x, _ = jax.lax.scan(body, x, params["encoder"])
+    return rms_norm(x, params["enc_final_norm"], cfg.norm_eps)
+
+
+def _decoder_forward(x, params, cfg: ArchConfig, enc, constraint=None):
+    @functools.partial(jax.checkpoint, policy=jax.checkpoint_policies.nothing_saveable)
+    def body(c, lp):
+        h = ATT.attention_train(rms_norm(c, lp["ln1"], cfg.norm_eps), lp, cfg)
+        c = c + h
+        hx = ATT.attention_cross(rms_norm(c, lp["ln_x"], cfg.norm_eps), enc, lp, cfg)
+        c = c + hx
+        f = swiglu(rms_norm(c, lp["ln2"], cfg.norm_eps), lp["mlp_wi"], lp["mlp_wg"], lp["mlp_wo"])
+        c = c + f
+        if constraint is not None:
+            c = constraint(c)
+        return c, 0.0
+
+    x, _ = jax.lax.scan(body, x, params["blocks"])
+    return x
+
+
+# ---------------------------------------------------------------------------
+# Serving: prefill + decode
+# ---------------------------------------------------------------------------
+
+class DecodeState(NamedTuple):
+    """Per-family stacked caches + current position."""
+
+    kv: Any            # KVCache stacked (L, B, kv, S, hd) or () if unused
+    ssm: Any           # SSMCache stacked (L, ...) or ()
+    shared_kv: Any     # hybrid: (groups, B, kv, S, hd) for the shared block
+    enc_out: Any       # audio: encoder output (B, F, d)
+    pos: jax.Array     # scalar int32
+
+
+def init_decode_state(cfg: ArchConfig, batch: int, cache_len: int) -> DecodeState:
+    dt = cfg.kv_cache_dtype or cfg.dtype     # int8 KV cache perf option
+    L = cfg.n_layers
+    kv = ()
+    ssm = ()
+    shared = ()
+    enc = ()
+    if cfg.family in ("dense", "vlm", "moe", "audio"):
+        kv = ATT.KVCache(
+            k=jnp.zeros((L, batch, cfg.n_kv_heads, cache_len, cfg.hd), dt),
+            v=jnp.zeros((L, batch, cfg.n_kv_heads, cache_len, cfg.hd), dt))
+    if cfg.family in ("ssm", "hybrid"):
+        c = M2.init_cache(cfg, batch, cfg.dtype)
+        ssm = M2.SSMCache(conv=jnp.broadcast_to(c.conv, (L, *c.conv.shape)),
+                          state=jnp.broadcast_to(c.state, (L, *c.state.shape)))
+    if cfg.family == "hybrid":
+        g = cfg.n_layers // (cfg.attn_every or 6)
+        shared = ATT.KVCache(
+            k=jnp.zeros((g, batch, cfg.n_kv_heads, cache_len, cfg.hd), dt),
+            v=jnp.zeros((g, batch, cfg.n_kv_heads, cache_len, cfg.hd), dt))
+    if cfg.family == "audio":
+        enc = jnp.zeros((batch, cfg.enc_frames, cfg.d_model), cfg.dtype)
+    return DecodeState(kv=kv, ssm=ssm, shared_kv=shared, enc_out=enc,
+                       pos=jnp.zeros((), jnp.int32))
+
+
+def forward_decode(params, cfg: ArchConfig, state: DecodeState,
+                   tokens: jax.Array, constraint=None, param_transform=None):
+    """One-token decode.  tokens (B, 1) -> (logits (B, V), new state).
+
+    `param_transform` is applied to each layer's params inside the scan
+    body — the codebook-dequant hook (quant/lm_quant.py): weights stream
+    from HBM as int8 indexes and are expanded tile-wise before the MXU.
+    """
+    pt = param_transform or (lambda lp: lp)
+    x = embed_tokens(params, cfg, tokens)
+    if constraint is not None:
+        x = constraint(x)
+    pos = state.pos
+
+    if cfg.family in ("dense", "vlm", "moe"):
+        # The cache stack rides in the scan *carry* (not xs/ys): the body
+        # dynamic-slices layer l, updates one token slot, and writes the
+        # slice back — XLA keeps the while-carried buffer in place, so HBM
+        # traffic is one cache *read* per layer instead of a full-stack
+        # copy per step (§Perf H3: 735 GB -> ~14 GB on moonshot decode).
+        def body(carry, scanned):
+            x_c, kv_stack, layer = carry
+            lp = scanned
+            lp = pt(lp)
+            cache = ATT.KVCache(
+                k=jax.lax.dynamic_index_in_dim(kv_stack.k, layer, 0, False),
+                v=jax.lax.dynamic_index_in_dim(kv_stack.v, layer, 0, False))
+            h, new_cache = ATT.attention_decode(
+                rms_norm(x_c, lp["ln1"], cfg.norm_eps), lp, cfg, cache, pos)
+            x_c = x_c + h
+            y = rms_norm(x_c, lp["ln2"], cfg.norm_eps)
+            if cfg.family == "moe":
+                f, _ = MOE.moe_ffn(y, lp, cfg)
+            else:
+                f = swiglu(y, lp["mlp_wi"], lp["mlp_wg"], lp["mlp_wo"])
+            x_c = x_c + f
+            if constraint is not None:
+                x_c = constraint(x_c)
+            kv_stack = ATT.KVCache(
+                k=jax.lax.dynamic_update_index_in_dim(
+                    kv_stack.k, new_cache.k, layer, 0),
+                v=jax.lax.dynamic_update_index_in_dim(
+                    kv_stack.v, new_cache.v, layer, 0))
+            return (x_c, kv_stack, layer + 1), None
+
+        (x, new_kv, _), _ = jax.lax.scan(
+            body, (x, state.kv, jnp.zeros((), jnp.int32)), params["blocks"])
+        new_state = state._replace(kv=new_kv, pos=pos + 1)
+
+    elif cfg.family == "ssm":
+        def body(carry, scanned):
+            lp, cache = scanned
+            lp = pt(lp)
+            h, new_cache = M2.mamba2_decode(
+                rms_norm(carry, lp["ln1"], cfg.norm_eps), lp, cfg, cache)
+            carry = carry + h
+            if constraint is not None:
+                carry = constraint(carry)
+            return carry, new_cache
+
+        x, new_ssm = jax.lax.scan(body, x, (params["blocks"], state.ssm))
+        new_state = state._replace(ssm=new_ssm, pos=pos + 1)
+
+    elif cfg.family == "hybrid":
+        k = cfg.attn_every or 6
+        g = cfg.n_layers // k
+        shared = params["shared_attn"]
+        stacked = jax.tree.map(
+            lambda a: a.reshape(g, k, *a.shape[1:]), params["blocks"])
+        ssm_g = jax.tree.map(
+            lambda a: a.reshape(g, k, *a.shape[1:]), state.ssm)
+
+        def group_body(carry, scanned):
+            x_c, skv_stack, gi = carry
+            gp, ssm_caches = scanned
+            skv = ATT.KVCache(
+                k=jax.lax.dynamic_index_in_dim(skv_stack.k, gi, 0, False),
+                v=jax.lax.dynamic_index_in_dim(skv_stack.v, gi, 0, False))
+            h, new_skv = ATT.attention_decode(
+                rms_norm(x_c, shared["ln_attn"], cfg.norm_eps),
+                shared, cfg, skv, pos)
+            x_c = x_c + h
+
+            def inner(c, sc):
+                lp, cache = sc
+                lp = pt(lp)
+                hh, nc = M2.mamba2_decode(
+                    rms_norm(c, lp["ln1"], cfg.norm_eps), lp, cfg, cache)
+                return c + hh, nc
+
+            x_c, new_ssm = jax.lax.scan(inner, x_c, (gp, ssm_caches))
+            if constraint is not None:
+                x_c = constraint(x_c)
+            skv_stack = ATT.KVCache(
+                k=jax.lax.dynamic_update_index_in_dim(
+                    skv_stack.k, new_skv.k, gi, 0),
+                v=jax.lax.dynamic_update_index_in_dim(
+                    skv_stack.v, new_skv.v, gi, 0))
+            return (x_c, skv_stack, gi + 1), new_ssm
+
+        (x, new_skv, _), new_ssm_g = jax.lax.scan(
+            group_body, (x, state.shared_kv, jnp.zeros((), jnp.int32)),
+            (stacked, ssm_g))
+        new_ssm = jax.tree.map(
+            lambda a: a.reshape(cfg.n_layers, *a.shape[2:]), new_ssm_g)
+        new_state = state._replace(ssm=new_ssm, shared_kv=new_skv, pos=pos + 1)
+
+    elif cfg.family == "audio":
+        enc = state.enc_out
+
+        def body(carry, scanned):
+            x_c, kv_stack, layer = carry
+            lp = pt(scanned)
+            cache = ATT.KVCache(
+                k=jax.lax.dynamic_index_in_dim(kv_stack.k, layer, 0, False),
+                v=jax.lax.dynamic_index_in_dim(kv_stack.v, layer, 0, False))
+            h, new_cache = ATT.attention_decode(
+                rms_norm(x_c, lp["ln1"], cfg.norm_eps), lp, cfg, cache, pos)
+            x_c = x_c + h
+            hx = ATT.attention_cross(
+                rms_norm(x_c, lp["ln_x"], cfg.norm_eps), enc, lp, cfg)
+            x_c = x_c + hx
+            f = swiglu(rms_norm(x_c, lp["ln2"], cfg.norm_eps),
+                       lp["mlp_wi"], lp["mlp_wg"], lp["mlp_wo"])
+            x_c = x_c + f
+            if constraint is not None:
+                x_c = constraint(x_c)
+            kv_stack = ATT.KVCache(
+                k=jax.lax.dynamic_update_index_in_dim(
+                    kv_stack.k, new_cache.k, layer, 0),
+                v=jax.lax.dynamic_update_index_in_dim(
+                    kv_stack.v, new_cache.v, layer, 0))
+            return (x_c, kv_stack, layer + 1), None
+
+        (x, new_kv, _), _ = jax.lax.scan(
+            body, (x, state.kv, jnp.zeros((), jnp.int32)), params["blocks"])
+        new_state = state._replace(kv=new_kv, pos=pos + 1)
+    else:
+        raise ValueError(cfg.family)
+
+    x = rms_norm(x, params["final_norm"], cfg.norm_eps)
+    logits = jnp.einsum("bsd,dv->bsv", x, params["unembed"].astype(cfg.dtype))
+    return logits[:, 0], new_state
+
+
+def forward_prefill(params, cfg: ArchConfig, batch: dict, cache_len: int,
+                    constraint=None, param_transform=None):
+    """Prefill a prompt (B, S); returns (last-token logits, DecodeState).
+
+    Implemented as full forward + cache population.  SSM/hybrid families
+    return their recurrent state; attention families return KV caches.
+    `param_transform` = the C3 codebook-dequant hook (as in forward_decode).
+    """
+    pt = param_transform or (lambda lp: lp)
+    tokens = batch["tokens"]
+    b, s = tokens.shape
+    x = embed_tokens(params, cfg, tokens)
+    x = _maybe_concat_patches(x, batch, cfg)
+    s = x.shape[1]                 # vlm: patches occupy cache positions too
+    if constraint is not None:
+        x = constraint(x)
+    state = init_decode_state(cfg, b, cache_len)
+
+    if cfg.family in ("dense", "vlm", "moe"):
+        def body(carry, scanned):
+            lp = pt(scanned)
+            h, cache = ATT.attention_prefill(
+                rms_norm(carry, lp["ln1"], cfg.norm_eps), lp, cfg, cache_len)
+            carry = carry + h
+            y = rms_norm(carry, lp["ln2"], cfg.norm_eps)
+            if cfg.family == "moe":
+                f, _ = MOE.moe_ffn(y, lp, cfg)
+            else:
+                f = swiglu(y, lp["mlp_wi"], lp["mlp_wg"], lp["mlp_wo"])
+            carry = carry + f
+            if constraint is not None:
+                carry = constraint(carry)
+            return carry, cache
+
+        x, kv = jax.lax.scan(body, x, params["blocks"])
+        state = state._replace(kv=kv, pos=jnp.asarray(s, jnp.int32))
+
+    elif cfg.family == "ssm":
+        def body(carry, lp):
+            lp = pt(lp)
+            h, cache = M2.mamba2_forward(
+                rms_norm(carry, lp["ln1"], cfg.norm_eps), lp, cfg,
+                return_cache=True)
+            carry = carry + h
+            if constraint is not None:
+                carry = constraint(carry)
+            return carry, cache
+
+        x, ssm = jax.lax.scan(body, x, params["blocks"])
+        state = state._replace(ssm=ssm, pos=jnp.asarray(s, jnp.int32))
+
+    elif cfg.family == "hybrid":
+        k = cfg.attn_every or 6
+        g = cfg.n_layers // k
+        shared = params["shared_attn"]
+        stacked = jax.tree.map(
+            lambda a: a.reshape(g, k, *a.shape[1:]), params["blocks"])
+
+        def group_body(carry, gp):
+            h, skv = ATT.attention_prefill(
+                rms_norm(carry, shared["ln_attn"], cfg.norm_eps),
+                shared, cfg, cache_len)
+            carry = carry + h
+
+            def inner(c, lp):
+                lp = pt(lp)
+                hh, cache = M2.mamba2_forward(
+                    rms_norm(c, lp["ln1"], cfg.norm_eps), lp, cfg,
+                    return_cache=True)
+                return c + hh, cache
+
+            carry, ssm = jax.lax.scan(inner, carry, gp)
+            if constraint is not None:
+                carry = constraint(carry)
+            return carry, (ssm, skv)
+
+        x, (ssm_g, skv) = jax.lax.scan(group_body, x, stacked)
+        ssm = jax.tree.map(lambda a: a.reshape(cfg.n_layers, *a.shape[2:]), ssm_g)
+        state = state._replace(ssm=ssm, shared_kv=skv,
+                               pos=jnp.asarray(s, jnp.int32))
+
+    elif cfg.family == "audio":
+        enc = _encoder_forward(params, cfg, batch["frames"], constraint)
+
+        def body(carry, lp):
+            lp = pt(lp)
+            h, cache = ATT.attention_prefill(
+                rms_norm(carry, lp["ln1"], cfg.norm_eps), lp, cfg, cache_len)
+            carry = carry + h
+            hx = ATT.attention_cross(
+                rms_norm(carry, lp["ln_x"], cfg.norm_eps), enc, lp, cfg)
+            carry = carry + hx
+            f = swiglu(rms_norm(carry, lp["ln2"], cfg.norm_eps),
+                       lp["mlp_wi"], lp["mlp_wg"], lp["mlp_wo"])
+            carry = carry + f
+            if constraint is not None:
+                carry = constraint(carry)
+            return carry, cache
+
+        x, kv = jax.lax.scan(body, x, params["blocks"])
+        state = state._replace(kv=kv, enc_out=enc, pos=jnp.asarray(s, jnp.int32))
+    else:
+        raise ValueError(cfg.family)
+
+    x = rms_norm(x, params["final_norm"], cfg.norm_eps)
+    logits = jnp.einsum("bd,dv->bv", x[:, -1], params["unembed"].astype(cfg.dtype))
+    return logits, state

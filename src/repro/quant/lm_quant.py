@@ -1,0 +1,122 @@
+"""Codebook (C3) quantization applied to LM weights for serving.
+
+The chip stores synapse weights as log2(N)-bit indexes into a per-core
+N x W-bit table; the LM analogue quantizes every matmul weight to int8
+indexes + a per-layer codebook.  Serving then reads ~4x fewer HBM bytes
+per weight (int8 idx vs bf16) — the memory-roofline lever used by perf
+hillclimb H3 (EXPERIMENTS.md §Perf).
+
+Integration: `quantize_blocks` maps the stacked per-layer `blocks` tree to
+{name: {"idx", "cb"}}; `make_param_transform` returns the function that
+reconstructs weights inside the layer scan (so the dequant — on TPU, the
+kernels/codebook_matmul Pallas kernel; in the jnp graph, a small gather —
+happens per-tile in VMEM, and HLO weight traffic is the int8 indexes).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.quant import (CodebookConfig, quantize, dequantize,
+                              pack_indexes_4bit, unpack_indexes_4bit)
+
+# weights worth quantizing: stacked (L, in, out) projection matrices
+_QUANT_MIN_SIZE = 1 << 16
+
+
+def _quantizable(name: str, x) -> bool:
+    return (x.ndim >= 3 and x.size >= _QUANT_MIN_SIZE
+            and x.dtype in (jnp.bfloat16, jnp.float32)
+            and not name.startswith("ln"))
+
+
+def quantize_blocks(blocks: dict, cfg: CodebookConfig | None = None,
+                    pack_4bit: bool = False) -> dict:
+    """blocks {name: (L, ...)} -> {name: {"idx": int8|packed uint8,
+    "cb": (L, N)}} for quantizable leaves; others pass through unchanged.
+
+    pack_4bit (N<=16 only) stores two indexes per byte — the chip's real
+    synapse-SRAM format (log2(16)=4 bits): 4x fewer weight bytes than bf16.
+    """
+    cfg = cfg or CodebookConfig(n_levels=16, bit_width=8)
+    out = {}
+    for name, w in blocks.items():
+        if not _quantizable(name, w):
+            out[name] = w
+            continue
+        L = w.shape[0]
+        flat = w.reshape(L, -1)
+
+        def q_one(row):
+            qt = quantize(row[None, :], cfg)
+            return qt.idx[0], qt.codebook[0]
+
+        idx, cb = jax.vmap(q_one)(flat.astype(jnp.float32))
+        idx = idx.reshape(w.shape).astype(jnp.int8)
+        entry = {"cb": cb.astype(jnp.float32)}
+        if pack_4bit:
+            assert cfg.n_levels <= 16, "4-bit packing needs N<=16"
+            assert w.shape[-1] % 2 == 0, "4-bit packing needs even last dim"
+            entry["idx4"] = pack_indexes_4bit(idx)
+        else:
+            entry["idx"] = idx
+        out[name] = entry
+    return out
+
+
+def make_param_transform(dtype=jnp.bfloat16):
+    """Returns lp-transform applied inside the layer scan: dequantize any
+    {"idx","cb"} leaf back to a dense weight (gather -> MXU input)."""
+
+    def transform(lp: dict) -> dict:
+        out = {}
+        for name, v in lp.items():
+            if isinstance(v, dict) and ("idx" in v or "idx4" in v):
+                if "idx4" in v:
+                    idx = unpack_indexes_4bit(v["idx4"],
+                                              v["idx4"].shape[-1] * 2)
+                else:
+                    idx = v["idx"]
+                idx = idx.astype(jnp.int32)
+                cb = v["cb"]
+                if cb.ndim == 1:          # inside the layer scan (unstacked)
+                    w = cb[idx]
+                else:                     # stacked (L, ...) view
+                    w = jax.vmap(lambda c, i: c[i])(cb, idx)
+                out[name] = w.astype(dtype)
+            else:
+                out[name] = v
+        return out
+
+    return transform
+
+
+def quantized_bytes(blocks: dict) -> tuple[int, int]:
+    """(bytes_bf16, bytes_quantized) for the weight-traffic comparison."""
+    before = after = 0
+    for name, v in blocks.items():
+        if isinstance(v, dict) and "idx" in v:
+            before += v["idx"].size * 2
+            after += v["idx"].size * 1 + v["cb"].size * 4
+        elif isinstance(v, dict) and "idx4" in v:
+            n_weights = v["idx4"].size * 2
+            before += n_weights * 2
+            after += v["idx4"].size + v["cb"].size * 4
+        else:
+            n = v.size
+            before += n * 2
+            after += n * 2
+    return before, after
+
+
+def quantization_report(blocks: dict, qblocks: dict) -> dict:
+    """Relative RMS error per quantized tensor (PTQ quality check)."""
+    tf = make_param_transform(jnp.float32)
+    deq = tf(qblocks)
+    report = {}
+    for name, w in blocks.items():
+        if isinstance(qblocks.get(name), dict):
+            err = jnp.sqrt(jnp.mean((w.astype(jnp.float32) - deq[name]) ** 2))
+            rms = jnp.sqrt(jnp.mean(w.astype(jnp.float32) ** 2))
+            report[name] = float(err / jnp.maximum(rms, 1e-12))
+    return report

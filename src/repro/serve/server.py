@@ -1,0 +1,101 @@
+"""Batched serving runtime: continuous-batching prefill + decode loop.
+
+The serving analogue of the chip's inference path: requests arrive, are
+batched (the 4 x 0.2 KB output buffers on-chip <-> per-slot logit queues
+here), prefilled, then decoded step-by-step with a static KV cache.  The
+decode step is the pjit'd, sharding-annotated function from launch.steps —
+identical to the one the dry-run lowers.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.launch import steps as ST
+from repro.models import transformer as T
+from repro.models.common import ArchConfig
+
+
+@dataclasses.dataclass
+class Request:
+    uid: int
+    prompt: np.ndarray            # (S,) int32
+    max_new_tokens: int = 16
+    out_tokens: list = dataclasses.field(default_factory=list)
+    done: bool = False
+
+
+class Server:
+    """Fixed-slot continuous batching over a single shared decode state."""
+
+    def __init__(self, cfg: ArchConfig, params, mesh, batch_slots: int = 4,
+                 cache_len: int = 256):
+        self.cfg = cfg
+        self.params = params
+        self.mesh = mesh
+        self.slots = batch_slots
+        self.cache_len = cache_len
+        pt = None
+        if cfg.quant_serving:
+            from repro.quant.lm_quant import make_param_transform
+            pt = make_param_transform(cfg.dtype)
+        raw_prefill = ST.make_prefill_step(cfg, mesh, cache_len)
+        if pt is not None:
+            import repro.models.transformer as _T
+            constraint = None
+            def raw_prefill(params, batch, _pt=pt):
+                return _T.forward_prefill(params, cfg, batch, cache_len,
+                                          param_transform=_pt)
+        self.prefill = jax.jit(raw_prefill)
+        self.decode = jax.jit(ST.make_decode_step(cfg, mesh))
+        self.queue: list[Request] = []
+        self.active: list[Request | None] = [None] * batch_slots
+
+    def submit(self, req: Request):
+        self.queue.append(req)
+
+    def _prefill_batch(self, reqs: list[Request]):
+        max_len = max(len(r.prompt) for r in reqs)
+        toks = np.zeros((len(reqs), max_len), np.int32)
+        for i, r in enumerate(reqs):
+            toks[i, -len(r.prompt):] = r.prompt     # left-pad
+        batch = {"tokens": jnp.asarray(toks)}
+        if self.cfg.family == "audio":
+            batch["frames"] = jnp.zeros(
+                (len(reqs), self.cfg.enc_frames, self.cfg.d_model), jnp.float32)
+        if self.cfg.family == "vlm":
+            batch["patch_embeds"] = jnp.zeros(
+                (len(reqs), self.cfg.n_patches, self.cfg.d_model), jnp.float32)
+        with self.mesh:
+            logits, state = self.prefill(self.params, batch)
+        return logits, state
+
+    def run(self, sample: Callable | None = None, max_steps: int = 512
+            ) -> list[Request]:
+        """Drain the queue: group into one batch, prefill, decode to done."""
+        sample = sample or (lambda lg: jnp.argmax(lg, axis=-1))
+        finished: list[Request] = []
+        while self.queue:
+            batch_reqs = [self.queue.pop(0)
+                          for _ in range(min(self.slots, len(self.queue)))]
+            logits, state = self._prefill_batch(batch_reqs)
+            next_tok = sample(logits)
+            for step in range(max_steps):
+                for i, r in enumerate(batch_reqs):
+                    if not r.done:
+                        r.out_tokens.append(int(next_tok[i]))
+                        if len(r.out_tokens) >= r.max_new_tokens:
+                            r.done = True
+                if all(r.done for r in batch_reqs):
+                    break
+                with self.mesh:
+                    logits, state = self.decode(
+                        self.params, state,
+                        jnp.asarray(next_tok)[:, None].astype(jnp.int32))
+                next_tok = sample(logits)
+            finished.extend(batch_reqs)
+        return finished

@@ -1,0 +1,91 @@
+"""LM training loop: pjit step + data pipeline + fault-tolerant runtime.
+
+This is the host-side program a real cluster runs per controller: build
+mesh -> build sharded step -> restore-or-init -> FaultTolerantLoop with
+async checkpoints and straggler policy.  On the CPU container it runs the
+same code over a host mesh (1..N host devices).
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+
+import jax
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.checkpoint.manager import CheckpointManager
+from repro.data.synthetic import TokenStream
+from repro.distributed.elastic import FaultTolerantLoop, StragglerPolicy
+from repro.launch import steps as ST
+from repro.models import transformer as T
+from repro.models.common import ArchConfig
+from repro.optim import adamw
+
+
+@dataclasses.dataclass(frozen=True)
+class TrainJobConfig:
+    batch: int = 8
+    seq_len: int = 128
+    num_steps: int = 100
+    save_every: int = 50
+    ckpt_dir: str = "/tmp/repro_ckpt"
+    seed: int = 0
+    lr: float = 3e-4
+
+
+class Trainer:
+    def __init__(self, cfg: ArchConfig, job: TrainJobConfig, mesh=None):
+        from repro.launch.mesh import make_host_mesh
+
+        self.cfg = cfg
+        self.job = job
+        self.mesh = mesh or make_host_mesh()
+        self.opt_cfg = adamw.AdamWConfig(lr=job.lr, warmup_steps=10,
+                                         total_steps=job.num_steps)
+        self.data = TokenStream(vocab=cfg.vocab, seq_len=job.seq_len,
+                                batch=job.batch, seed=job.seed)
+        self.ckpt = CheckpointManager(job.ckpt_dir)
+
+        batch_struct = jax.eval_shape(lambda: self.data.batch_at(0))
+        self._build(batch_struct)
+
+    def _build(self, batch_struct):
+        cfg, mesh = self.cfg, self.mesh
+        fn = ST.make_train_step(cfg, mesh, self.opt_cfg)
+        p_shapes, opt_shapes, inn, out = ST.train_shardings(cfg, mesh, batch_struct)
+        ns = lambda tree: jax.tree.map(
+            lambda s: NamedSharding(mesh, s), tree,
+            is_leaf=lambda x: isinstance(x, P))
+        self.p_shard = ns(inn[0])
+        self.opt_shard = ns(inn[1])
+        self.step_fn = jax.jit(fn, in_shardings=ns(inn), out_shardings=ns(out),
+                               donate_argnums=(0, 1))
+
+    def init_state(self):
+        with self.mesh:
+            params = jax.jit(
+                lambda k: T.init_model(self.cfg, k)[0],
+                out_shardings=self.p_shard,
+            )(jax.random.PRNGKey(self.job.seed))
+            opt = jax.jit(adamw.init, out_shardings=self.opt_shard)(params)
+        return {"params": params, "opt": opt}
+
+    def run(self, on_metrics=None) -> dict:
+        init = self.init_state()
+        loop = FaultTolerantLoop(
+            step_fn=self._loop_step,
+            ckpt_manager=self.ckpt,
+            save_every=self.job.save_every,
+            straggler=StragglerPolicy(),
+        )
+        state, start = loop.resume_or_init(
+            init, shardings={"params": self.p_shard, "opt": self.opt_shard})
+        state, step = loop.run(
+            state, self.data.batch_at, start, self.job.num_steps,
+            on_metrics=on_metrics)
+        return state
+
+    def _loop_step(self, state, batch):
+        with self.mesh:
+            params, opt, metrics = self.step_fn(state["params"], state["opt"], batch)
+        return {"params": params, "opt": opt}, metrics

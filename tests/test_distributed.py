@@ -1,0 +1,240 @@
+"""Distribution-layer tests: sharding rules, gradient compression
+convergence, straggler policy, elastic plans, roofline HLO parsing."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from jax.sharding import Mesh, PartitionSpec as P
+
+from repro.distributed import compression as COMP
+from repro.distributed import roofline as RL
+from repro.distributed import sharding as SH
+from repro.distributed.elastic import ElasticPlan, StragglerPolicy
+
+
+def fake_mesh(shape=(2, 2), axes=("data", "model")):
+    n = int(np.prod(shape))
+    devs = jax.devices()
+    if len(devs) < n:
+        pytest.skip("not enough devices for mesh test")
+    return Mesh(np.asarray(devs[:n]).reshape(shape), axes)
+
+
+class FakeMesh:
+    """Only .shape is consulted by spec_for — no devices needed."""
+
+    def __init__(self, shape: dict):
+        self.shape = shape
+
+
+def test_spec_for_divisibility_fallback():
+    mesh = FakeMesh({"data": 16, "model": 16})
+    # divisible: sharded
+    assert SH.spec_for((64, 128), ("embed", "heads"), mesh) == P("data", "model")
+    # kv dim of 8 not divisible by model=16 -> replicated
+    assert SH.spec_for((64, 8), ("embed", "kv_heads"), mesh) == P("data", None)
+    # no double-use of one mesh axis
+    s = SH.spec_for((64, 32, 32), ("experts", "embed", "mlp"), mesh)
+    used = [a for a in s if a is not None]
+    assert len(set(used)) == len(used)
+
+
+def test_spec_for_pod_axis_compound():
+    mesh = FakeMesh({"pod": 2, "data": 16, "model": 16})
+    s = SH.spec_for((64, 128), ("embed", "heads"), mesh)
+    assert s == P(("pod", "data"), "model")
+    # batch of 8 cannot take pod*data=32 -> falls to data=16? no (8%16);
+    # falls through to replicated
+    assert SH.spec_for((8,), ("batch",), mesh) == P(None)
+
+
+def test_decode_state_specs_kv_vs_seq_sharding():
+    mesh = FakeMesh({"data": 16, "model": 16})
+    kv_ok = jax.ShapeDtypeStruct((40, 128, 16, 4096, 128), jnp.bfloat16)
+    spec = SH.decode_state_specs(kv_ok, mesh)
+    assert spec == P(None, "data", "model", None, None)
+    kv_few_heads = jax.ShapeDtypeStruct((88, 128, 8, 32768, 128), jnp.bfloat16)
+    spec = SH.decode_state_specs(kv_few_heads, mesh)
+    assert spec == P(None, "data", None, "model", None)  # flash-decoding
+
+
+# ---------------------------------------------------------------------------
+# gradient compression
+# ---------------------------------------------------------------------------
+
+def test_compression_roundtrip_error_bounded():
+    g = jax.random.normal(jax.random.PRNGKey(0), (256,))
+    q, s, r = COMP.compress(g, jnp.zeros_like(g))
+    deq = COMP.decompress(q, s)
+    assert float(jnp.max(jnp.abs(deq - g))) <= float(s) / 2 + 1e-6
+
+
+def test_error_feedback_makes_compression_unbiased_over_time():
+    """Constant gradient: sum of compressed updates -> sum of true updates."""
+    g = jnp.asarray([0.003, -0.001, 0.5])    # small values vanish w/o EF
+    res = jnp.zeros_like(g)
+    acc = jnp.zeros_like(g)
+    for _ in range(200):
+        q, s, res = COMP.compress(g, res)
+        acc = acc + COMP.decompress(q, s)
+    np.testing.assert_allclose(np.asarray(acc / 200), np.asarray(g),
+                               rtol=0.02, atol=1e-4)
+
+
+def test_compressed_training_converges():
+    """Linear regression with int8+EF compressed grads still converges."""
+    key = jax.random.PRNGKey(1)
+    X = jax.random.normal(key, (128, 8))
+    w_true = jax.random.normal(jax.random.PRNGKey(2), (8,))
+    y = X @ w_true
+    w = jnp.zeros((8,))
+    state = COMP.init(jax.eval_shape(lambda: w))
+    for _ in range(300):
+        g = jax.grad(lambda w: jnp.mean((X @ w - y) ** 2))(w)
+        gq, state = COMP.compressed_grads(g, state)
+        w = w - 0.05 * gq
+    assert float(jnp.max(jnp.abs(w - w_true))) < 0.05
+
+
+# ---------------------------------------------------------------------------
+# straggler / elastic
+# ---------------------------------------------------------------------------
+
+def test_straggler_policy_strikes_and_evicts():
+    p = StragglerPolicy(deadline_factor=2.0, min_deadline_s=0.1, max_strikes=2)
+    for _ in range(10):
+        p.record_step(0.1)
+    assert p.check_worker(3, 0.05) == "ok"
+    assert p.check_worker(3, 10.0) == "skip"
+    assert p.check_worker(3, 10.0) == "evict"
+    assert 3 in p.evicted
+    # healthy worker clears strikes
+    assert p.check_worker(4, 10.0) == "skip"
+    assert p.check_worker(4, 0.05) == "ok"
+    assert p.check_worker(4, 10.0) == "skip"
+    assert 4 not in p.evicted
+
+
+def test_elastic_plan_shapes():
+    p = ElasticPlan.plan(512, model_parallel=16)
+    assert p.mesh_shape == (32, 16)
+    p = ElasticPlan.plan(496, model_parallel=16)   # 16 dead nodes
+    assert p.n_devices == 496 and p.mesh_shape[0] * p.mesh_shape[1] == 496
+    p = ElasticPlan.plan(7, model_parallel=16)     # degenerate
+    assert p.mesh_shape[0] * p.mesh_shape[1] == 7
+
+
+# ---------------------------------------------------------------------------
+# roofline HLO parsing
+# ---------------------------------------------------------------------------
+
+HLO_SAMPLE = """
+ENTRY %main (p0: f32[8,128]) -> f32[8,128] {
+  %p0 = f32[8,128]{1,0} parameter(0)
+  %ar = f32[8,128]{1,0} all-reduce(%p0), replica_groups={}, to_apply=%add
+  %ag = f32[16,128]{1,0} all-gather(%ar), dimensions={0}
+  ROOT %out = f32[8,128]{1,0} reduce-scatter(%ag), dimensions={0}
+}
+"""
+
+
+def test_collective_bytes_parsing():
+    out = RL.collective_bytes(HLO_SAMPLE)
+    assert out["op_counts"]["all-reduce"] == 1
+    assert out["op_counts"]["all-gather"] == 1
+    assert out["op_counts"]["reduce-scatter"] == 1
+    assert out["per_kind"]["all-reduce"] == 8 * 128 * 4
+    assert out["per_kind"]["all-gather"] == 16 * 128 * 4
+    assert out["total"] == (8 + 16 + 8) * 128 * 4
+
+
+def test_roofline_terms_and_bottleneck():
+    rep = RL.RooflineReport(
+        name="x", flops=197e12, bytes_accessed=819e9 / 2,
+        coll_bytes=50e9 * 2, model_flops=197e12 * 256, chips=256,
+        per_kind={}, op_counts={})
+    assert abs(rep.t_compute - 1.0) < 1e-9
+    assert abs(rep.t_memory - 0.5) < 1e-9
+    assert abs(rep.t_collective - 2.0) < 1e-9
+    assert rep.bottleneck == "collective"
+    assert abs(rep.useful_flops_ratio - 1.0) < 1e-9
+    assert abs(rep.roofline_fraction - 0.5) < 1e-9
+
+
+def test_model_flops_for_families():
+    from repro.configs import registry as R
+    from repro.models.common import SHAPES
+    cfg = R.get_arch("granite-3-8b")
+    t = RL.model_flops_for(cfg, SHAPES["train_4k"])
+    assert abs(t - 6 * cfg.param_count() * 256 * 4096) / t < 1e-6
+    d = RL.model_flops_for(cfg, SHAPES["decode_32k"])
+    assert d < t
+
+
+# ---------------------------------------------------------------------------
+# trip-count-aware static HLO analysis
+# ---------------------------------------------------------------------------
+
+def test_hlo_analysis_scan_flops_exact():
+    """cost_analysis counts a while body once; our analyzer multiplies by
+    the trip count and recovers the exact dot flops of a 10-layer scan."""
+    import jax
+    import jax.numpy as jnp
+    from repro.distributed.hlo_analysis import analyze
+
+    def scanned(x, ws):
+        def body(c, w):
+            return jnp.tanh(c @ w), None
+        out, _ = jax.lax.scan(body, x, ws)
+        return out
+
+    x = jax.ShapeDtypeStruct((64, 64), jnp.float32)
+    ws = jax.ShapeDtypeStruct((10, 64, 64), jnp.float32)
+    compiled = jax.jit(scanned).lower(x, ws).compile()
+    costs = analyze(compiled.as_text())
+    assert abs(costs.flops - 10 * 2 * 64 ** 3) / (10 * 2 * 64 ** 3) < 0.01
+    assert costs.trip_counts and list(costs.trip_counts.values()) == [10]
+    # under-counting baseline: xla reports ~1 layer
+    xla = compiled.cost_analysis()
+    xla = xla[0] if isinstance(xla, list) else xla
+    assert costs.flops > 5 * float(xla["flops"])
+
+
+def test_hlo_analysis_dus_is_inplace():
+    """decode-style cache update must cost O(slice), not O(cache)."""
+    import jax
+    import jax.numpy as jnp
+    from repro.distributed.hlo_analysis import analyze
+
+    def step(cache, new):
+        return jax.lax.dynamic_update_slice_in_dim(cache, new, 5, axis=0)
+
+    cache = jax.ShapeDtypeStruct((100_000, 128), jnp.float32)
+    new = jax.ShapeDtypeStruct((1, 128), jnp.float32)
+    compiled = jax.jit(step, donate_argnums=(0,)).lower(cache, new).compile()
+    costs = analyze(compiled.as_text())
+    cache_bytes = 100_000 * 128 * 4
+    assert costs.hbm_bytes < cache_bytes / 10, costs.hbm_bytes
+
+
+# ---------------------------------------------------------------------------
+# collective planner over NoC topologies
+# ---------------------------------------------------------------------------
+
+def test_collective_planner_topology_ordering():
+    from repro.distributed import collectives as C
+    rows = {r["topology"]: r for r in C.comparison()}
+    # torus sustains 2 edge-disjoint rings -> strictly cheaper all-reduce
+    assert rows["torus-4x8"]["all_reduce_ms"] < rows["2d-mesh-4x8"]["all_reduce_ms"]
+    # fullerene >= mesh min-degree (paper's degree argument)
+    assert rows["fullerene-32"]["min_degree"] >= rows["2d-mesh-4x8"]["min_degree"]
+
+
+def test_hierarchical_all_reduce_composes():
+    import numpy as np
+    from repro.core import noc as NOC
+    from repro.distributed import collectives as C
+    h = C.hierarchical_all_reduce(2, NOC.fullerene_adjacency(), 64 * 2**20)
+    assert h["total_s"] > 0
+    assert abs(h["total_s"] - (h["intra_rs_s"] + h["level2_ar_s"]
+                               + h["intra_ag_s"])) < 1e-12

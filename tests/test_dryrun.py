@@ -1,0 +1,51 @@
+"""Dry-run launcher smoke: real lower+compile in a subprocess (the 512
+placeholder-device XLA flag must be set before jax init, so these run out
+of process; the full 40-cell matrix runs via `python -m repro.launch.dryrun
+--all --both-meshes` and is recorded in EXPERIMENTS.md)."""
+import json
+import os
+import subprocess
+import sys
+
+import pytest
+
+SRC = os.path.join(os.path.dirname(__file__), "..", "src")
+
+
+def run_dryrun(*args):
+    env = dict(os.environ, PYTHONPATH=SRC)
+    return subprocess.run(
+        [sys.executable, "-m", "repro.launch.dryrun", *args],
+        capture_output=True, text=True, env=env, timeout=1200)
+
+
+@pytest.mark.slow
+def test_dryrun_single_pod_cell(tmp_path):
+    out = tmp_path / "r.json"
+    r = run_dryrun("--arch", "whisper-tiny", "--shape", "decode_32k",
+                   "--out", str(out))
+    assert r.returncode == 0, r.stdout + r.stderr
+    res = json.loads(out.read_text())
+    assert res[0]["status"] == "ok"
+    assert res[0]["roofline"]["hlo_flops"] > 0
+    assert res[0]["roofline"]["bottleneck"] in ("compute", "memory", "collective")
+
+
+@pytest.mark.slow
+def test_dryrun_multi_pod_cell(tmp_path):
+    out = tmp_path / "r.json"
+    r = run_dryrun("--arch", "granite-3-2b", "--shape", "decode_32k",
+                   "--multi-pod", "--out", str(out))
+    assert r.returncode == 0, r.stdout + r.stderr
+    res = json.loads(out.read_text())
+    assert res[0]["status"] == "ok"
+    assert res[0]["mesh"] == "2x16x16"
+
+
+@pytest.mark.slow
+def test_dryrun_skips_long500k_for_full_attention(tmp_path):
+    out = tmp_path / "r.json"
+    r = run_dryrun("--arch", "yi-9b", "--shape", "long_500k", "--out", str(out))
+    assert r.returncode == 0, r.stdout + r.stderr
+    res = json.loads(out.read_text())
+    assert res[0]["status"] == "skipped"

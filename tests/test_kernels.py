@@ -1,0 +1,215 @@
+"""Per-kernel validation: Pallas (interpret mode) vs pure-jnp oracles,
+with hypothesis shape/dtype sweeps."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.kernels import ops
+from repro.kernels.ref import codebook_matmul_ref, lif_update_ref, zspe_spmm_ref
+
+jax.config.update("jax_enable_x64", False)
+
+
+def rand(key, shape, dtype=jnp.float32):
+    return jax.random.normal(jax.random.PRNGKey(key), shape, dtype)
+
+
+# ---------------------------------------------------------------------------
+# codebook matmul
+# ---------------------------------------------------------------------------
+
+@settings(max_examples=12, deadline=None)
+@given(
+    m=st.integers(1, 150),
+    k=st.integers(1, 200),
+    n=st.integers(1, 180),
+    levels=st.sampled_from([4, 8, 16]),
+)
+def test_codebook_matmul_matches_ref(m, k, n, levels):
+    kx, ki, kc = 0, 1, 2
+    x = rand(kx, (m, k))
+    idx = jax.random.randint(jax.random.PRNGKey(ki), (k, n), 0, levels
+                             ).astype(jnp.int8)
+    cb = jnp.sort(rand(kc, (levels,)))
+    out = ops.codebook_matmul(x, idx, cb)
+    ref = codebook_matmul_ref(x, idx, cb)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                               rtol=1e-4, atol=1e-4 * k)
+
+
+def test_codebook_matmul_batched_x():
+    x = rand(0, (2, 3, 64))
+    idx = jax.random.randint(jax.random.PRNGKey(1), (64, 96), 0, 16).astype(jnp.int8)
+    cb = jnp.sort(rand(2, (16,)))
+    out = ops.codebook_matmul(x, idx, cb)
+    assert out.shape == (2, 3, 96)
+    np.testing.assert_allclose(
+        np.asarray(out.reshape(6, 96)),
+        np.asarray(codebook_matmul_ref(x.reshape(6, 64), idx, cb)),
+        rtol=1e-4, atol=1e-2)
+
+
+def test_codebook_matmul_grads_match_ref():
+    x = rand(0, (32, 48))
+    idx = jax.random.randint(jax.random.PRNGKey(1), (48, 40), 0, 16).astype(jnp.int8)
+    cb = jnp.sort(rand(2, (16,)))
+
+    g1 = jax.grad(lambda a, c: jnp.sum(ops.codebook_matmul(a, idx, c) ** 2),
+                  argnums=(0, 1))(x, cb)
+    g2 = jax.grad(lambda a, c: jnp.sum(codebook_matmul_ref(a, idx, c) ** 2),
+                  argnums=(0, 1))(x, cb)
+    for a, b in zip(g1, g2):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                                   rtol=1e-3, atol=1e-2)
+
+
+def test_codebook_matmul_bf16_x():
+    x = rand(0, (16, 128), jnp.bfloat16)
+    idx = jax.random.randint(jax.random.PRNGKey(1), (128, 128), 0, 8).astype(jnp.int8)
+    cb = jnp.sort(rand(2, (8,)))
+    out = ops.codebook_matmul(x, idx, cb)
+    ref = codebook_matmul_ref(x, idx, cb)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                               rtol=2e-2, atol=2e-1)
+
+
+# ---------------------------------------------------------------------------
+# zspe spmm
+# ---------------------------------------------------------------------------
+
+@settings(max_examples=12, deadline=None)
+@given(
+    m=st.integers(1, 100),
+    k=st.integers(1, 300),
+    n=st.integers(1, 160),
+    density=st.floats(0.0, 0.5),
+)
+def test_zspe_spmm_matches_ref(m, k, n, density):
+    key = jax.random.PRNGKey(m * 7 + k * 3 + n)
+    s = (jax.random.uniform(key, (m, k)) < density).astype(jnp.float32)
+    w = rand(5, (k, n))
+    out = ops.zspe_spmm(s, w)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(zspe_spmm_ref(s, w)),
+                               rtol=1e-4, atol=1e-4 * k)
+
+
+def test_zspe_skip_counters_zero_input():
+    """All-zero spikes: every K-tile of every output tile is skipped."""
+    s = jnp.zeros((128, 256), jnp.float32)
+    w = rand(0, (256, 128))
+    out, skipped = ops.zspe_spmm(s, w, with_stats=True)
+    assert float(jnp.abs(out).max()) == 0.0
+    assert int(skipped.min()) >= 1          # all tiles skipped at least once
+
+
+def test_zspe_skip_counters_dense_input():
+    s = jnp.ones((128, 256), jnp.float32)
+    w = rand(0, (256, 128))
+    out, skipped = ops.zspe_spmm(s, w, with_stats=True)
+    assert int(skipped.sum()) == 0
+
+
+def test_zspe_int8_spikes():
+    key = jax.random.PRNGKey(3)
+    s = (jax.random.uniform(key, (64, 128)) < 0.1).astype(jnp.int8)
+    w = rand(1, (128, 64))
+    out = ops.zspe_spmm(s, w)
+    np.testing.assert_allclose(np.asarray(out),
+                               np.asarray(zspe_spmm_ref(s, w)), rtol=1e-4,
+                               atol=1e-2)
+
+
+# ---------------------------------------------------------------------------
+# fused LIF update
+# ---------------------------------------------------------------------------
+
+@settings(max_examples=12, deadline=None)
+@given(
+    b=st.integers(1, 20),
+    n=st.integers(1, 300),
+    theta=st.floats(0.5, 2.0),
+    leak=st.floats(0.5, 0.99),
+)
+def test_lif_update_matches_ref(b, n, theta, leak):
+    key = jax.random.PRNGKey(b * 31 + n)
+    k1, k2, k3 = jax.random.split(key, 3)
+    v = jax.random.normal(k1, (b, n))
+    el = jax.random.randint(k2, (b, n), 0, 6)
+    cur = jnp.where(jax.random.uniform(k3, (b, n)) < 0.4,
+                    jax.random.normal(key, (b, n)) * 1.5, 0.0)
+    got = ops.lif_update(v, el, cur, threshold=theta, leak=leak)
+    want = lif_update_ref(v, el, cur, threshold=theta, leak=leak, reset=0.0)
+    for g, w in zip(got, want):
+        np.testing.assert_allclose(np.asarray(g, np.float32),
+                                   np.asarray(w, np.float32),
+                                   rtol=1e-5, atol=1e-5)
+
+
+def test_lif_kernel_agrees_with_core_neuron():
+    """Kernel == core.neuron.lif_step (partial update, hard reset)."""
+    from repro.core.neuron import LIFParams, LIFState, lif_step
+
+    key = jax.random.PRNGKey(0)
+    v = jax.random.normal(key, (8, 128))
+    el = jnp.zeros((8, 128), jnp.int32)
+    cur = jnp.where(jax.random.uniform(key, (8, 128)) < 0.3, 1.3, 0.0)
+    p = LIFParams(threshold=1.0, leak=0.9, partial_update=True)
+    st2, spikes, upd = lif_step(LIFState(v, el), cur, p)
+    vo, eo, sp, up = ops.lif_update(v, el, cur, threshold=1.0, leak=0.9)
+    np.testing.assert_allclose(np.asarray(spikes), np.asarray(sp))
+    np.testing.assert_allclose(np.asarray(st2.elapsed), np.asarray(eo))
+    # pow() rounding differs by ~1 ulp between the fused kernel and the
+    # reference path; compare with a small absolute floor
+    np.testing.assert_allclose(np.asarray(st2.v), np.asarray(vo),
+                               rtol=1e-5, atol=1e-6)
+
+
+# ---------------------------------------------------------------------------
+# flash attention
+# ---------------------------------------------------------------------------
+
+@settings(max_examples=8, deadline=None)
+@given(
+    b=st.integers(1, 3),
+    h=st.integers(1, 4),
+    nq=st.integers(1, 3),
+    hd=st.sampled_from([32, 64, 128]),
+    causal=st.booleans(),
+)
+def test_flash_attention_matches_ref(b, h, nq, hd, causal):
+    from repro.kernels.flash_attention import flash_attention
+    from repro.kernels.ref import flash_attention_ref
+
+    s = nq * 128
+    key = jax.random.PRNGKey(b * 100 + h * 10 + nq)
+    kq, kk, kv = jax.random.split(key, 3)
+    q = jax.random.normal(kq, (b, h, s, hd))
+    k = jax.random.normal(kk, (b, h, s, hd))
+    v = jax.random.normal(kv, (b, h, s, hd))
+    out = flash_attention(q, k, v, causal=causal)
+    ref = flash_attention_ref(q, k, v, causal=causal)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                               rtol=2e-3, atol=2e-3)
+
+
+def test_flash_attention_bf16():
+    from repro.kernels.flash_attention import flash_attention
+    from repro.kernels.ref import flash_attention_ref
+
+    key = jax.random.PRNGKey(0)
+    q, k, v = (jax.random.normal(kk, (1, 2, 256, 64), jnp.bfloat16)
+               for kk in jax.random.split(key, 3))
+    out = flash_attention(q, k, v, causal=True)
+    ref = flash_attention_ref(q, k, v, causal=True)
+    np.testing.assert_allclose(np.asarray(out, np.float32),
+                               np.asarray(ref, np.float32),
+                               rtol=5e-2, atol=5e-2)
+
+
+def test_flash_hbm_io_accounting():
+    from repro.kernels.flash_attention import hbm_io_bytes
+    fwd = hbm_io_bytes(1, 1, 128, 128, 64, 2, with_backward=False)
+    assert fwd == 4 * 128 * 64 * 2          # q,k,v,o
+    assert hbm_io_bytes(1, 1, 128, 128, 64, 2) > fwd

@@ -1,0 +1,133 @@
+"""Cross-cutting property tests (hypothesis) on the system's invariants."""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import energy as E
+from repro.core.zspe import CoreGeometry, CycleModel
+from repro.data.synthetic import EventStream
+
+
+# ---------------------------------------------------------------------------
+# energy / cycle model invariants
+# ---------------------------------------------------------------------------
+
+@settings(max_examples=30, deadline=None)
+@given(s1=st.floats(0.0, 1.0), s2=st.floats(0.0, 1.0))
+def test_energy_monotone_in_sparsity(s1, s2):
+    """More sparsity never costs more energy or throughput (zero-skip)."""
+    core = E.calibrate_core()
+    lo, hi = min(s1, s2), max(s1, s2)
+    assert core.pj_per_sop(hi) <= core.pj_per_sop(lo) + 1e-12
+    assert core.gsops(hi) >= core.gsops(lo) - 1e-12
+
+
+@settings(max_examples=30, deadline=None)
+@given(s=st.floats(0.0, 1.0))
+def test_zero_skip_never_loses(s):
+    core = E.calibrate_core()
+    assert core.pj_per_sop(s, zero_skip=True) <= \
+        core.pj_per_sop(s, zero_skip=False) + 1e-12
+    assert core.pj_per_sop(s, partial_update=True) <= \
+        core.pj_per_sop(s, partial_update=False) + 1e-12
+
+
+@settings(max_examples=20, deadline=None)
+@given(
+    n_pre=st.integers(16, 4096),
+    n_post=st.integers(1, 8192),
+    s=st.floats(0.0, 1.0),
+)
+def test_cycle_model_bounds(n_pre, n_post, s):
+    """Zero-skip cycles <= baseline cycles; SOPs scale with density."""
+    cm = CycleModel(CoreGeometry())
+    nnz = n_pre * (1.0 - s)
+    touched = min(nnz, n_post)       # touched neurons cannot exceed the core
+    opt = cm.timestep_cycles(n_pre, n_post, nnz, touched, True, True)
+    base = cm.timestep_cycles(n_pre, n_post, nnz, n_post, False, False)
+    assert opt <= base + 1e-9
+    assert cm.sop_count(n_pre, n_post, nnz, True) <= \
+        cm.sop_count(n_pre, n_post, nnz, False) + 1e-9
+
+
+def test_chip_model_chip_never_beats_core():
+    """System overhead is non-negative at every sparsity."""
+    chip = E.calibrate_chip()
+    for s in np.linspace(0, 1, 11):
+        assert chip.chip_pj_per_sop(float(s)) >= chip.core.pj_per_sop(float(s))
+
+
+# ---------------------------------------------------------------------------
+# SNN QAT ablation (paper's offline-training story)
+# ---------------------------------------------------------------------------
+
+def test_snn_qat_matches_ptq_or_better():
+    """Training WITH fake-quant (STE) should be at least as robust to the
+    chip's 16x8 codebook as post-training quantization."""
+    from repro.models import snn as SNN
+
+    ev = EventStream(timesteps=6, height=10, width=10, seed=3)
+    base = SNN.SNNConfig(layer_sizes=(ev.n_inputs, 96, 10), timesteps=6)
+    qat = dataclasses.replace(base, qat=True)
+
+    def train(cfg):
+        params = SNN.init_params(cfg, jax.random.PRNGKey(1))
+        for step in range(40):
+            sp, lb = ev.batch(64, step)
+            params, _, _ = SNN.sgd_step(params, cfg, sp, lb, lr=0.3)
+        return params
+
+    sp, lb = ev.batch(128, 7777)
+    p_fp = train(base)
+    acc_ptq = float(SNN.accuracy(
+        SNN.dequantized(SNN.quantize_for_chip(p_fp, base)), base, sp, lb))
+    p_qat = train(qat)
+    acc_qat = float(SNN.accuracy(
+        SNN.dequantized(SNN.quantize_for_chip(p_qat, qat)), base, sp, lb))
+    assert acc_qat >= acc_ptq - 0.08, (acc_qat, acc_ptq)
+    assert acc_qat > 0.75
+
+
+# ---------------------------------------------------------------------------
+# event data invariants
+# ---------------------------------------------------------------------------
+
+@settings(max_examples=10, deadline=None)
+@given(seed=st.integers(0, 100))
+def test_event_stream_sparsity_regime(seed):
+    """Synthetic event data stays in the chip's sparse operating regime."""
+    ev = EventStream(timesteps=6, height=12, width=12, seed=seed)
+    s = ev.measured_sparsity(batch_size=8)
+    assert 0.7 < s < 0.999
+
+
+def test_event_stream_deterministic():
+    ev = EventStream(timesteps=4, height=8, width=8, seed=5)
+    a, la = ev.batch(4, step=9)
+    b, lb = ev.batch(4, step=9)
+    np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+    np.testing.assert_array_equal(np.asarray(la), np.asarray(lb))
+
+
+# ---------------------------------------------------------------------------
+# codebook quantization: chip-format invariants
+# ---------------------------------------------------------------------------
+
+@settings(max_examples=10, deadline=None)
+@given(n=st.sampled_from([4, 8, 16]), w=st.sampled_from([4, 8, 16]),
+       scale=st.floats(1e-3, 10.0))
+def test_quant_scale_equivariance(n, w, scale):
+    """Quantizing c*W matches c*(quantized W): codebooks are per-tensor."""
+    from repro.core.quant import CodebookConfig, dequantize, quantize
+
+    key = jax.random.PRNGKey(n * 7 + w)
+    wts = jax.random.normal(key, (32, 32))
+    cfg = CodebookConfig(n_levels=n, bit_width=w)
+    q1 = dequantize(quantize(wts * scale, cfg))
+    q2 = dequantize(quantize(wts, cfg)) * scale
+    np.testing.assert_allclose(np.asarray(q1), np.asarray(q2),
+                               rtol=0.05, atol=0.05 * scale)
