@@ -1,0 +1,118 @@
+"""Compiler benchmark — greedy vs optimized network-to-chip mapping.
+
+Three studies:
+  1. Static mapping cost on the NMNIST-scale MLP (configs/snn_chip.ARCH):
+     hop-weighted spike-traffic cost per placement strategy.
+  2. Full-simulation comparison: ChipSimulator with the legacy greedy
+     mapping vs the compiled (anneal) mapping — NoC hops, NoC energy,
+     wall cycles and pJ/SOP on identical spike trains.
+  3. Scale-up: a >20-core network compiled across multiple level-1
+     domains, level-2 (off-chip) hops priced by the energy model.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from repro import compiler as COMP
+from repro.configs.snn_chip import ARCH
+from repro.core.soc import ChipSimulator, map_network
+
+
+def mapping_cost_rows(layer_sizes=ARCH.layer_sizes, seed: int = 0):
+    rows = []
+    for strategy in ("contiguous", "greedy", "anneal"):
+        cn = COMP.compile_network(list(layer_sizes), strategy=strategy,
+                                  seed=seed, verify=True)
+        es = cn.energy_summary()
+        rows.append({
+            "strategy": strategy,
+            "groups": len(cn.groups),
+            "cost": round(cn.cost, 2),
+            "vs_contiguous": round(cn.baseline_cost / max(cn.cost, 1e-12), 3),
+            "noc_pj_per_step": round(es["noc_pj_per_step"], 3),
+            "router_table_entries": cn.routed.router_tables.n_entries(),
+        })
+    return rows
+
+
+def simulated_rows(seed: int = 0, timesteps: int = 10):
+    """Same net + same spikes through both mappings; measure the NoC."""
+    rng = np.random.default_rng(seed)
+    sizes = (512, 1024, 512, 10)
+    weights = [np.asarray(rng.normal(0, 0.35, (a, b)), np.float32)
+               for a, b in zip(sizes[:-1], sizes[1:])]
+    spikes = np.asarray(rng.random((timesteps, sizes[0])) < 0.10, np.float32)
+
+    rows = []
+    for name, kwargs in (
+        ("greedy", dict(mapping_strategy="greedy")),
+        ("compiler", dict(mapping_strategy="anneal")),
+    ):
+        sim = ChipSimulator(weights, freq_hz=100e6, **kwargs)
+        _, rep = sim.run(spikes)
+        rows.append({
+            "mapping": name,
+            "cores_used": len(sim.mapping.active_core_ids()),
+            "noc_hops": round(rep.stats.noc_hops, 0),
+            "noc_energy_pj": round(rep.noc_energy_pj, 2),
+            "wall_cycles": round(rep.wall_cycles, 0),
+            "pj_per_sop": round(rep.pj_per_sop, 4),
+        })
+    return rows
+
+
+def scaleup_row(seed: int = 0):
+    """>20-core network -> >= 2 level-1 domains bridged by level-2 routers."""
+    spec = COMP.ChipSpec(max_domains=4)
+    cn = COMP.compile_network((2312, 81920, 81920, 10), spec,
+                              seed=seed, verify=True)
+    es = cn.energy_summary()
+    return {
+        "groups": len(cn.groups),
+        "domains_used": cn.n_domains_used,
+        "cost": round(cn.cost, 1),
+        "vs_contiguous": round(cn.improvement, 3),
+        "l1_hops_per_step": round(es["l1_hops_per_step"], 1),
+        "l2_hops_per_step": round(es["l2_hops_per_step"], 1),
+        "l1_pj_per_step": round(es["l1_pj_per_step"], 1),
+        "l2_pj_per_step": round(es["l2_pj_per_step"], 1),
+        "level2_premium": es["level2_premium"],
+    }
+
+
+def main(emit):
+    import time
+
+    t0 = time.time()
+    cost = mapping_cost_rows()
+    sim = simulated_rows()
+    scale = scaleup_row()
+    us = (time.time() - t0) * 1e6 / 3
+
+    by_strategy = {r["strategy"]: r for r in cost}
+    by_mapping = {r["mapping"]: r for r in sim}
+    checks = {
+        "anneal_cost<contiguous": (by_strategy["anneal"]["cost"],
+                                   by_strategy["contiguous"]["cost"]),
+        "anneal_improvement": by_strategy["anneal"]["vs_contiguous"],
+        "sim_noc_hops(greedy vs compiler)": (
+            by_mapping["greedy"]["noc_hops"],
+            by_mapping["compiler"]["noc_hops"]),
+        "sim_pj_per_sop(greedy vs compiler)": (
+            by_mapping["greedy"]["pj_per_sop"],
+            by_mapping["compiler"]["pj_per_sop"]),
+        "sim_wall_cycles(greedy vs compiler)": (
+            by_mapping["greedy"]["wall_cycles"],
+            by_mapping["compiler"]["wall_cycles"]),
+        "scaleup_domains(>=2)": scale["domains_used"],
+        "scaleup_l2_pj_per_step": scale["l2_pj_per_step"],
+    }
+    emit("compiler_bench", us, checks)
+    return {"mapping_cost": cost, "simulated": sim, "scaleup": scale}
+
+
+if __name__ == "__main__":
+    import json
+
+    out = main(lambda n, us, c: print(f"{n}: {json.dumps(c, default=str)}"))
+    print(json.dumps(out, indent=1, default=str))

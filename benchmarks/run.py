@@ -11,9 +11,12 @@ import sys
 
 
 def main() -> None:
-    sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
-    from benchmarks import (fig3_core_efficiency, fig5_noc, fig6_riscv_power,
-                            kernel_bench, roofline, table1_chip)
+    root = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+    sys.path.insert(0, os.path.join(root, "src"))
+    sys.path.insert(0, root)                    # `python benchmarks/run.py`
+    from benchmarks import (compiler_bench, fig3_core_efficiency, fig5_noc,
+                            fig6_riscv_power, kernel_bench, roofline,
+                            table1_chip)
 
     results = {}
     print("name,us_per_call,derived")
@@ -23,6 +26,7 @@ def main() -> None:
 
     results["fig3"] = fig3_core_efficiency.main(emit)
     results["fig5"] = fig5_noc.main(emit)
+    results["compiler"] = compiler_bench.main(emit)
     results["fig6"] = fig6_riscv_power.main(emit)
     results["table1"] = table1_chip.main(emit)
     results["kernels"] = kernel_bench.main(emit)

@@ -1,7 +1,7 @@
 """End-to-end paper reproduction: train an SNN on NMNIST-like event data
-with surrogate gradients, quantize to the chip's shared codebooks, map it
-onto the 20-core fullerene SoC and report accuracy + pJ/SOP + power
-against the paper's Table I.
+with surrogate gradients, quantize to the chip's shared codebooks, compile
+it (partition -> place -> route) onto the 20-core fullerene SoC and report
+accuracy + pJ/SOP + power against the paper's Table I.
 
 Run:  PYTHONPATH=src python examples/snn_nmnist_e2e.py [--steps 60]
 """
@@ -11,6 +11,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro import compiler as COMP
 from repro.core.quant import CodebookConfig
 from repro.core.soc import ChipSimulator
 from repro.data.synthetic import EventStream
@@ -45,11 +46,22 @@ def main():
     print(f"accuracy fp32 {acc_fp:.3f} -> quantized {acc_q:.3f} "
           f"(paper NMNIST: 0.988)")
 
-    print("\n== map onto the 20-core fullerene SoC and simulate ==")
-    sim = ChipSimulator(SNN.dequantized(qparams),
-                        quant_cfg=CodebookConfig(16, 8), freq_hz=100e6)
-    print(f"core assignment: {[(a.core_id, a.layer, a.n_neurons) for a in sim.mapping.assignments]}")
+    print("\n== compile onto the 20-core fullerene SoC (partition -> "
+          "place -> route) ==")
     test_sp, _ = ev.batch(8, 123)
+    weights = SNN.dequantized(qparams)
+    # profile-guided traffic: measure per-layer spike rates on real events
+    rates = COMP.measure_spike_rates(weights, test_sp[1])
+    graph = COMP.from_weights(weights, spike_rates=rates)
+    compiled = COMP.compile_network(graph, verify=True)
+    print(f"compiled: {compiled.summary()}")
+    print(f"hop-weighted traffic cost {compiled.cost:.1f} vs greedy "
+          f"baseline {compiled.baseline_cost:.1f} "
+          f"({(compiled.improvement - 1) * 100:+.1f}%)")
+
+    sim = ChipSimulator(weights, quant_cfg=CodebookConfig(16, 8),
+                        freq_hz=100e6, mapping=compiled.to_soc_mapping())
+    print(f"core assignment: {[(a.core_id, a.layer, a.n_neurons) for a in sim.mapping.assignments]}")
     _, rep = sim.run(test_sp[0])
     print(f"sparsity {rep.stats.sparsity:.3f}  "
           f"pJ/SOP {rep.pj_per_sop:.3f} (paper: 0.96 @ NMNIST)  "

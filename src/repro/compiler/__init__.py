@@ -1,0 +1,149 @@
+"""repro.compiler — the network-to-chip mapping compiler.
+
+Four stages behind one entry point:
+
+    compile_network(net, chip) ->
+        partition  (layers -> <= 8192-neuron, one-codebook core groups)
+        place      (hop-weighted traffic optimization on the fullerene NoC)
+        route      (static per-CMRouter connection-matrix tables)
+        scale-up   (> 20-core networks span level-1 domains via level-2
+                    routers, priced by energy.InterconnectEnergyModel)
+
+`net` may be a NetworkGraph, a models/snn.py SNNConfig, a
+models/snn_conv.py ConvSNNConfig, a list of weight matrices, or a plain
+sequence of layer sizes.  The result's `.to_soc_mapping()` plugs straight
+into core.soc.ChipSimulator, and `.routed.layer_flows` gives the
+simulator precompiled routes so nothing BFS-searches at sim time.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Sequence
+
+import numpy as np
+
+from repro.compiler import ir, partition as P, place as PL, route as R
+from repro.compiler import scaleup as SU
+from repro.compiler.ir import (ChipSpec, LayerSpec, NetworkGraph,
+                               estimate_spike_rates, from_conv_config,
+                               from_layer_sizes, from_snn_config,
+                               from_weights, measure_spike_rates)
+from repro.compiler.partition import CoreGroup, group_traffic
+from repro.compiler.place import Placement
+from repro.compiler.route import RoutedNetwork, RouterTables, verify_roundtrip
+from repro.compiler.scaleup import ScaleUpPlan
+
+__all__ = [
+    "ChipSpec", "CompiledNetwork", "CoreGroup", "LayerSpec", "NetworkGraph",
+    "Placement", "RoutedNetwork", "RouterTables", "ScaleUpPlan",
+    "compile_network", "estimate_spike_rates", "from_conv_config",
+    "from_layer_sizes", "from_snn_config", "from_weights",
+    "measure_spike_rates", "verify_roundtrip",
+]
+
+
+@dataclasses.dataclass
+class CompiledNetwork:
+    """Everything the chip needs to run the network, plus cost telemetry."""
+
+    net: NetworkGraph
+    spec: ChipSpec
+    groups: list[CoreGroup]
+    placement: Placement
+    plan: ScaleUpPlan
+    routed: RoutedNetwork
+    baseline_cost: float          # contiguous-greedy placement, same metric
+
+    @property
+    def cost(self) -> float:
+        return self.placement.cost
+
+    @property
+    def improvement(self) -> float:
+        """baseline/optimized hop-weighted traffic cost (>1 == better)."""
+        return self.baseline_cost / max(self.cost, 1e-12)
+
+    @property
+    def n_domains_used(self) -> int:
+        return SU.domains_used(self.placement.assignment, self.plan)
+
+    def core_of_group(self, gid: int) -> int:
+        return self.placement.assignment[gid]
+
+    def energy_summary(self) -> dict:
+        return SU.domain_energy_summary(self.net, self.routed, self.spec)
+
+    def to_soc_mapping(self):
+        """Convert to the core.soc.Mapping the ChipSimulator consumes."""
+        from repro.core.soc import CoreAssignment, Mapping
+
+        assignments = [
+            CoreAssignment(core_id=self.placement.assignment[g.gid],
+                           layer=g.layer, neuron_lo=g.lo, neuron_hi=g.hi)
+            for g in self.groups
+        ]
+        return Mapping(assignments=assignments,
+                       layer_sizes=list(self.net.layer_sizes()))
+
+    def summary(self) -> dict:
+        es = self.energy_summary()
+        return {
+            "layers": len(self.net.placed_layers),
+            "groups": len(self.groups),
+            "domains": self.n_domains_used,
+            "strategy": self.placement.strategy,
+            "cost": round(self.cost, 3),
+            "baseline_cost": round(self.baseline_cost, 3),
+            "improvement": round(self.improvement, 3),
+            "router_table_entries": self.routed.router_tables.n_entries(),
+            "l2_hops_per_step": round(es["l2_hops_per_step"], 3),
+            "noc_pj_per_step": round(es["noc_pj_per_step"], 3),
+        }
+
+
+def _as_network(net: Any) -> NetworkGraph:
+    if isinstance(net, NetworkGraph):
+        return net
+    # frontends, duck-typed to avoid importing jax models here
+    if hasattr(net, "in_shape") and hasattr(net, "channels"):
+        return from_conv_config(net)
+    if hasattr(net, "layer_sizes"):
+        return from_snn_config(net)
+    if isinstance(net, Sequence) and len(net) and hasattr(net[0], "shape"):
+        return from_weights(net)
+    if isinstance(net, Sequence):
+        return from_layer_sizes(net)
+    raise TypeError(f"cannot interpret {type(net)!r} as a network")
+
+
+def compile_network(net: Any, chip: ChipSpec | None = None, *,
+                    strategy: str = "anneal", seed: int = 0,
+                    anneal_iters: int = 4000, spread: bool = True,
+                    verify: bool = False) -> CompiledNetwork:
+    """Run the full partition -> place -> route -> scale-up pipeline.
+
+    strategy: "anneal" (default), "greedy" (constructive only), or
+    "contiguous" (the legacy layout, for baselines).  `spread` hands idle
+    cores to big layers (lower wall cycles, more placement freedom).
+    """
+    spec = chip or ChipSpec()
+    graph = _as_network(net)
+
+    groups = P.partition(graph, spec, spread=spread)
+    flows = group_traffic(graph, groups)
+    su = SU.plan(groups, spec)
+    dist = PL.weighted_distances(su.adjacency, su.level2_nodes,
+                                 spec.interconnect.level2_premium())
+    placement = PL.place(groups, flows, dist, su.core_slots, spec,
+                         su.n_domains, strategy=strategy, seed=seed,
+                         anneal_iters=anneal_iters)
+    baseline = PL.placement_cost(
+        PL.contiguous_place(groups, su.core_slots), flows, dist)
+    routed = R.route(groups, placement.assignment, su.adjacency,
+                     su.level2_nodes)
+    compiled = CompiledNetwork(net=graph, spec=spec, groups=groups,
+                               placement=placement, plan=su, routed=routed,
+                               baseline_cost=baseline)
+    if verify:
+        verify_roundtrip(routed)
+    return compiled

@@ -1,0 +1,110 @@
+"""Stage 1 — partition: split layers into core-sized neuron groups.
+
+Each group lives on exactly one physical core and therefore shares one
+weight codebook (paper C3), so groups never mix layers.  Within a layer
+the split is *balanced* (sizes differ by at most one neuron) rather than
+greedy-full-cores: balanced slices equalize per-core synapse work, which
+is what the ZSPE cycle model rewards (wall cycles = max over cores).
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+
+from repro.compiler.ir import ChipSpec, NetworkGraph
+
+
+@dataclasses.dataclass(frozen=True)
+class CoreGroup:
+    """A contiguous neuron slice [lo, hi) of one layer, one core's worth."""
+
+    gid: int
+    layer: int
+    lo: int
+    hi: int
+
+    @property
+    def n_neurons(self) -> int:
+        return self.hi - self.lo
+
+
+def _groups_per_layer(net: NetworkGraph, spec: ChipSpec,
+                      spread: bool) -> list[int]:
+    """How many cores each placed layer gets.
+
+    The minimum is capacity-driven (ceil(n / 8192)).  With `spread`, idle
+    cores of the needed domain count are handed out one at a time to the
+    layer with the most neurons per group — parallelizing big layers cuts
+    wall cycles (the ZSPE cycle model takes the max over cores) at the
+    price of extra NoC fan-out, which the placement stage then minimizes.
+    """
+    mins = [math.ceil(l.n_neurons / spec.neurons_per_core)
+            for l in net.placed_layers]
+    total_cores = spec.domains_needed(sum(mins)) * spec.n_cores
+    if sum(mins) > spec.max_domains * spec.n_cores:
+        raise ValueError(
+            f"network needs {sum(mins)} cores but only "
+            f"{spec.max_domains * spec.n_cores} are available "
+            f"({spec.max_domains} domain(s) x {spec.n_cores}); "
+            f"layer sizes {net.layer_sizes()}")
+    counts = list(mins)
+    if not spread:
+        return counts
+    sizes = [l.n_neurons for l in net.placed_layers]
+    extra = min(total_cores, spec.max_domains * spec.n_cores) - sum(counts)
+    for _ in range(extra):
+        per_group = [(n / c if c < n else 0.0, i)
+                     for i, (n, c) in enumerate(zip(sizes, counts))]
+        density, i = max(per_group)
+        if density <= 0:
+            break                       # every layer already 1 neuron/core
+        counts[i] += 1
+    return counts
+
+
+def partition(net: NetworkGraph, spec: ChipSpec,
+              spread: bool = True) -> list[CoreGroup]:
+    """Split every placed layer into <= neurons_per_core groups.
+
+    Raises ValueError when the network exceeds the chip's total neuron
+    capacity or needs more cores than `max_domains` domains provide.
+    """
+    spec.validate_network(net)
+    counts = _groups_per_layer(net, spec, spread)
+    groups: list[CoreGroup] = []
+    gid = 0
+    for layer, n_groups in zip(net.placed_layers, counts):
+        base, extra = divmod(layer.n_neurons, n_groups)
+        lo = 0
+        for g in range(n_groups):
+            take = base + (1 if g < extra else 0)
+            groups.append(CoreGroup(gid=gid, layer=layer.index,
+                                    lo=lo, hi=lo + take))
+            gid += 1
+            lo += take
+        assert lo == layer.n_neurons
+    return groups
+
+
+def group_traffic(net: NetworkGraph, groups: list[CoreGroup]
+                  ) -> list[tuple[int, int, float]]:
+    """Inter-group spike flows: [(src_gid, dst_gid, spikes_per_timestep)].
+
+    Feed-forward connectivity is dense between consecutive layers, so every
+    spike a source group emits must reach *every* group of the next layer
+    (each holds a slice of the postsynaptic population).  A source group's
+    share of its layer's traffic is proportional to its neuron share.
+    """
+    by_layer: dict[int, list[CoreGroup]] = {}
+    for g in groups:
+        by_layer.setdefault(g.layer, []).append(g)
+    flows: list[tuple[int, int, float]] = []
+    for layer in net.placed_layers[:-1]:
+        srcs = by_layer[layer.index]
+        dsts = by_layer[layer.index + 1]
+        rate = net.spike_rates[layer.index]
+        for s in srcs:
+            share = rate * s.n_neurons / layer.n_neurons
+            for d in dsts:
+                flows.append((s.gid, d.gid, share))
+    return flows

@@ -1,0 +1,190 @@
+"""Stage 2 — place: assign core groups to physical cores, minimizing the
+hop-weighted spike-traffic cost on the fullerene topology.
+
+Cost of a placement P is
+
+    cost(P) = sum over flows (g -> h, w)  of  w * dist[P(g), P(h)]
+
+where `dist` is the energy-weighted shortest-path hop matrix: on-chip
+links cost 1, links through a level-2 router cost the off-chip premium
+(E.InterconnectEnergyModel.level2_premium()), so the optimizer keeps
+chatty layer pairs inside one domain.
+
+Strategies:
+  * "contiguous" — layers onto cores in id order, the old soc.map_network
+    behaviour (baseline; ignores traffic entirely).
+  * "greedy"     — traffic-aware seed: groups in descending traffic order,
+    each onto the free core minimizing incremental cost.
+  * "anneal"     — the greedy seed refined by simulated annealing (random
+    swap/relocate moves, Metropolis acceptance, geometric cooling).
+    Deterministic given `seed`.
+"""
+from __future__ import annotations
+
+import dataclasses
+import heapq
+
+import numpy as np
+
+from repro.compiler.ir import ChipSpec
+from repro.compiler.partition import CoreGroup
+
+
+def weighted_distances(adj: np.ndarray, level2_nodes: frozenset[int],
+                       l2_weight: float) -> np.ndarray:
+    """All-pairs shortest paths with level-2-incident links costing
+    `l2_weight` instead of 1 (Dijkstra per source; graphs are <= a few
+    hundred nodes)."""
+    n = adj.shape[0]
+    nbrs = [np.nonzero(adj[i])[0] for i in range(n)]
+    out = np.full((n, n), np.inf)
+    for s in range(n):
+        dist = out[s]
+        dist[s] = 0.0
+        heap = [(0.0, s)]
+        while heap:
+            d, u = heapq.heappop(heap)
+            if d > dist[u]:
+                continue
+            for v in nbrs[u]:
+                w = l2_weight if (u in level2_nodes or v in level2_nodes) else 1.0
+                nd = d + w
+                if nd < dist[v]:
+                    dist[v] = nd
+                    heapq.heappush(heap, (nd, int(v)))
+    return out
+
+
+@dataclasses.dataclass
+class Placement:
+    """gid -> physical core node id, plus the cost bookkeeping."""
+
+    assignment: dict[int, int]
+    cost: float
+    strategy: str
+    n_domains: int
+
+    def core_of(self, gid: int) -> int:
+        return self.assignment[gid]
+
+
+def placement_cost(assignment: dict[int, int],
+                   flows: list[tuple[int, int, float]],
+                   dist: np.ndarray) -> float:
+    return float(sum(w * dist[assignment[s], assignment[d]]
+                     for s, d, w in flows))
+
+
+def contiguous_place(groups: list[CoreGroup], core_slots: np.ndarray
+                     ) -> dict[int, int]:
+    """Layer-order onto core-id-order: the greedy soc.map_network layout."""
+    return {g.gid: int(core_slots[i]) for i, g in enumerate(groups)}
+
+
+def greedy_place(groups: list[CoreGroup],
+                 flows: list[tuple[int, int, float]],
+                 dist: np.ndarray, core_slots: np.ndarray) -> dict[int, int]:
+    """Traffic-aware constructive seed."""
+    # per-group flow lists for incremental cost
+    touching: dict[int, list[tuple[int, float]]] = {g.gid: [] for g in groups}
+    for s, d, w in flows:
+        touching[s].append((d, w))
+        touching[d].append((s, w))
+    order = sorted(groups,
+                   key=lambda g: -sum(w for _, w in touching[g.gid]))
+    free = [int(c) for c in core_slots]
+    # centrality: prefer cores with low mean distance to other cores
+    centrality = dist[np.ix_(core_slots, core_slots)].mean(axis=1)
+    by_central = {int(c): float(centrality[i])
+                  for i, c in enumerate(core_slots)}
+    assignment: dict[int, int] = {}
+    for g in order:
+        best, best_cost = None, np.inf
+        for c in free:
+            inc = sum(w * dist[c, assignment[o]]
+                      for o, w in touching[g.gid] if o in assignment)
+            # tie-break toward central cores so early groups cluster
+            inc += 1e-6 * by_central[c]
+            if inc < best_cost:
+                best, best_cost = c, inc
+        assignment[g.gid] = best
+        free.remove(best)
+    return assignment
+
+
+def anneal_place(assignment: dict[int, int],
+                 flows: list[tuple[int, int, float]],
+                 dist: np.ndarray, core_slots: np.ndarray,
+                 seed: int = 0, iters: int = 4000,
+                 t0: float | None = None, t_end: float = 1e-3
+                 ) -> dict[int, int]:
+    """Refine by simulated annealing over swap/relocate moves."""
+    rng = np.random.default_rng(seed)
+    gids = list(assignment.keys())
+    occupied = dict(assignment)
+    used = set(occupied.values())
+    free = [int(c) for c in core_slots if c not in used]
+    cost = placement_cost(occupied, flows, dist)
+    # flows grouped per gid for delta evaluation
+    touching: dict[int, list[tuple[int, float]]] = {g: [] for g in gids}
+    for s, d, w in flows:
+        touching[s].append((d, w))
+        touching[d].append((s, w))
+
+    def local_cost(gid: int, at: int, asg: dict[int, int]) -> float:
+        return sum(w * dist[at, asg[o]] for o, w in touching[gid] if o != gid)
+
+    t0 = t0 if t0 is not None else max(cost / max(len(gids), 1), 1.0)
+    best, best_cost = dict(occupied), cost
+    for it in range(iters):
+        temp = t0 * (t_end / t0) ** (it / max(iters - 1, 1))
+        if free and rng.random() < 0.3:
+            # relocate a random group to a random free core
+            g = gids[int(rng.integers(len(gids)))]
+            c_new = free[int(rng.integers(len(free)))]
+            c_old = occupied[g]
+            delta = local_cost(g, c_new, occupied) - local_cost(g, c_old, occupied)
+            if delta < 0 or rng.random() < np.exp(-delta / max(temp, 1e-12)):
+                occupied[g] = c_new
+                free.remove(c_new)
+                free.append(c_old)
+                cost += delta
+        else:
+            # swap two groups' cores
+            i, j = rng.integers(len(gids)), rng.integers(len(gids))
+            if i == j:
+                continue
+            ga, gb = gids[int(i)], gids[int(j)]
+            ca, cb = occupied[ga], occupied[gb]
+            before = local_cost(ga, ca, occupied) + local_cost(gb, cb, occupied)
+            occupied[ga], occupied[gb] = cb, ca
+            after = local_cost(ga, cb, occupied) + local_cost(gb, ca, occupied)
+            delta = after - before
+            if delta < 0 or rng.random() < np.exp(-delta / max(temp, 1e-12)):
+                cost += delta
+            else:
+                occupied[ga], occupied[gb] = ca, cb
+        if cost < best_cost:
+            best, best_cost = dict(occupied), cost
+    return best
+
+
+def place(groups: list[CoreGroup], flows: list[tuple[int, int, float]],
+          dist: np.ndarray, core_slots: np.ndarray, spec: ChipSpec,
+          n_domains: int, strategy: str = "anneal", seed: int = 0,
+          anneal_iters: int = 4000) -> Placement:
+    if strategy == "contiguous":
+        asg = contiguous_place(groups, core_slots)
+    elif strategy == "greedy":
+        asg = greedy_place(groups, flows, dist, core_slots)
+    elif strategy == "anneal":
+        seeds = (greedy_place(groups, flows, dist, core_slots),
+                 contiguous_place(groups, core_slots))
+        asg = min(seeds, key=lambda a: placement_cost(a, flows, dist))
+        asg = anneal_place(asg, flows, dist, core_slots,
+                           seed=seed, iters=anneal_iters)
+    else:
+        raise ValueError(f"unknown placement strategy {strategy!r}")
+    return Placement(assignment=asg,
+                     cost=placement_cost(asg, flows, dist),
+                     strategy=strategy, n_domains=n_domains)

@@ -13,20 +13,30 @@ from repro.core.zspe import CoreGeometry, CycleModel, zspe_matmul
 from repro.core.energy import (
     CoreEnergyModel,
     ChipEnergyModel,
+    InterconnectEnergyModel,
     RiscvPowerModel,
     calibrate_chip,
     calibrate_core,
 )
 from repro.core.noc import (
+    FlowRoute,
     RouterParams,
     RoutingTable,
     TopologyMetrics,
     analyze,
     comparison_table,
+    compile_flow,
     fullerene_adjacency,
     fullerene_metrics,
+    replay_flows,
     simulate_traffic,
 )
-from repro.core.soc import ChipSimulator, EnuProgram, Mapping, map_network
+from repro.core.soc import (
+    ChipSimulator,
+    EnuProgram,
+    Mapping,
+    map_network,
+    validate_capacity,
+)
 
 __all__ = [n for n in dir() if not n.startswith("_")]

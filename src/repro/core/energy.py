@@ -31,6 +31,8 @@ from __future__ import annotations
 
 import dataclasses
 
+from repro.core.noc import RouterParams as _RouterParams
+
 # ---------------------------------------------------------------------------
 # Published anchor measurements (inputs to calibration, used nowhere else)
 # ---------------------------------------------------------------------------
@@ -170,6 +172,51 @@ class RiscvPowerModel:
 
     def saving_vs_baseline(self, duty_active: float) -> float:
         return 1.0 - self.average_power_mw(duty_active) / self.p_active_mw
+
+
+# ---------------------------------------------------------------------------
+# Interconnect: on-chip CMRouter hops vs off-chip level-2 hops (scale-up)
+# ---------------------------------------------------------------------------
+
+# A level-2 hop leaves the die through the extended high-level router (the
+# paper's scale-up path).  Off-chip I/O at 55 nm costs roughly an order of
+# magnitude more than an on-chip CMRouter traversal; 0.26 pJ/hop = 10x the
+# published 0.026 pJ P2P hop.  Estimate, not a paper anchor.
+LEVEL2_HOP_PJ = 0.26
+
+
+@dataclasses.dataclass(frozen=True)
+class InterconnectEnergyModel:
+    """Prices a routed flow's hops across the two interconnect levels.
+
+    Level-1 hops use the CMRouter constants (P2P or broadcast rate),
+    defaulted from `noc.RouterParams` so the two models cannot drift;
+    level-2 hops — links incident to an off-chip high-level router — use
+    `e_hop_l2_pj` regardless of mode (the off-chip link does not get the
+    broadcast fork discount).
+    """
+
+    e_hop_l1_p2p_pj: float = _RouterParams.e_hop_p2p_pj
+    e_hop_l1_bcast_pj: float = _RouterParams.e_hop_bcast_pj
+    e_hop_l2_pj: float = LEVEL2_HOP_PJ
+
+    @classmethod
+    def from_router(cls, router: "_RouterParams",
+                    e_hop_l2_pj: float = LEVEL2_HOP_PJ
+                    ) -> "InterconnectEnergyModel":
+        return cls(e_hop_l1_p2p_pj=router.e_hop_p2p_pj,
+                   e_hop_l1_bcast_pj=router.e_hop_bcast_pj,
+                   e_hop_l2_pj=e_hop_l2_pj)
+
+    def flow_pj(self, l1_hops: float, l2_hops: float,
+                broadcast: bool = False) -> float:
+        """Per-spike energy for one flow with the given hop split."""
+        e_l1 = self.e_hop_l1_bcast_pj if broadcast else self.e_hop_l1_p2p_pj
+        return e_l1 * l1_hops + self.e_hop_l2_pj * l2_hops
+
+    def level2_premium(self) -> float:
+        """How much costlier an off-chip hop is than an on-chip P2P hop."""
+        return self.e_hop_l2_pj / self.e_hop_l1_p2p_pj
 
 
 # ---------------------------------------------------------------------------

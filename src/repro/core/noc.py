@@ -84,6 +84,9 @@ def router_ids() -> np.ndarray:
     return np.arange(N_ROUTERS)
 
 
+DOMAIN_STRIDE = N_NODES + 1   # nodes per domain block in a multi-domain graph
+
+
 def multi_domain_adjacency(n_domains: int) -> np.ndarray:
     """Scale-up: `n_domains` fullerene domains, each with a level-2 router;
     level-2 routers are fully connected (the off-chip high-level ring/mesh).
@@ -97,6 +100,17 @@ def multi_domain_adjacency(n_domains: int) -> np.ndarray:
     for i, j in itertools.combinations(l2, 2):
         a[i, j] = a[j, i] = 1
     return a
+
+
+def multi_domain_core_ids(n_domains: int) -> np.ndarray:
+    """Global node ids of all cores across `n_domains` domains."""
+    return np.concatenate(
+        [d * DOMAIN_STRIDE + core_ids() for d in range(n_domains)])
+
+
+def level2_node_ids(n_domains: int) -> np.ndarray:
+    """Global node ids of the level-2 (off-chip high-level) routers."""
+    return np.array([d * DOMAIN_STRIDE + N_NODES for d in range(n_domains)])
 
 
 # --------------------------------------------------------------------------
@@ -276,58 +290,98 @@ class TrafficReport:
         return self.spikes_delivered / max(self.cycles, 1e-9)
 
 
-def simulate_traffic(
-    adj: np.ndarray,
-    flows: list[tuple[int, list[int], int]],
-    params: RouterParams = RouterParams(),
-) -> TrafficReport:
-    """Route `flows` = [(src, [dsts], n_spikes)] over the NoC.
+@dataclasses.dataclass(frozen=True)
+class FlowRoute:
+    """One compiled flow: the static route a CMRouter connection matrix
+    realizes for (src -> dsts), with per-spike hop/energy accounting
+    precomputed so simulation is a cheap replay (no BFS at sim time).
 
-    Mode selection mirrors the CMRouter: 1 destination -> P2P; >1 -> broadcast
-    (a single upstream traversal that forks at divergence points); flows that
-    share a destination are merge-eligible (counted, same cost as P2P here).
+    `hops` is charged per spike: path length for P2P; the size of the
+    forked link union for broadcast.  `l2_hops` counts links incident to a
+    level-2 router — the off-chip segment of a multi-domain route, priced
+    separately by the energy model.
+    """
+
+    src: int
+    dsts: tuple[int, ...]
+    links: tuple[tuple[int, int], ...]   # directed (u, v) link set
+    hops: int
+    l2_hops: int
+    mode: str                            # "p2p" | "broadcast"
+
+    @property
+    def l1_hops(self) -> int:
+        return self.hops - self.l2_hops
+
+
+def compile_flow(rt: RoutingTable, src: int, dsts: Sequence[int],
+                 level2_nodes: frozenset[int] = frozenset()) -> FlowRoute:
+    """Resolve one (src -> dsts) flow to its static route.
+
+    Mode selection mirrors the CMRouter: 1 destination -> P2P; >1 ->
+    broadcast (a single upstream traversal that forks at divergence
+    points, i.e. the union of per-destination shortest paths).
+    """
+    if len(dsts) == 1:
+        p = rt.path(src, int(dsts[0]))
+        links = tuple(zip(p[:-1], p[1:]))
+        mode = "p2p"
+    else:
+        link_set: set[tuple[int, int]] = set()
+        for d in dsts:
+            p = rt.path(src, int(d))
+            link_set.update(zip(p[:-1], p[1:]))
+        links = tuple(sorted(link_set))
+        mode = "broadcast"
+    l2 = sum(1 for u, v in links if u in level2_nodes or v in level2_nodes)
+    return FlowRoute(src=src, dsts=tuple(int(d) for d in dsts), links=links,
+                     hops=len(links), l2_hops=l2, mode=mode)
+
+
+def replay_flows(
+    routed: Sequence[tuple[FlowRoute, int]],
+    params: RouterParams = RouterParams(),
+    n_nodes: int = N_NODES,
+    interconnect=None,
+) -> TrafficReport:
+    """Replay precompiled flows = [(route, n_spikes)] and account for them.
 
     Cycle model: each router moves at most `peak_throughput` spikes/cycle;
     the busiest router bounds the epoch's cycles (decentralized NoCs win by
     spreading load — exactly the paper's degree-variance argument).
+
+    `interconnect` (an `energy.InterconnectEnergyModel`) prices level-2
+    hops at the off-chip rate; without it all hops cost the on-chip rate.
     """
-    rt = RoutingTable(adj)
-    n = adj.shape[0]
-    router_load = np.zeros(n, dtype=np.int64)
+    router_load = np.zeros(n_nodes, dtype=np.int64)
     total_hops = 0
     energy = 0.0
     delivered = 0
     modes = {"p2p": 0, "broadcast": 0, "merge": 0}
     dst_seen: dict[int, int] = {}
 
-    for src, dsts, n_spikes in flows:
-        if len(dsts) == 1:
-            path = rt.path(src, dsts[0])
-            hops = len(path) - 1
-            total_hops += hops * n_spikes
-            energy += params.e_hop_p2p_pj * hops * n_spikes
-            for node in path[:-1]:
-                router_load[node] += n_spikes
+    for route, n_spikes in routed:
+        total_hops += route.hops * n_spikes
+        for u, _v in route.links:
+            router_load[u] += n_spikes
+        if route.mode == "p2p":
+            e_l1 = params.e_hop_p2p_pj
             modes["p2p"] += 1
-            if dsts[0] in dst_seen:
+            if route.dsts[0] in dst_seen:
                 modes["merge"] += 1
-            dst_seen[dsts[0]] = dst_seen.get(dsts[0], 0) + 1
+            dst_seen[route.dsts[0]] = dst_seen.get(route.dsts[0], 0) + 1
         else:
-            # Broadcast: union of per-destination paths; shared prefix links
-            # are traversed once (the connection-matrix fork).
-            links: set[tuple[int, int]] = set()
-            for d in dsts:
-                p = rt.path(src, d)
-                links.update(zip(p[:-1], p[1:]))
-            hops = len(links)
-            total_hops += hops * n_spikes
-            energy += params.e_hop_bcast_pj * hops * n_spikes * len(dsts) / max(len(dsts), 1)
-            for u, _v in links:
-                router_load[u] += n_spikes
+            e_l1 = params.e_hop_bcast_pj
             modes["broadcast"] += 1
-        delivered += n_spikes * len(dsts)
+        if interconnect is None:
+            energy += e_l1 * route.hops * n_spikes
+        else:
+            energy += interconnect.flow_pj(
+                route.l1_hops, route.l2_hops, broadcast=route.mode != "p2p"
+            ) * n_spikes
+        delivered += n_spikes * len(route.dsts)
 
-    cycles = float(router_load.max()) / params.peak_throughput if len(flows) else 0.0
+    cycles = float(router_load.max()) / params.peak_throughput if len(routed) else 0.0
     return TrafficReport(
         spikes_delivered=delivered,
         total_hops=total_hops,
@@ -335,6 +389,23 @@ def simulate_traffic(
         cycles=cycles,
         mode_counts=modes,
     )
+
+
+def simulate_traffic(
+    adj: np.ndarray,
+    flows: list[tuple[int, list[int], int]],
+    params: RouterParams = RouterParams(),
+) -> TrafficReport:
+    """Route `flows` = [(src, [dsts], n_spikes)] over the NoC.
+
+    Convenience wrapper: compiles each flow against a fresh routing table
+    and replays it.  Hot paths (ChipSimulator, the compiler) should compile
+    once with `compile_flow` and call `replay_flows` per timestep instead.
+    """
+    rt = RoutingTable(adj)
+    routed = [(compile_flow(rt, src, dsts), n_spikes)
+              for src, dsts, n_spikes in flows]
+    return replay_flows(routed, params, n_nodes=adj.shape[0])
 
 
 def uniform_random_flows(

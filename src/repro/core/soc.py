@@ -64,13 +64,42 @@ class Mapping:
         return sorted({a.core_id for a in self.assignments})
 
 
-def map_network(layer_sizes: Sequence[int],
-                neurons_per_core: int = E.NEURONS_PER_CORE) -> Mapping:
-    """Greedy contiguous placement of layers onto the 20 cores.
+def validate_capacity(layer_sizes: Sequence[int],
+                      neurons_per_core: int = E.NEURONS_PER_CORE,
+                      n_cores: int = NOC.N_CORES) -> None:
+    """Reject networks that cannot fit the chip before any placement runs."""
+    need = sum(int(s) for s in layer_sizes[1:])
+    cap = n_cores * neurons_per_core
+    if need > cap:
+        raise ValueError(
+            f"network needs {need} neurons but chip capacity is {cap} "
+            f"({n_cores} cores x {neurons_per_core} neurons/core); "
+            f"layer sizes {tuple(layer_sizes)} — use the compiler's "
+            f"multi-domain scale-up (repro.compiler.ChipSpec(max_domains=N)) "
+            f"for larger networks")
 
-    Layer 0 is the input population (not placed).  Raises if the network
-    exceeds chip capacity — same failure mode as the real mapper.
+
+def map_network(layer_sizes: Sequence[int],
+                neurons_per_core: int = E.NEURONS_PER_CORE,
+                strategy: str = "greedy", seed: int = 0) -> Mapping:
+    """Place a feed-forward SNN onto the 20 cores.
+
+    strategy "greedy" is the legacy contiguous layout (layers onto cores in
+    id order, traffic-blind, no spreading).  Any other value is forwarded
+    to the mapping compiler (repro.compiler.compile_network), e.g.
+    "anneal" — traffic-aware placement with simulated-annealing refinement.
+
+    Layer 0 is the input population (not placed).  Raises ValueError when
+    the network exceeds chip capacity.
     """
+    validate_capacity(layer_sizes, neurons_per_core)
+    if strategy != "greedy":
+        from repro import compiler as CC
+
+        spec = CC.ChipSpec(neurons_per_core=neurons_per_core)
+        compiled = CC.compile_network(list(layer_sizes), spec,
+                                      strategy=strategy, seed=seed)
+        return compiled.to_soc_mapping()
     cores = list(NOC.core_ids())
     assignments: list[CoreAssignment] = []
     nxt = 0
@@ -154,12 +183,14 @@ class ChipSimulator:
         partial_update: bool = True,
         leak: float = 0.9,
         threshold: float = 1.0,
+        mapping: Mapping | None = None,
+        mapping_strategy: str = "anneal",
     ):
         from repro.core.neuron import LIFParams  # local import to avoid cycle
 
         self.weights = [jnp.asarray(w, jnp.float32) for w in weights]
         sizes = [int(self.weights[0].shape[0])] + [int(w.shape[1]) for w in self.weights]
-        self.mapping = map_network(sizes)
+        self.mapping = mapping or map_network(sizes, strategy=mapping_strategy)
         self.quant_cfg = quant_cfg or CodebookConfig(n_levels=16, bit_width=8)
         self.geom = geometry or CoreGeometry(freq_hz=freq_hz)
         self.freq_hz = freq_hz
@@ -170,13 +201,41 @@ class ChipSimulator:
         self.chip_model = E.calibrate_chip(self.core_model)
         self.riscv = E.RiscvPowerModel()
         self.router = NOC.RouterParams()
-        self.adj = NOC.fullerene_adjacency()
+        # a mapping with core ids beyond one domain (from the compiler's
+        # scale-up stage) runs on the matching multi-domain fabric, with
+        # level-2 hops priced at the off-chip rate
+        max_node = max(a.core_id for a in self.mapping.assignments)
+        if max_node >= NOC.N_NODES:
+            n_domains = max_node // NOC.DOMAIN_STRIDE + 1
+            self.adj = NOC.multi_domain_adjacency(n_domains)
+            self._level2 = frozenset(
+                int(x) for x in NOC.level2_node_ids(n_domains))
+            self.interconnect = E.InterconnectEnergyModel.from_router(self.router)
+        else:
+            self.adj = NOC.fullerene_adjacency()
+            self._level2 = frozenset()
+            self.interconnect = None
         self.routing = NOC.RoutingTable(self.adj)
+        # routes are compiled ONCE from the mapping; each timestep only
+        # replays them (no BFS in the simulation loop)
+        self._layer_routes = self._compile_layer_routes()
         self.lif = LIFParams(threshold=threshold, leak=leak,
                              partial_update=partial_update)
         if quant_cfg is not None:
             from repro.core.quant import dequantize, quantize
             self.weights = [dequantize(quantize(w, quant_cfg)) for w in self.weights]
+
+    def _compile_layer_routes(self) -> dict[int, list[NOC.FlowRoute]]:
+        """Static routes for every layer->layer transition in the mapping:
+        the spikes layer `li` fires travel from each of its cores to every
+        core holding layer `li+1`."""
+        routes: dict[int, list[NOC.FlowRoute]] = {}
+        for li in range(1, len(self.weights)):
+            srcs = [a.core_id for a in self.mapping.cores_of_layer(li)]
+            dsts = sorted({a.core_id for a in self.mapping.cores_of_layer(li + 1)})
+            routes[li] = [NOC.compile_flow(self.routing, s, dsts, self._level2)
+                          for s in srcs]
+        return routes
 
     # -- one sample ---------------------------------------------------------
 
@@ -189,9 +248,6 @@ class ChipSimulator:
         out_counts = jnp.zeros((int(self.weights[-1].shape[1]),), jnp.float32)
         acc = StepStats()
         wall = 0.0
-
-        # input -> core-0 group routing flows are derived per timestep below
-        layer_srcs = self._layer_source_nodes()
 
         for t in range(T):
             spikes = spike_train[t].astype(jnp.float32)
@@ -213,11 +269,16 @@ class ChipSimulator:
                         n_pre, a.n_neurons, nnz, core_touched,
                         self.zero_skip, self.partial_update)
                     per_core_cycles[a.core_id] = per_core_cycles.get(a.core_id, 0.0) + cyc
-                # NoC: spikes fired by this layer travel to next layer's cores
+                # NoC: spikes fired by this layer travel to next layer's
+                # cores over the precompiled routes (replay, no BFS here)
                 fired = float(jnp.sum(out))
                 if fired > 0 and li + 1 < len(self.weights):
-                    flows = self._spike_flows(li + 1, li + 2, int(fired))
-                    rep = NOC.simulate_traffic(self.adj, flows, self.router)
+                    routes = self._layer_routes[li + 1]
+                    per_src = max(1, int(fired) // max(len(routes), 1))
+                    rep = NOC.replay_flows(
+                        [(fr, per_src) for fr in routes], self.router,
+                        n_nodes=self.adj.shape[0],
+                        interconnect=self.interconnect)
                     acc.noc_hops += rep.total_hops
                     acc.noc_energy_pj += rep.energy_pj
                     acc.spikes_routed += fired
@@ -226,16 +287,6 @@ class ChipSimulator:
             wall += max(per_core_cycles.values()) if per_core_cycles else 1.0
 
         return out_counts, self._report(T, acc, wall)
-
-    def _layer_source_nodes(self):
-        return {li: [a.core_id for a in self.mapping.cores_of_layer(li)]
-                for li in range(1, len(self.weights) + 1)}
-
-    def _spike_flows(self, src_layer: int, dst_layer: int, n_spikes: int):
-        srcs = [a.core_id for a in self.mapping.cores_of_layer(src_layer)]
-        dsts = [a.core_id for a in self.mapping.cores_of_layer(dst_layer)]
-        per_src = max(1, n_spikes // max(len(srcs), 1))
-        return [(s, list(dsts), per_src) for s in srcs]
 
     def _report(self, steps: int, acc: StepStats, wall: float) -> ChipReport:
         s = acc.sparsity

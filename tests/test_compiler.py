@@ -1,0 +1,227 @@
+"""Mapping-compiler tests: partition/place/route round-trips, the
+greedy-vs-optimized cost guarantee, capacity validation, and multi-domain
+scale-up with level-2 energy pricing."""
+import numpy as np
+import pytest
+
+from repro import compiler as COMP
+from repro.core import noc as NOC
+from repro.core.soc import ChipSimulator, map_network, validate_capacity
+
+NMNIST_SIZES = (2312, 4096, 1024, 10)
+
+
+# ---------------------------------------------------------------------------
+# stage 1: partition
+# ---------------------------------------------------------------------------
+
+def test_partition_places_every_neuron_exactly_once():
+    cn = COMP.compile_network(list(NMNIST_SIZES))
+    by_layer = {}
+    for g in cn.groups:
+        by_layer.setdefault(g.layer, []).append(g)
+    for layer in cn.net.placed_layers:
+        slices = sorted(by_layer[layer.index], key=lambda g: g.lo)
+        assert slices[0].lo == 0
+        assert slices[-1].hi == layer.n_neurons
+        for a, b in zip(slices[:-1], slices[1:]):
+            assert a.hi == b.lo            # contiguous, no gap, no overlap
+
+
+def test_partition_respects_core_capacity():
+    cn = COMP.compile_network([100, 3 * 8192 + 5, 10])
+    for g in cn.groups:
+        assert 0 < g.n_neurons <= cn.spec.neurons_per_core
+    # one codebook per core: a group never spans layers
+    assert len({(g.gid) for g in cn.groups}) == len(cn.groups)
+    # placement is injective: one group per physical core
+    cores = list(cn.placement.assignment.values())
+    assert len(cores) == len(set(cores))
+
+
+def test_partition_spread_uses_idle_cores():
+    cn = COMP.compile_network(list(NMNIST_SIZES))
+    assert len(cn.groups) == 20                  # all cores of one domain
+    cn_min = COMP.compile_network(list(NMNIST_SIZES), spread=False)
+    assert len(cn_min.groups) == 3               # capacity-driven minimum
+
+
+# ---------------------------------------------------------------------------
+# capacity validation (soc + compiler agree)
+# ---------------------------------------------------------------------------
+
+def test_oversized_network_raises_everywhere():
+    too_big = [100, 21 * 8192]                   # > 20 cores x 8192
+    with pytest.raises(ValueError, match="capacity"):
+        map_network(too_big)
+    with pytest.raises(ValueError, match="capacity"):
+        validate_capacity(too_big)
+    with pytest.raises(ValueError, match="capacity"):
+        COMP.compile_network(too_big, COMP.ChipSpec(max_domains=1))
+    rng = np.random.default_rng(0)
+    w = [np.asarray(rng.normal(0, 0.1, (100, 21 * 8192)), np.float32)]
+    with pytest.raises(ValueError, match="capacity"):
+        ChipSimulator(w)
+
+
+def test_too_many_tiny_layers_raises():
+    # 21 one-neuron layers fit the neuron budget but not the core count
+    sizes = [8] + [1] * 21
+    with pytest.raises(ValueError, match="cores"):
+        COMP.compile_network(sizes, COMP.ChipSpec(max_domains=1))
+
+
+# ---------------------------------------------------------------------------
+# stage 2: place — the optimization guarantee
+# ---------------------------------------------------------------------------
+
+def test_anneal_strictly_beats_contiguous_on_nmnist_scale():
+    cn = COMP.compile_network(list(NMNIST_SIZES), strategy="anneal", seed=0)
+    assert cn.cost < cn.baseline_cost            # strictly lower traffic cost
+    assert cn.improvement > 1.0
+
+
+def test_placement_cost_is_hop_weighted_traffic():
+    cn = COMP.compile_network([64, 128, 10], spread=False)
+    # two placed layers -> single flow L1 -> L2 at the L1 spike rate
+    dist = NOC.bfs_distances(cn.routed.adjacency)
+    (g1, g2) = cn.groups
+    c1, c2 = cn.core_of_group(g1.gid), cn.core_of_group(g2.gid)
+    expect = cn.net.spike_rates[1] * dist[c1, c2]
+    assert abs(cn.cost - expect) < 1e-6
+
+
+def test_anneal_deterministic_given_seed():
+    a = COMP.compile_network(list(NMNIST_SIZES), seed=7)
+    b = COMP.compile_network(list(NMNIST_SIZES), seed=7)
+    assert a.placement.assignment == b.placement.assignment
+    assert a.cost == b.cost
+
+
+# ---------------------------------------------------------------------------
+# stage 3: route — connection matrices reproduce BFS connectivity
+# ---------------------------------------------------------------------------
+
+def test_routed_tables_reproduce_bfs_paths():
+    cn = COMP.compile_network(list(NMNIST_SIZES))
+    COMP.verify_roundtrip(cn.routed)             # raises on any miss
+    # spot-check: table walk == BFS path hop-for-hop
+    rt = cn.routed.routing
+    some = cn.routed.layer_flows[1][0]
+    for dst in some.dsts[:5]:
+        if dst == some.src:
+            continue
+        walked = cn.routed.router_tables.follow(some.src, dst)
+        assert walked == rt.path(some.src, dst)
+
+
+def test_flow_routes_match_simulate_traffic():
+    """Replaying compiled routes must equal the legacy one-shot simulator."""
+    rng = np.random.default_rng(3)
+    adj = NOC.fullerene_adjacency()
+    flows = NOC.uniform_random_flows(rng, 50, bcast_frac=0.3)
+    legacy = NOC.simulate_traffic(adj, flows)
+    rt = NOC.RoutingTable(adj)
+    routed = [(NOC.compile_flow(rt, s, d), n) for s, d, n in flows]
+    replay = NOC.replay_flows(routed, n_nodes=adj.shape[0])
+    assert replay.total_hops == legacy.total_hops
+    assert replay.spikes_delivered == legacy.spikes_delivered
+    assert abs(replay.energy_pj - legacy.energy_pj) < 1e-9
+    assert replay.mode_counts == legacy.mode_counts
+
+
+# ---------------------------------------------------------------------------
+# stage 4: scale-up
+# ---------------------------------------------------------------------------
+
+def test_scaleup_spans_two_domains_with_l2_pricing():
+    spec = COMP.ChipSpec(max_domains=4)
+    cn = COMP.compile_network((2312, 81920, 81920, 10), spec, verify=True)
+    assert cn.n_domains_used >= 2
+    assert cn.routed.total_l2_hops() > 0
+    es = cn.energy_summary()
+    assert es["l2_pj_per_step"] > 0
+    assert es["level2_premium"] > 1.0
+    # off-chip hops must be priced above the same count of on-chip hops
+    ic = spec.interconnect
+    assert ic.flow_pj(0, 10) > ic.flow_pj(10, 0)
+
+
+def test_single_domain_has_no_l2_hops():
+    cn = COMP.compile_network(list(NMNIST_SIZES))
+    assert cn.plan.n_domains == 1
+    assert cn.routed.total_l2_hops() == 0
+    assert cn.energy_summary()["l2_pj_per_step"] == 0
+
+
+# ---------------------------------------------------------------------------
+# end-to-end: compiled mapping through the ChipSimulator
+# ---------------------------------------------------------------------------
+
+def test_compiled_mapping_preserves_functional_output():
+    """Placement must never change the math — only where it runs."""
+    rng = np.random.default_rng(0)
+    sizes = (128, 256, 10)
+    w = [np.asarray(rng.normal(0, 0.4, (a, b)), np.float32)
+         for a, b in zip(sizes[:-1], sizes[1:])]
+    spikes = np.asarray(rng.random((6, sizes[0])) < 0.1, np.float32)
+    out_greedy, rep_g = ChipSimulator(w, mapping_strategy="greedy").run(spikes)
+    out_comp, rep_c = ChipSimulator(w, mapping_strategy="anneal").run(spikes)
+    np.testing.assert_array_equal(np.asarray(out_greedy), np.asarray(out_comp))
+    # compiled mapping spreads layers: strictly more cores, fewer wall cycles
+    assert rep_c.wall_cycles <= rep_g.wall_cycles
+
+
+def test_multi_domain_mapping_runs_in_simulator():
+    """A compiled scale-up mapping must simulate on the matching
+    multi-domain fabric with level-2 hops priced at the off-chip rate."""
+    rng = np.random.default_rng(2)
+    sizes = [8] + [4] * 21                       # 22 layers -> 2 domains
+    w = [np.asarray(rng.normal(0, 1.2, (a, b)), np.float32)
+         for a, b in zip(sizes[:-1], sizes[1:])]
+    cn = COMP.compile_network(sizes, COMP.ChipSpec(max_domains=2))
+    assert cn.n_domains_used >= 2
+    sim = ChipSimulator(w, mapping=cn.to_soc_mapping())
+    assert sim.interconnect is not None
+    assert any(fr.l2_hops > 0
+               for frs in sim._layer_routes.values() for fr in frs)
+    spikes = np.asarray(rng.random((3, sizes[0])) < 0.5, np.float32)
+    out, rep = sim.run(spikes)
+    assert out.shape == (sizes[-1],)
+    assert rep.noc_energy_pj >= 0
+
+
+def test_map_network_greedy_fallback_is_legacy_contiguous():
+    m = map_network([100, 8192 + 10, 50], strategy="greedy")
+    cores = NOC.core_ids()
+    assert [a.core_id for a in m.assignments] == [int(c) for c in cores[:3]]
+    assert [(a.layer, a.neuron_lo, a.neuron_hi) for a in m.assignments] == \
+        [(1, 0, 8192), (1, 8192, 8202), (2, 0, 50)]
+
+
+def test_conv_frontend_partitions():
+    from repro.models.snn_conv import ConvSNNConfig
+
+    cfg = ConvSNNConfig(in_shape=(32, 32, 2), channels=(16, 32), timesteps=8)
+    cn = COMP.compile_network(cfg)
+    sizes = cn.net.layer_sizes()
+    assert sizes[0] == 32 * 32 * 2
+    assert sizes[1] == 32 * 32 * 16              # stage 1, pre-pool resolution
+    assert sizes[2] == 16 * 16 * 32
+    assert sizes[3] == cfg.n_classes
+    assert cn.net.layers[1].kind == "conv"
+    assert cn.net.layers[1].fan_in == 3 * 3 * 2
+
+
+def test_measured_spike_rates_feed_placement():
+    rng = np.random.default_rng(1)
+    sizes = (64, 96, 10)
+    w = [np.asarray(rng.normal(0, 0.5, (a, b)), np.float32)
+         for a, b in zip(sizes[:-1], sizes[1:])]
+    spikes = np.asarray(rng.random((8, 64)) < 0.2, np.float32)
+    rates = COMP.measure_spike_rates(w, spikes)
+    assert len(rates) == len(sizes)
+    assert abs(rates[0] - float(spikes.sum()) / 8) < 1e-6
+    graph = COMP.from_weights(w, spike_rates=rates)
+    cn = COMP.compile_network(graph)
+    assert cn.net.spike_rates == tuple(rates)

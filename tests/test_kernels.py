@@ -4,7 +4,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+from hypothesis_compat import given, settings, st
 
 from repro.kernels import ops
 from repro.kernels.ref import codebook_matmul_ref, lif_update_ref, zspe_spmm_ref
