@@ -14,8 +14,8 @@ def main() -> None:
     root = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
     sys.path.insert(0, os.path.join(root, "src"))
     sys.path.insert(0, root)                    # `python benchmarks/run.py`
-    from benchmarks import (compiler_bench, fig3_core_efficiency, fig5_noc,
-                            fig6_riscv_power, kernel_bench, roofline,
+    from benchmarks import (compiler_bench, engine_bench, fig3_core_efficiency,
+                            fig5_noc, fig6_riscv_power, kernel_bench, roofline,
                             table1_chip)
 
     results = {}
@@ -27,6 +27,7 @@ def main() -> None:
     results["fig3"] = fig3_core_efficiency.main(emit)
     results["fig5"] = fig5_noc.main(emit)
     results["compiler"] = compiler_bench.main(emit)
+    results["engine"] = engine_bench.main(emit)
     results["fig6"] = fig6_riscv_power.main(emit)
     results["table1"] = table1_chip.main(emit)
     results["kernels"] = kernel_bench.main(emit)

@@ -1,7 +1,8 @@
 """Serve a small LM with batched requests — the serving driver
 (the paper is an edge-inference chip, so serving is its LM-framework
 analogue).  Demonstrates prefill + continuous batched decode and the C3
-quantized-weight serving mode.
+quantized-weight serving mode, then the neuromorphic path: event-stream
+requests served through the batched chip engine (serve/snn_server.py).
 
 Run:  PYTHONPATH=src python examples/serve_batched.py
 """
@@ -50,6 +51,26 @@ def main():
                              param_transform=Q.make_param_transform(jnp.float32))
     print(f"quantized serving: weight bytes {before/2**20:.1f}MiB -> "
           f"{after/2**20:.1f}MiB, next-token argmax {int(jnp.argmax(lg))}")
+
+    # -- neuromorphic serving: event streams on the batched chip engine --
+    from repro.core.soc import ChipSimulator
+    from repro.serve.snn_server import SnnRequest, SnnServer
+
+    w = [jnp.asarray(rng.normal(0, 0.4, (288, 256)), jnp.float32),
+         jnp.asarray(rng.normal(0, 0.4, (256, 10)), jnp.float32)]
+    sim = ChipSimulator(w, freq_hz=100e6, engine="compiled")
+    snn = SnnServer(sim, batch_slots=8)
+    for uid in range(12):
+        snn.submit(SnnRequest(
+            uid=uid, events=(rng.random((16, 288)) < 0.1).astype(np.float32)))
+    t0 = time.time()
+    served = snn.run()
+    dt = time.time() - t0
+    pj = sum(r.energy_pj for r in served)
+    print(f"snn serving: {len(served)} event requests in {dt*1e3:.0f} ms "
+          f"({len(served)/max(dt, 1e-9):.0f} req/s incl. compile), "
+          f"{pj/len(served)/1e3:.1f} nJ/request, "
+          f"pJ/SOP {served[0].pj_per_sop:.3f}")
 
 
 if __name__ == "__main__":

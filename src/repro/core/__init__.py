@@ -7,7 +7,14 @@ C4  fullerene-like NoC                     -> repro.core.noc
 C5  heterogeneous SoC / ENU coupling       -> repro.core.soc
 calibrated 55nm energy model               -> repro.core.energy
 """
-from repro.core.neuron import LIFParams, LIFState, init_state, lif_step, run_timesteps
+from repro.core.neuron import (
+    LIFParams,
+    LIFState,
+    init_state,
+    lif_step,
+    run_timesteps,
+    touch_mask,
+)
 from repro.core.quant import CodebookConfig, QuantizedTensor, dequantize, fake_quant, quantize
 from repro.core.zspe import CoreGeometry, CycleModel, zspe_matmul
 from repro.core.energy import (
@@ -17,20 +24,25 @@ from repro.core.energy import (
     RiscvPowerModel,
     calibrate_chip,
     calibrate_core,
+    price_batched,
 )
 from repro.core.noc import (
     FlowRoute,
+    FlowTable,
     RouterParams,
     RoutingTable,
     TopologyMetrics,
     analyze,
     comparison_table,
     compile_flow,
+    compile_flow_table,
     fullerene_adjacency,
     fullerene_metrics,
     replay_flows,
+    replay_flows_array,
     simulate_traffic,
 )
+from repro.core.engine import CompiledEngine, EngineTables, lower_tables
 from repro.core.soc import (
     ChipSimulator,
     EnuProgram,

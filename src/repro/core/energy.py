@@ -31,6 +31,8 @@ from __future__ import annotations
 
 import dataclasses
 
+import numpy as np
+
 from repro.core.noc import RouterParams as _RouterParams
 
 # ---------------------------------------------------------------------------
@@ -217,6 +219,56 @@ class InterconnectEnergyModel:
     def level2_premium(self) -> float:
         """How much costlier an off-chip hop is than an on-chip P2P hop."""
         return self.e_hop_l2_pj / self.e_hop_l1_p2p_pj
+
+
+# ---------------------------------------------------------------------------
+# Batched workload pricing (the compiled engine's report stage)
+# ---------------------------------------------------------------------------
+
+RISCV_CTRL_CYCLES_PER_STEP = 200.0   # timestep-switch control overhead
+
+
+def price_batched(
+    core: CoreEnergyModel,
+    riscv: RiscvPowerModel,
+    *,
+    nominal_sops,
+    performed_sops,
+    noc_energy_pj,
+    wall_cycles,
+    steps,
+    freq_hz: float,
+    zero_skip: bool = True,
+    partial_update: bool = True,
+) -> dict:
+    """Price per-sample accounting arrays into energy totals.
+
+    All stat inputs broadcast together over arbitrary leading axes (the
+    batch dimension of the compiled engine, or plain scalars for the
+    interpretive simulator — `ChipSimulator._report` routes through this
+    same function so the two paths cannot drift).  Returns float64 numpy
+    arrays: sparsity, core/riscv/total energy (pJ), and the RISC-V duty.
+    """
+    nominal = np.asarray(nominal_sops, np.float64)
+    performed = np.asarray(performed_sops, np.float64)
+    noc_pj = np.asarray(noc_energy_pj, np.float64)
+    wall = np.asarray(wall_cycles, np.float64)
+    sparsity = np.where(nominal == 0, 1.0,
+                        1.0 - performed / np.maximum(nominal, 1e-300))
+    core_pj = core.pj_per_sop(sparsity, zero_skip, partial_update) * nominal
+    t_wall_s = wall / freq_hz
+    duty = np.minimum(
+        1.0, steps * RISCV_CTRL_CYCLES_PER_STEP / np.maximum(wall, 1.0))
+    riscv_pj = riscv.average_power_mw(duty) * 1e-3 * t_wall_s * 1e12
+    total = core_pj + noc_pj + riscv_pj
+    return {
+        "sparsity": sparsity,
+        "core_pj": core_pj,
+        "riscv_pj": riscv_pj,
+        "noc_pj": noc_pj,
+        "total_pj": total,
+        "duty": duty,
+    }
 
 
 # ---------------------------------------------------------------------------

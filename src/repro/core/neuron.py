@@ -70,7 +70,8 @@ spike_fn.defvjp(_spike_fwd, _spike_bwd)
 
 
 def lif_step(
-    state: LIFState, current: jax.Array, p: LIFParams
+    state: LIFState, current: jax.Array, p: LIFParams,
+    touched: jax.Array | None = None,
 ) -> tuple[LIFState, jax.Array, jax.Array]:
     """One LIF timestep.
 
@@ -78,12 +79,21 @@ def lif_step(
     whose MP was actually touched this step (the partial-update set); the
     energy model charges `e_upd` only for those.
 
+    `touched` optionally supplies the partial-update mask explicitly —
+    the chip's updater is driven by the ZSPE's spike-indexed work, i.e. a
+    neuron is touched when any valid spike reaches one of its nonzero
+    synapses.  The simulators pass that connectivity mask (see
+    `touch_mask`); it is integer-exact, so it cannot flip when a float
+    current cancels to exactly zero under a different summation order.
+    Without it the mask falls back to ``current != 0`` (equivalent except
+    on such exact-cancellation ties).
+
     With ``partial_update`` the semantics are *identical* to the dense
     update: untouched neurons accumulate pending leak steps in ``elapsed``
     and apply ``leak**elapsed`` lazily when next touched (or when read out).
     This mirrors the chip, where the updater stores a timestep stamp.
     """
-    has_input = current != 0.0
+    has_input = (current != 0.0) if touched is None else touched
     if p.partial_update:
         pending = state.elapsed + 1
         # Lazy leak: apply alpha**pending only for touched neurons.
@@ -108,6 +118,18 @@ def lif_step(
         v_reset = jnp.where(updated, v_after, state.v)
 
     return LIFState(v=v_reset, elapsed=new_elapsed), spikes, updated
+
+
+def touch_mask(spikes: jax.Array, nonzero_w: jax.Array) -> jax.Array:
+    """Connectivity-driven partial-update mask.
+
+    `nonzero_w` is ``(w != 0)`` as float; the product counts the valid
+    spikes reaching each post-neuron through nonzero synapses.  The
+    counts are small integers, exact in f32 under any summation order —
+    so the mask is bit-identical between the interpretive and the
+    compiled (scan/vmap) execution engines.
+    """
+    return (spikes @ nonzero_w) > 0
 
 
 def settle_state(state: LIFState, p: LIFParams) -> LIFState:

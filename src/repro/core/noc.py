@@ -391,6 +391,76 @@ def replay_flows(
     )
 
 
+@dataclasses.dataclass(frozen=True)
+class FlowTable:
+    """Array lowering of a set of compiled `FlowRoute`s.
+
+    Everything `replay_flows` derives per call is precomputed into flat
+    numpy arrays so a whole-timestep replay becomes a handful of
+    multiply-adds — cheap on the host and, more importantly, liftable into
+    a traced XLA program (the compiled engine bakes `hops_total` /
+    `energy_total_pj` in as scan constants).  Pricing matches
+    `replay_flows` exactly: per-spike hop counts, P2P/broadcast rates, and
+    level-2 (off-chip) hops via the interconnect model.
+    """
+
+    n_flows: int
+    hops: np.ndarray           # (F,) int64 per-spike hops of each flow
+    energy_pj: np.ndarray      # (F,) float64 per-spike energy of each flow
+    router_load: np.ndarray    # (F, n_nodes) int64 per-spike router occupancy
+    dst_fanout: np.ndarray     # (F,) int64 destinations per flow
+
+    @property
+    def hops_total(self) -> int:
+        return int(self.hops.sum())
+
+    @property
+    def energy_total_pj(self) -> float:
+        return float(self.energy_pj.sum())
+
+
+def compile_flow_table(routes: Sequence[FlowRoute],
+                       params: RouterParams = RouterParams(),
+                       n_nodes: int = N_NODES,
+                       interconnect=None) -> FlowTable:
+    """Lower compiled flows to a `FlowTable` (the batch-friendly replay)."""
+    f = len(routes)
+    hops = np.zeros(f, np.int64)
+    energy = np.zeros(f, np.float64)
+    load = np.zeros((f, n_nodes), np.int64)
+    fanout = np.zeros(f, np.int64)
+    for i, route in enumerate(routes):
+        hops[i] = route.hops
+        fanout[i] = len(route.dsts)
+        for u, _v in route.links:
+            load[i, u] += 1
+        if interconnect is None:
+            e_l1 = (params.e_hop_p2p_pj if route.mode == "p2p"
+                    else params.e_hop_bcast_pj)
+            energy[i] = e_l1 * route.hops
+        else:
+            energy[i] = interconnect.flow_pj(
+                route.l1_hops, route.l2_hops, broadcast=route.mode != "p2p")
+    return FlowTable(n_flows=f, hops=hops, energy_pj=energy,
+                     router_load=load, dst_fanout=fanout)
+
+
+def replay_flows_array(table: FlowTable, n_spikes,
+                       params: RouterParams = RouterParams()):
+    """Replay every flow of `table` with `n_spikes` spikes each.
+
+    `n_spikes` may be a python int, a numpy array, or a traced jnp scalar
+    (broadcast over flows) — the returns are then arrays of the same
+    shape: (total_hops, energy_pj, cycles).  Agrees with `replay_flows`
+    on uniform per-flow spike counts.
+    """
+    hops = table.hops_total * n_spikes
+    energy = table.energy_total_pj * n_spikes
+    peak = table.router_load.sum(axis=0).max() if table.n_flows else 0
+    cycles = peak * n_spikes / params.peak_throughput
+    return hops, energy, cycles
+
+
 def simulate_traffic(
     adj: np.ndarray,
     flows: list[tuple[int, list[int], int]],

@@ -169,8 +169,15 @@ class ChipSimulator:
     """Functional + energy simulation of the whole SoC for a feed-forward
     SNN described by per-layer weight matrices.
 
-    The numerics ride on jnp (so the same code validates against
-    models/snn.py outputs); accounting rides on numpy scalars.
+    Two execution engines share one lowered mapping:
+
+    * ``engine="compiled"`` (default) — `repro.core.engine.CompiledEngine`:
+      the whole inference is one XLA program (`jax.lax.scan` over
+      timesteps, `jax.vmap` over the batch), with the mapping, cycle and
+      NoC models lowered to arrays.  This is the throughput path.
+    * ``engine="reference"`` — the original interpretive Python loop
+      (one sample, one timestep, one layer at a time).  Kept as the
+      differential-testing oracle; see tests/test_engine_equiv.py.
     """
 
     def __init__(
@@ -185,6 +192,7 @@ class ChipSimulator:
         threshold: float = 1.0,
         mapping: Mapping | None = None,
         mapping_strategy: str = "anneal",
+        engine: str = "compiled",
     ):
         from repro.core.neuron import LIFParams  # local import to avoid cycle
 
@@ -224,6 +232,23 @@ class ChipSimulator:
         if quant_cfg is not None:
             from repro.core.quant import dequantize, quantize
             self.weights = [dequantize(quantize(w, quant_cfg)) for w in self.weights]
+        # connectivity masks for the partial-update touch set (see
+        # neuron.touch_mask): computed AFTER quantization so both engines
+        # see the synapses the chip actually programs
+        self.nonzero_weights = [(w != 0).astype(jnp.float32)
+                                for w in self.weights]
+        if engine not in ("compiled", "reference"):
+            raise ValueError(f"engine must be 'compiled' or 'reference', "
+                             f"got {engine!r}")
+        self.engine = engine
+        self._compiled = None    # CompiledEngine, built lazily
+
+    def compiled_engine(self):
+        """The lazily-built batched XLA engine for this mapping."""
+        if self._compiled is None:
+            from repro.core.engine import CompiledEngine
+            self._compiled = CompiledEngine(self)
+        return self._compiled
 
     def _compile_layer_routes(self) -> dict[int, list[NOC.FlowRoute]]:
         """Static routes for every layer->layer transition in the mapping:
@@ -237,11 +262,36 @@ class ChipSimulator:
                           for s in srcs]
         return routes
 
-    # -- one sample ---------------------------------------------------------
+    # -- execution ----------------------------------------------------------
 
     def run(self, spike_train: jax.Array) -> tuple[jax.Array, ChipReport]:
-        """spike_train: (T, n_in) binary.  Returns (out_spike_counts, report)."""
-        from repro.core.neuron import init_state, lif_step
+        """spike_train: (T, n_in) binary.  Returns (out_spike_counts, report).
+
+        Dispatches to the engine selected at construction; both engines
+        return identical spikes and matching accounting.
+        """
+        if self.engine == "compiled":
+            return self.compiled_engine().run(spike_train)
+        return self.run_reference(spike_train)
+
+    def run_batch(self, spike_trains: jax.Array
+                  ) -> tuple[jax.Array, list[ChipReport]]:
+        """spike_trains: (B, T, n_in).  Returns ((B, n_out) counts, one
+        ChipReport per sample).  The compiled engine runs the batch as a
+        single vmapped XLA program; the reference engine loops samples."""
+        if self.engine == "compiled":
+            return self.compiled_engine().run_batch(spike_trains)
+        outs, reports = [], []
+        for b in range(int(spike_trains.shape[0])):
+            counts, rep = self.run_reference(spike_trains[b])
+            outs.append(counts)
+            reports.append(rep)
+        return jnp.stack(outs), reports
+
+    def run_reference(self, spike_train: jax.Array
+                      ) -> tuple[jax.Array, ChipReport]:
+        """The interpretive per-timestep loop (differential-test oracle)."""
+        from repro.core.neuron import init_state, lif_step, touch_mask
 
         T = int(spike_train.shape[0])
         states = [init_state(int(w.shape[1])) for w in self.weights]
@@ -257,7 +307,9 @@ class ChipSimulator:
                 nnz = float(jnp.sum(spikes != 0))
                 acc.spikes_in += nnz
                 current = spikes @ w
-                st, out, touched = lif_step(states[li], current, self.lif)
+                st, out, touched = lif_step(
+                    states[li], current, self.lif,
+                    touched=touch_mask(spikes, self.nonzero_weights[li]))
                 states[li] = st
                 acc.nominal_sops += n_pre * n_post
                 acc.performed_sops += nnz * n_post
@@ -289,17 +341,20 @@ class ChipSimulator:
         return out_counts, self._report(T, acc, wall)
 
     def _report(self, steps: int, acc: StepStats, wall: float) -> ChipReport:
-        s = acc.sparsity
-        core_pj = self.core_model.pj_per_sop(
-            s, self.zero_skip, self.partial_update) * acc.nominal_sops
-        # control-plane: RISC-V active during timestep switches only
-        t_wall_s = wall / self.freq_hz
-        duty = min(1.0, steps * 200.0 / max(wall, 1.0))   # ~200 cyc/step ctrl
-        riscv_pj = self.riscv.average_power_mw(duty) * 1e-3 * t_wall_s * 1e12
-        total = core_pj + acc.noc_energy_pj + riscv_pj
+        # one pricing implementation for both engines (energy.price_batched;
+        # the compiled engine calls it with batch arrays)
+        priced = E.price_batched(
+            self.core_model, self.riscv,
+            nominal_sops=acc.nominal_sops, performed_sops=acc.performed_sops,
+            noc_energy_pj=acc.noc_energy_pj, wall_cycles=wall, steps=steps,
+            freq_hz=self.freq_hz, zero_skip=self.zero_skip,
+            partial_update=self.partial_update)
         return ChipReport(
-            steps=steps, stats=acc, energy_pj=total, core_energy_pj=core_pj,
-            noc_energy_pj=acc.noc_energy_pj, riscv_energy_pj=riscv_pj,
+            steps=steps, stats=acc,
+            energy_pj=float(priced["total_pj"]),
+            core_energy_pj=float(priced["core_pj"]),
+            noc_energy_pj=acc.noc_energy_pj,
+            riscv_energy_pj=float(priced["riscv_pj"]),
             wall_cycles=wall, freq_hz=self.freq_hz)
 
 

@@ -85,6 +85,27 @@ class CycleModel:
         # 4-stage pipeline: stages overlap; throughput set by slowest stage.
         return max(load, syn, upd) + self.geom.pipeline_depth
 
+    def stage_cycles_array(self, n_pre: int, n_post, nnz, touched,
+                           zero_skip: bool = True, partial_update: bool = True):
+        """Array-native `stage_cycles`: `n_post`/`touched` may be jnp arrays
+        (one entry per core slice of a layer) and `nnz` a traced scalar, so
+        the compiled engine can price every core of a layer in one
+        vectorized expression inside `jax.lax.scan`."""
+        g = self.geom
+        load = -(-n_pre // g.spike_lanes)
+        syn = (nnz if zero_skip else float(n_pre)) * n_post / g.spe_lanes
+        upd = touched if partial_update else n_post
+        return load, syn, upd
+
+    def timestep_cycles_array(self, n_pre: int, n_post, nnz, touched,
+                              zero_skip: bool = True,
+                              partial_update: bool = True):
+        """Array-native `timestep_cycles` (jnp.maximum instead of max())."""
+        load, syn, upd = self.stage_cycles_array(
+            n_pre, n_post, nnz, touched, zero_skip, partial_update)
+        crit = jnp.maximum(jnp.maximum(jnp.asarray(load, jnp.float32), syn), upd)
+        return crit + self.geom.pipeline_depth
+
     def sop_count(self, n_pre: int, n_post: int, nnz: float,
                   zero_skip: bool = True) -> float:
         """SOPs actually *performed*.  With zero-skip only valid-spike

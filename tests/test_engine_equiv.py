@@ -1,0 +1,284 @@
+"""Differential tests: the batched XLA-compiled engine vs the
+interpretive reference simulator.
+
+The compiled engine (core/engine.py) must be a *drop-in* for the
+reference loop: spikes bit-identical, SOP/flit/energy accounting within
+1e-6 relative, across dense and conv-shaped networks, single- and
+multi-domain mappings, quantized and fp32 weights, batch 1 and batch 8.
+Engine invariants (batched == stacked, zero input, placement
+permutation) are property-tested via tests/hypothesis_compat.py.
+"""
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis_compat import given, settings, st
+
+from repro.core.quant import CodebookConfig
+from repro.core.soc import ChipSimulator, CoreAssignment, Mapping
+
+REL_TOL = 1e-6
+
+STAT_FIELDS = ("nominal_sops", "performed_sops", "spikes_in",
+               "spikes_routed", "neurons_touched", "noc_hops",
+               "noc_energy_pj")
+REPORT_FIELDS = ("energy_pj", "core_energy_pj", "noc_energy_pj",
+                 "riscv_energy_pj", "wall_cycles")
+
+
+def make_weights(rng, sizes, scale=0.5):
+    return [jnp.asarray(rng.normal(0, scale, (sizes[i], sizes[i + 1])),
+                        jnp.float32)
+            for i in range(len(sizes) - 1)]
+
+
+def make_trains(rng, batch, timesteps, n_in, density=0.25):
+    return jnp.asarray(rng.random((batch, timesteps, n_in)) < density,
+                       jnp.float32)
+
+
+def sim_pair(weights, mapping=None, quant_cfg=None, **kw):
+    """Reference + compiled simulators sharing one mapping."""
+    ref = ChipSimulator(weights, engine="reference", mapping=mapping,
+                        quant_cfg=quant_cfg, **kw)
+    comp = ChipSimulator(weights, engine="compiled", mapping=ref.mapping,
+                         quant_cfg=quant_cfg, **kw)
+    return ref, comp
+
+
+def assert_equivalent(ref, comp, trains):
+    counts_c, reps_c = comp.run_batch(trains)
+    for b in range(int(trains.shape[0])):
+        counts_r, rep_r = ref.run_reference(trains[b])
+        np.testing.assert_array_equal(
+            np.asarray(counts_c[b]), np.asarray(counts_r),
+            err_msg=f"sample {b}: compiled spikes differ from reference")
+        for f in STAT_FIELDS:
+            a = getattr(rep_r.stats, f)
+            c = getattr(reps_c[b].stats, f)
+            assert abs(a - c) <= REL_TOL * max(abs(a), 1.0), (b, f, a, c)
+        for f in REPORT_FIELDS:
+            a = getattr(rep_r, f)
+            c = getattr(reps_c[b], f)
+            assert abs(a - c) <= REL_TOL * max(abs(a), 1.0), (b, f, a, c)
+
+
+def conv_shaped_sizes():
+    """im2col'd layer sizes of a small spiking conv net."""
+    from repro import compiler as COMP
+    from repro.models.snn_conv import ConvSNNConfig
+
+    cfg = ConvSNNConfig(in_shape=(8, 8, 2), channels=(4, 8), n_classes=10)
+    return COMP.from_conv_config(cfg).layer_sizes()
+
+
+def multi_domain_mapping(sizes):
+    """Force a >20-core mapping so it spans two level-1 domains."""
+    from repro import compiler as COMP
+
+    spec = COMP.ChipSpec(neurons_per_core=8, max_domains=2)
+    compiled = COMP.compile_network(list(sizes), spec)
+    mapping = compiled.to_soc_mapping()
+    assert compiled.n_domains_used >= 2, "case must exercise scale-up"
+    return mapping
+
+
+# ---------------------------------------------------------------------------
+# randomized differential cases
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("batch", [1, 8])
+@pytest.mark.parametrize("seed", [0, 1, 2])
+def test_dense_fp32_matches_reference(seed, batch):
+    rng = np.random.default_rng(seed)
+    n_hidden = int(rng.integers(32, 128))
+    sizes = (int(rng.integers(16, 64)), n_hidden, 10)
+    w = make_weights(rng, sizes)
+    ref, comp = sim_pair(w, mapping_strategy="greedy")
+    assert_equivalent(ref, comp, make_trains(rng, batch, 10, sizes[0]))
+
+
+@pytest.mark.parametrize("batch", [1, 8])
+def test_dense_quantized_matches_reference(batch):
+    rng = np.random.default_rng(7)
+    sizes = (48, 96, 32, 10)
+    w = make_weights(rng, sizes, scale=0.1)
+    ref, comp = sim_pair(w, quant_cfg=CodebookConfig(n_levels=16, bit_width=8))
+    assert_equivalent(ref, comp, make_trains(rng, batch, 12, sizes[0]))
+
+
+@pytest.mark.parametrize("batch", [1, 8])
+def test_conv_shaped_matches_reference(batch):
+    rng = np.random.default_rng(11)
+    sizes = conv_shaped_sizes()
+    w = make_weights(rng, sizes, scale=0.15)
+    ref, comp = sim_pair(w)
+    assert_equivalent(ref, comp, make_trains(rng, batch, 6, sizes[0],
+                                             density=0.15))
+
+
+@pytest.mark.parametrize("batch", [1, 8])
+def test_multi_domain_matches_reference(batch):
+    rng = np.random.default_rng(23)
+    sizes = (16, 128, 64)
+    mapping = multi_domain_mapping(sizes)
+    w = make_weights(rng, sizes)
+    ref, comp = sim_pair(w, mapping=mapping)
+    assert ref.interconnect is not None        # level-2 pricing active
+    assert_equivalent(ref, comp, make_trains(rng, batch, 8, sizes[0],
+                                             density=0.3))
+
+
+def test_baseline_scheme_matches_reference():
+    """No zero-skip / full MP update (the paper's 'traditional' baseline)."""
+    rng = np.random.default_rng(3)
+    sizes = (32, 64, 10)
+    w = make_weights(rng, sizes)
+    ref, comp = sim_pair(w, zero_skip=False, partial_update=False)
+    assert_equivalent(ref, comp, make_trains(rng, 2, 8, sizes[0]))
+
+
+def test_run_dispatches_by_engine():
+    rng = np.random.default_rng(4)
+    w = make_weights(rng, (24, 32, 10))
+    train = make_trains(rng, 1, 6, 24)[0]
+    ref, comp = sim_pair(w)
+    counts_c, rep_c = comp.run(train)          # compiled single-sample path
+    counts_r, rep_r = ref.run(train)           # reference path via run()
+    np.testing.assert_array_equal(np.asarray(counts_c), np.asarray(counts_r))
+    assert abs(rep_c.energy_pj - rep_r.energy_pj) <= REL_TOL * rep_r.energy_pj
+    with pytest.raises(ValueError):
+        ChipSimulator(w, engine="warp-drive")
+
+
+# ---------------------------------------------------------------------------
+# engine invariants (property tests)
+# ---------------------------------------------------------------------------
+
+@settings(max_examples=5, deadline=None)
+@given(seed=st.integers(0, 1000), batch=st.integers(2, 5))
+def test_batched_equals_stacked_per_sample(seed, batch):
+    """vmap over a batch == the same samples run one at a time."""
+    rng = np.random.default_rng(seed)
+    sizes = (24, 48, 10)
+    w = make_weights(rng, sizes)
+    sim = ChipSimulator(w, engine="compiled", mapping_strategy="greedy")
+    trains = make_trains(rng, batch, 8, sizes[0])
+    counts_b, reps_b = sim.run_batch(trains)
+    for b in range(batch):
+        counts_1, rep_1 = sim.run(trains[b])
+        np.testing.assert_array_equal(np.asarray(counts_b[b]),
+                                      np.asarray(counts_1))
+        assert reps_b[b].energy_pj == rep_1.energy_pj
+        assert reps_b[b].stats.performed_sops == rep_1.stats.performed_sops
+        assert reps_b[b].wall_cycles == rep_1.wall_cycles
+
+
+@settings(max_examples=5, deadline=None)
+@given(seed=st.integers(0, 1000))
+def test_zero_input_leak_only(seed):
+    """All-zero spike trains: no SOPs performed, no flits routed, energy
+    is leak/pipeline-only (core at sparsity 1 + RISC-V), never zero."""
+    rng = np.random.default_rng(seed)
+    sizes = (16, int(rng.integers(24, 64)), 10)
+    w = make_weights(rng, sizes)
+    sim = ChipSimulator(w, engine="compiled", mapping_strategy="greedy")
+    counts, reps = sim.run_batch(jnp.zeros((2, 6, sizes[0]), jnp.float32))
+    assert float(jnp.abs(counts).max()) == 0.0
+    for rep in reps:
+        assert rep.stats.performed_sops == 0.0
+        assert rep.stats.spikes_in == 0.0
+        assert rep.stats.noc_hops == 0.0
+        assert rep.stats.spikes_routed == 0.0
+        assert rep.noc_energy_pj == 0.0
+        assert rep.stats.sparsity == 1.0
+        assert rep.energy_pj > 0.0
+        np.testing.assert_allclose(
+            rep.energy_pj, rep.core_energy_pj + rep.riscv_energy_pj,
+            rtol=1e-12)
+
+
+@settings(max_examples=5, deadline=None)
+@given(seed=st.integers(0, 1000))
+def test_total_sops_permutation_invariant(seed):
+    """Total SOPs depend on the network + spikes, not on which physical
+    core each slice landed on."""
+    rng = np.random.default_rng(seed)
+    sizes = (24, 96, 10)
+    w = make_weights(rng, sizes)
+    base = ChipSimulator(w, engine="compiled", mapping_strategy="greedy")
+    active = base.mapping.active_core_ids()
+    perm = dict(zip(active, rng.permutation(active)))
+    permuted = Mapping(
+        assignments=[CoreAssignment(core_id=int(perm[a.core_id]),
+                                    layer=a.layer, neuron_lo=a.neuron_lo,
+                                    neuron_hi=a.neuron_hi)
+                     for a in base.mapping.assignments],
+        layer_sizes=list(base.mapping.layer_sizes))
+    shuf = ChipSimulator(w, engine="compiled", mapping=permuted)
+    trains = make_trains(rng, 2, 6, sizes[0])
+    _, reps_a = base.run_batch(trains)
+    _, reps_b = shuf.run_batch(trains)
+    for ra, rb in zip(reps_a, reps_b):
+        assert ra.stats.nominal_sops == rb.stats.nominal_sops
+        assert ra.stats.performed_sops == rb.stats.performed_sops
+        assert ra.stats.neurons_touched == rb.stats.neurons_touched
+
+
+# ---------------------------------------------------------------------------
+# array-native NoC replay agrees with the interpretive replay
+# ---------------------------------------------------------------------------
+
+def test_flow_table_matches_replay_flows():
+    """`compile_flow_table` + `replay_flows_array` == `replay_flows` for
+    uniform per-flow spike counts (hops, energy, cycles), with and
+    without the level-2 interconnect pricing."""
+    from repro.core import energy as E
+    from repro.core import noc as NOC
+
+    rng = np.random.default_rng(5)
+    rt = NOC.RoutingTable(NOC.fullerene_adjacency())
+    flows = NOC.uniform_random_flows(rng, 40, bcast_frac=0.4)
+    routes = [NOC.compile_flow(rt, src, dsts) for src, dsts, _ in flows]
+    params = NOC.RouterParams()
+    for interconnect in (None, E.InterconnectEnergyModel.from_router(params)):
+        for n_spikes in (1, 7):
+            ref = NOC.replay_flows([(r, n_spikes) for r in routes], params,
+                                   interconnect=interconnect)
+            table = NOC.compile_flow_table(routes, params,
+                                           interconnect=interconnect)
+            hops, energy, cycles = NOC.replay_flows_array(
+                table, n_spikes, params)
+            assert hops == ref.total_hops
+            np.testing.assert_allclose(energy, ref.energy_pj, rtol=1e-12)
+            np.testing.assert_allclose(cycles, ref.cycles, rtol=1e-12)
+            assert int(table.dst_fanout.sum()) * n_spikes == ref.spikes_delivered
+
+
+# ---------------------------------------------------------------------------
+# serving path rides the batched engine
+# ---------------------------------------------------------------------------
+
+def test_snn_server_batches_requests():
+    from repro.serve.snn_server import SnnRequest, SnnServer
+
+    rng = np.random.default_rng(0)
+    sizes = (32, 64, 10)
+    w = make_weights(rng, sizes)
+    sim = ChipSimulator(w, engine="compiled", mapping_strategy="greedy")
+    srv = SnnServer(sim, batch_slots=4)
+    events = [np.asarray(rng.random((8, 32)) < 0.3, np.float32)
+              for _ in range(6)]
+    for uid, ev in enumerate(events):
+        srv.submit(SnnRequest(uid=uid, events=ev))
+    done = srv.run()
+    assert len(done) == 6
+    for r in done:
+        assert 0 <= r.prediction < 10
+        assert r.energy_pj > 0
+        # per-request telemetry matches a direct single-sample run
+        counts, rep = sim.run(jnp.asarray(r.events))
+        assert int(np.argmax(np.asarray(counts))) == r.prediction
+        np.testing.assert_allclose(r.energy_pj, rep.energy_pj, rtol=1e-12)
+
+    with pytest.raises(ValueError):
+        SnnServer(ChipSimulator(w, engine="reference"), batch_slots=2)

@@ -111,6 +111,55 @@ def test_zspe_skip_counters_dense_input():
     assert int(skipped.sum()) == 0
 
 
+def test_zspe_skip_counters_match_popcount_ref():
+    """Golden test: the kernel's skip-counter output equals an exact numpy
+    popcount over spike tiles — for every output tile, the number of
+    K-tiles whose spike block is all zeros."""
+    from repro.kernels import zspe_spmm as _zspe
+
+    rng = np.random.default_rng(0)
+    m, k, n = 128, 256, 128
+    bm, bk, bn = 64, 64, 64
+    # event-like occupancy: roughly half the (bm, bk) spike tiles hold a few
+    # spikes, the rest are empty (and must be counted as skipped)
+    s_np = np.zeros((m, k), np.float32)
+    for i in range(m // bm):
+        for kk in range(k // bk):
+            if rng.random() < 0.5:
+                rows = rng.integers(0, bm, 5)
+                cols = rng.integers(0, bk, 5)
+                s_np[i * bm + rows, kk * bk + cols] = 1.0
+    s = jnp.asarray(s_np)
+    w = rand(0, (k, n))
+    out, skipped = _zspe.zspe_spmm(s, w, block=(bm, bk, bn), interpret=True)
+
+    expected = np.zeros((m // bm, n // bn), np.int32)
+    for i in range(m // bm):
+        for kk in range(k // bk):
+            tile = s_np[i * bm:(i + 1) * bm, kk * bk:(kk + 1) * bk]
+            if int(np.count_nonzero(tile)) == 0:
+                expected[i, :] += 1          # skipped for every output tile j
+    assert expected.sum() > 0, "case must actually exercise the skip path"
+    assert expected.sum() < expected.size * (k // bk), \
+        "case must also exercise the work path"
+    np.testing.assert_array_equal(np.asarray(skipped), expected)
+    np.testing.assert_allclose(np.asarray(out), s_np @ np.asarray(w),
+                               rtol=1e-4, atol=1e-4)
+
+
+def test_zspe_skip_counters_via_ops_wrapper():
+    """Same golden check through the public ops.zspe_spmm padding path."""
+    m, k, n = 128, 256, 128                  # block-aligned: grid is (1, 1)
+    s_np = np.zeros((m, k), np.float32)
+    s_np[3, 17] = 1.0                        # first K-tile occupied, second empty
+    w = rand(2, (k, n))
+    _, skipped = ops.zspe_spmm(jnp.asarray(s_np), w, with_stats=True)
+    expected = sum(
+        int(np.count_nonzero(s_np[:, kk * 128:(kk + 1) * 128]) == 0)
+        for kk in range(k // 128))
+    assert int(skipped.sum()) == expected
+
+
 def test_zspe_int8_spikes():
     key = jax.random.PRNGKey(3)
     s = (jax.random.uniform(key, (64, 128)) < 0.1).astype(jnp.int8)
@@ -164,6 +213,72 @@ def test_lif_kernel_agrees_with_core_neuron():
     # reference path; compare with a small absolute floor
     np.testing.assert_allclose(np.asarray(st2.v), np.asarray(vo),
                                rtol=1e-5, atol=1e-6)
+
+
+def test_lif_update_elapsed_across_steps():
+    """`elapsed` bookkeeping over >= 3 consecutive kernel steps (interpret
+    mode): untouched neurons accumulate idle timesteps, touched neurons
+    reset to 0 and apply leak**(idle+1) lazily."""
+    b, n = 8, 128
+    leak = 0.9
+    v = jnp.full((b, n), 0.5, jnp.float32)
+    el = jnp.zeros((b, n), jnp.int32)
+    # columns 0..31 touched every step, 32..63 only on step 3, rest never;
+    # currents small enough that nothing crosses threshold (pure bookkeeping)
+    always = np.zeros((b, n), np.float32); always[:, :32] = 0.1
+    late = np.zeros((b, n), np.float32); late[:, 32:64] = 0.1
+    currents = [always, always, always + late]
+
+    expected_el = np.zeros((b, n), np.int64)
+    vs = [v]
+    for step, cur in enumerate(currents):
+        touched = cur != 0
+        expected_el = np.where(touched, 0, expected_el + 1)
+        v_new, el_new, sp, upd = ops.lif_update(
+            vs[-1], el, jnp.asarray(cur), threshold=1.0, leak=leak,
+            interpret=True)
+        np.testing.assert_array_equal(np.asarray(el_new), expected_el)
+        np.testing.assert_array_equal(np.asarray(upd), touched.astype(np.int8))
+        el = el_new
+        vs.append(v_new)
+
+    final = np.asarray(vs[-1])
+    # touched-every-step column: three decayed integrations, no idle credit
+    expect_always = 0.5
+    for _ in range(3):
+        expect_always = expect_always * leak + 0.1
+    np.testing.assert_allclose(final[:, :32], expect_always, rtol=1e-6)
+    # touched-on-step-3 column: lazy leak**3 applied at the touch
+    np.testing.assert_allclose(final[:, 32:64], 0.5 * leak ** 3 + 0.1,
+                               rtol=1e-6)
+    # never-touched column: raw potential retained, 3 idle steps recorded
+    np.testing.assert_array_equal(final[:, 64:], 0.5)
+    np.testing.assert_array_equal(np.asarray(el)[:, 64:], 3)
+
+
+def test_lif_step_explicit_touch_mask():
+    """core.neuron.lif_step with a connectivity touch mask: a zero current
+    with touched=True applies pending leak; nonzero current with
+    touched=False is ignored by the update set."""
+    from repro.core.neuron import LIFParams, LIFState, lif_step, touch_mask
+
+    p = LIFParams(threshold=10.0, leak=0.8)
+    v = jnp.asarray([0.5, 0.5, 0.5], jnp.float32)
+    el = jnp.asarray([2, 2, 2], jnp.int32)
+    cur = jnp.asarray([0.0, 1.0, 0.0], jnp.float32)
+    mask = jnp.asarray([True, True, False])
+    st, sp, upd = lif_step(LIFState(v, el), cur, p, touched=mask)
+    np.testing.assert_array_equal(np.asarray(upd), [True, True, False])
+    np.testing.assert_allclose(np.asarray(st.v),
+                               [0.5 * 0.8 ** 3, 0.5 * 0.8 ** 3 + 1.0, 0.5],
+                               rtol=1e-6)
+    np.testing.assert_array_equal(np.asarray(st.elapsed), [0, 0, 3])
+
+    # the mask itself: spikes through nonzero synapses only
+    w = jnp.asarray([[0.0, 1.0], [0.0, 0.0]], jnp.float32)
+    nz = (w != 0).astype(jnp.float32)
+    got = touch_mask(jnp.asarray([1.0, 1.0], jnp.float32), nz)
+    np.testing.assert_array_equal(np.asarray(got), [False, True])
 
 
 # ---------------------------------------------------------------------------
