@@ -1,0 +1,105 @@
+"""Deploy benchmark — does hardware-aware training buy chip energy?
+
+Trains the SAME network twice (same seed, steps, optimizer): once plain,
+once with the hardware-aware regularizers (spike-rate hinge + L1
+pruning), deploys both through the full repro.deploy pipeline, and
+compares chip accuracy and pJ/SOP.  The acceptance claim of the
+train→deploy loop: the sparsity-regularized model reaches LOWER pJ/SOP at
+EQUAL (±2%) accuracy, because the energy model prices the ZSPE skip rate
+the regularizer trains for.
+
+Run:  PYTHONPATH=src python benchmarks/deploy_bench.py
+      [--steps 60] [--out deploy_bench.json]
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import time
+
+
+def run_pair(steps: int = 60, lr: float = 5e-3):
+    from repro.data.synthetic import EventStream
+    from repro.deploy import DeployConfig, deploy
+    from repro.models.snn import SNNConfig
+    from repro.train.snn_trainer import HWLossConfig, SNNTrainConfig
+
+    ev = EventStream(timesteps=8, height=12, width=12, seed=1)
+    cfg = SNNConfig(layer_sizes=(ev.n_inputs, 256, 256, 10), timesteps=8,
+                    qat=True)
+    variants = {
+        "baseline": HWLossConfig(),
+        "regularized": HWLossConfig(rate_weight=2.0, target_rate=0.03,
+                                    l1_weight=2e-3),
+    }
+    out = {}
+    for name, hw in variants.items():
+        dcfg = DeployConfig(
+            train=SNNTrainConfig(steps=steps, lr=lr, hw=hw),
+            eval_batch=128)
+        t0 = time.perf_counter()
+        rep = deploy(cfg, ev, dcfg)
+        out[name] = {
+            "accuracy_chip": round(rep.acc_chip, 4),
+            "accuracy_train": round(rep.acc_train, 4),
+            "pj_per_sop": round(rep.pj_per_sop, 4),
+            "sparsity": round(rep.sparsity, 4),
+            "touch_fraction": round(rep.touch_fraction, 4),
+            "power_mw": round(rep.power_mw, 2),
+            "gates_passed": rep.passed,
+            "wall_s": round(time.perf_counter() - t0, 1),
+        }
+    return out
+
+
+def main(emit, steps: int = 60) -> dict:
+    pair = run_pair(steps=steps)
+    base, reg = pair["baseline"], pair["regularized"]
+    saving = 1.0 - reg["pj_per_sop"] / base["pj_per_sop"]
+    acc_delta = round(reg["accuracy_chip"] - base["accuracy_chip"], 4)
+    # the claim the train->deploy loop exists to make — recorded, not
+    # asserted: an abort here would kill the whole run.py suite before
+    # results.json / the trajectory JSON exist.  bench_compare gates the
+    # `deploy.claim_reg_beats_baseline` trajectory metric instead.
+    claim_ok = (reg["pj_per_sop"] < base["pj_per_sop"]
+                and abs(acc_delta) <= 0.02)
+    table = {
+        "steps": steps,
+        **{f"baseline_{k}": v for k, v in base.items()},
+        **{f"regularized_{k}": v for k, v in reg.items()},
+        "pj_per_sop_saving": round(saving, 4),
+        "accuracy_delta": acc_delta,
+        "claim_reg_beats_baseline": claim_ok,
+    }
+    emit("deploy_reg_vs_baseline", 0.0,
+         {"pj_saving": table["pj_per_sop_saving"],
+          "acc_delta": table["accuracy_delta"],
+          "pj_regularized": reg["pj_per_sop"],
+          "pj_baseline": base["pj_per_sop"],
+          "claim_ok": claim_ok})
+    return table
+
+
+if __name__ == "__main__":
+    import os
+    import sys
+
+    sys.path.insert(0, os.path.join(os.path.dirname(
+        os.path.dirname(os.path.abspath(__file__))), "src"))
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--steps", type=int, default=60)
+    ap.add_argument("--out", default=None)
+    args = ap.parse_args()
+
+    def emit(name, us, derived):
+        print(f"{name},{us:.1f},{json.dumps(derived)}")
+
+    table = main(emit, steps=args.steps)
+    print(json.dumps(table, indent=1))
+    if args.out:
+        with open(args.out, "w") as f:
+            json.dump(table, f, indent=1)
+    if not table["claim_reg_beats_baseline"]:
+        print("claim FAILED: regularized run does not beat baseline pJ/SOP "
+              "at equal accuracy", file=sys.stderr)
+        raise SystemExit(1)

@@ -2,21 +2,87 @@
 
 Prints ``name,us_per_call,derived`` CSV rows; each module's `main(emit)`
 also returns its full table (dumped to benchmarks/results.json).
+
+``--out BENCH.json`` additionally writes the **bench trajectory**: a
+schema-stable flat metric map (see `trajectory()`) that
+scripts/bench_compare.py diffs against the committed baseline
+(BENCH_pr3.json) to fail CI on >20% regressions in engine throughput or
+pJ/SOP.  Keys are append-only: removing or renaming one is itself a CI
+failure, so the trajectory stays comparable across PRs.
 """
 from __future__ import annotations
 
+import argparse
 import json
 import os
 import sys
 
+TRAJECTORY_SCHEMA_VERSION = 1
 
-def main() -> None:
+SECTIONS = ("fig3", "fig5", "compiler", "engine", "deploy", "fig6",
+            "table1", "kernels", "roofline")
+
+
+def trajectory(results: dict) -> dict:
+    """Flatten the full results into the schema-stable metric map.
+
+    Every key must always be present (None when its section was skipped);
+    bench_compare treats a missing/None gated metric as a failure.
+    """
+    eng = results.get("engine") or {}
+    comp = results.get("compiler") or {}
+    t1 = results.get("table1") or {}
+    dep = results.get("deploy") or {}
+    nm = next((r for r in t1.get("workloads", [])
+               if str(r.get("workload", "")).startswith("NMNIST")), {})
+    anneal = next((r for r in comp.get("mapping_cost", [])
+                   if r.get("strategy") == "anneal"), {})
+    metrics = {
+        # engine throughput (speedup is same-host-normalized: compiled vs
+        # reference on identical hardware, so it compares across machines)
+        "engine.speedup": eng.get("speedup"),
+        "engine.pj_per_sop": eng.get("pj_per_sop"),
+        "engine.samples_per_s_compiled": eng.get("samples_per_s_compiled"),
+        "engine.compiled_s": eng.get("compiled_s"),
+        # chip energy model at the paper's NMNIST operating point
+        "chip.nmnist_sim_pj_per_sop": nm.get("sim_pj_per_sop"),
+        "chip.nmnist_model_pj_per_sop": nm.get("model_chip_pj_per_sop"),
+        # mapping compiler quality
+        "compiler.anneal_improvement": anneal.get("vs_contiguous"),
+        # train->deploy pipeline energy parity
+        "deploy.pj_per_sop_regularized": dep.get("regularized_pj_per_sop"),
+        "deploy.pj_per_sop_baseline": dep.get("baseline_pj_per_sop"),
+        "deploy.pj_per_sop_saving": dep.get("pj_per_sop_saving"),
+        "deploy.accuracy_chip_regularized": dep.get("regularized_accuracy_chip"),
+        "deploy.claim_reg_beats_baseline": (
+            None if "claim_reg_beats_baseline" not in dep
+            else float(bool(dep["claim_reg_beats_baseline"]))),
+    }
+    return {"schema_version": TRAJECTORY_SCHEMA_VERSION, "metrics": metrics}
+
+
+def main(argv=None) -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out", default=None,
+                    help="write the schema-stable bench-trajectory JSON here")
+    ap.add_argument("--only", default=None,
+                    help=f"comma list of sections to run (default: all of "
+                         f"{','.join(SECTIONS)})")
+    ap.add_argument("--deploy-steps", type=int, default=60,
+                    help="training steps per deploy_bench variant")
+    args = ap.parse_args(argv)
+    only = set(args.only.split(",")) if args.only else set(SECTIONS)
+    unknown = only - set(SECTIONS)
+    if unknown:
+        ap.error(f"unknown section(s) {sorted(unknown)}; "
+                 f"valid: {','.join(SECTIONS)}")
+
     root = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
     sys.path.insert(0, os.path.join(root, "src"))
     sys.path.insert(0, root)                    # `python benchmarks/run.py`
-    from benchmarks import (compiler_bench, engine_bench, fig3_core_efficiency,
-                            fig5_noc, fig6_riscv_power, kernel_bench, roofline,
-                            table1_chip)
+    from benchmarks import (compiler_bench, deploy_bench, engine_bench,
+                            fig3_core_efficiency, fig5_noc, fig6_riscv_power,
+                            kernel_bench, roofline, table1_chip)
 
     results = {}
     print("name,us_per_call,derived")
@@ -24,20 +90,36 @@ def main() -> None:
     def emit(name, us, derived):
         print(f"{name},{us:.1f},\"{json.dumps(derived, default=str)}\"")
 
-    results["fig3"] = fig3_core_efficiency.main(emit)
-    results["fig5"] = fig5_noc.main(emit)
-    results["compiler"] = compiler_bench.main(emit)
-    results["engine"] = engine_bench.main(emit)
-    results["fig6"] = fig6_riscv_power.main(emit)
-    results["table1"] = table1_chip.main(emit)
-    results["kernels"] = kernel_bench.main(emit)
-    dr = os.environ.get("REPRO_DRYRUN_JSON", "dryrun_results.json")
-    results["roofline"] = roofline.main(emit, dr)
+    if "fig3" in only:
+        results["fig3"] = fig3_core_efficiency.main(emit)
+    if "fig5" in only:
+        results["fig5"] = fig5_noc.main(emit)
+    if "compiler" in only:
+        results["compiler"] = compiler_bench.main(emit)
+    if "engine" in only:
+        results["engine"] = engine_bench.main(emit)
+    if "deploy" in only:
+        results["deploy"] = deploy_bench.main(emit, steps=args.deploy_steps)
+    if "fig6" in only:
+        results["fig6"] = fig6_riscv_power.main(emit)
+    if "table1" in only:
+        results["table1"] = table1_chip.main(emit)
+    if "kernels" in only:
+        results["kernels"] = kernel_bench.main(emit)
+    if "roofline" in only:
+        dr = os.environ.get("REPRO_DRYRUN_JSON", "dryrun_results.json")
+        results["roofline"] = roofline.main(emit, dr)
 
     out = os.path.join(os.path.dirname(__file__), "results.json")
     with open(out, "w") as f:
         json.dump(results, f, indent=1, default=str)
     print(f"# full tables -> {out}", file=sys.stderr)
+
+    if args.out:
+        traj = trajectory(results)
+        with open(args.out, "w") as f:
+            json.dump(traj, f, indent=1, sort_keys=True)
+        print(f"# bench trajectory -> {args.out}", file=sys.stderr)
 
 
 if __name__ == "__main__":

@@ -1,0 +1,137 @@
+#!/usr/bin/env python
+"""Bench-trajectory gate: diff a fresh `benchmarks/run.py --out` JSON
+against the committed baseline and fail on regressions.
+
+    python scripts/bench_compare.py BENCH_pr3.json BENCH_new.json
+
+Gated metrics (fail CI when they regress by more than --threshold,
+default 20%):
+
+  * engine throughput — `engine.speedup` (compiled vs reference on the
+    SAME host, so the ratio is machine-normalized and comparable between
+    a laptop baseline and a CI runner);
+  * energy — every `*.pj_per_sop*` metric (model-derived, deterministic).
+
+Informational metrics (reported, never gated) carry absolute timings
+(`engine.samples_per_s_compiled`, `engine.compiled_s`) that are not
+comparable across hosts, plus accuracies tracked for visibility.
+
+A gated metric that is missing or null in the candidate fails the run:
+the trajectory schema is append-only.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+
+# metric -> (direction, gated, kind)
+# kind "det": deterministic model outputs — strict --threshold applies.
+# kind "timing": wall-clock derived; even the machine-normalized speedup
+# ratio shifts with core count, so gated timing metrics use the wider
+# --timing-threshold (a genuine engine regression tanks the ratio far
+# beyond either bound).
+METRICS: dict[str, tuple[str, bool, str]] = {
+    "engine.speedup": ("higher", True, "timing"),
+    "engine.pj_per_sop": ("lower", True, "det"),
+    "engine.samples_per_s_compiled": ("higher", False, "timing"),
+    "engine.compiled_s": ("lower", False, "timing"),
+    "chip.nmnist_sim_pj_per_sop": ("lower", True, "det"),
+    "chip.nmnist_model_pj_per_sop": ("lower", True, "det"),
+    "compiler.anneal_improvement": ("higher", True, "det"),
+    "deploy.pj_per_sop_regularized": ("lower", True, "det"),
+    "deploy.pj_per_sop_baseline": ("lower", False, "det"),
+    "deploy.pj_per_sop_saving": ("higher", False, "det"),
+    "deploy.accuracy_chip_regularized": ("higher", False, "det"),
+    # 1.0 while the regularized run beats baseline pJ/SOP at equal
+    # accuracy; 0.0 is a -100% change, so any threshold gates it
+    "deploy.claim_reg_beats_baseline": ("higher", True, "det"),
+}
+
+
+def load(path: str) -> dict:
+    with open(path) as f:
+        doc = json.load(f)
+    if "metrics" not in doc or "schema_version" not in doc:
+        raise SystemExit(f"{path}: not a bench-trajectory JSON "
+                         f"(need schema_version + metrics)")
+    return doc
+
+
+def compare(base: dict, cand: dict, threshold: float,
+            timing_threshold: float = 0.6) -> int:
+    if base["schema_version"] != cand["schema_version"]:
+        print(f"FAIL schema_version {base['schema_version']} -> "
+              f"{cand['schema_version']}")
+        return 1
+    bm, cm = base["metrics"], cand["metrics"]
+    failures = 0
+    rows = []
+    for name, (direction, gated, kind) in METRICS.items():
+        b, c = bm.get(name), cm.get(name)
+        if c is None:
+            status = "MISSING" if gated else "missing"
+            if gated:
+                failures += 1
+            rows.append((name, b, c, "", status))
+            continue
+        if b is None:
+            rows.append((name, b, c, "", "new"))
+            continue
+        thr = (max(threshold, timing_threshold) if kind == "timing"
+               else threshold)
+        if b == 0:
+            # no relative change is computable from a zero baseline; for a
+            # gated metric that's a broken baseline (e.g. a claim flag
+            # committed at 0.0), which must not silently disarm the gate
+            if gated:
+                failures += 1
+                rows.append((name, b, c, "", "BASELINE-ZERO"))
+            else:
+                rows.append((name, b, c, "", "baseline-zero"))
+            continue
+        change = (c - b) / abs(b)
+        regressed = (change < -thr if direction == "higher"
+                     else change > thr)
+        if gated and regressed:
+            failures += 1
+            status = "REGRESSED"
+        elif regressed:
+            status = "regressed (info-only)"
+        else:
+            status = "ok" if gated else "info"
+        rows.append((name, b, c, f"{change:+.1%}", status))
+    for name in sorted(set(cm) - set(METRICS)):
+        rows.append((name, bm.get(name), cm.get(name), "", "untracked"))
+    for name in sorted(set(bm) - set(cm)):
+        failures += 1
+        rows.append((name, bm[name], None, "", "DROPPED"))
+
+    w = max(len(r[0]) for r in rows)
+    print(f"{'metric':<{w}}  {'baseline':>12}  {'candidate':>12}  "
+          f"{'change':>8}  status")
+    for name, b, c, ch, status in rows:
+        fb = "-" if b is None else f"{b:.4g}"
+        fc = "-" if c is None else f"{c:.4g}"
+        print(f"{name:<{w}}  {fb:>12}  {fc:>12}  {ch:>8}  {status}")
+    print(f"\n{'FAIL' if failures else 'PASS'}: {failures} gated "
+          f"regression(s) at threshold {threshold:.0%}")
+    return 1 if failures else 0
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("baseline", help="committed BENCH_*.json")
+    ap.add_argument("candidate", help="freshly generated trajectory JSON")
+    ap.add_argument("--threshold", type=float, default=0.20,
+                    help="relative regression that fails CI (default 0.20)")
+    ap.add_argument("--timing-threshold", type=float, default=0.60,
+                    help="wider bound for wall-clock-derived metrics, which "
+                         "shift with the host (default 0.60)")
+    args = ap.parse_args(argv)
+    return compare(load(args.baseline), load(args.candidate), args.threshold,
+                   args.timing_threshold)
+
+
+if __name__ == "__main__":
+    sys.exit(main())

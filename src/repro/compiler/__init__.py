@@ -85,6 +85,28 @@ class CompiledNetwork:
         return Mapping(assignments=assignments,
                        layer_sizes=list(self.net.layer_sizes()))
 
+    def register_tables(self, qweights, lif=None) -> list:
+        """Program one core.soc.RegisterTable per placed core group from
+        fitted per-layer `quant.QuantizedTensor`s: each core's shared weight
+        table is its layer codebook lowered to signed W-bit register words
+        (bit-exact round trip — see quant.codebook_to_words).  `lif`
+        optionally supplies the neuron register fields.  Delegates to
+        soc.build_register_tables, the single lowering implementation."""
+        from repro.core import quant as Q
+        from repro.core.soc import build_register_tables
+
+        if len(qweights) != len(self.net.placed_layers):
+            raise ValueError(
+                f"{len(qweights)} quantized tensors for "
+                f"{len(self.net.placed_layers)} placed layers")
+        for li, q in enumerate(qweights):
+            if not isinstance(q, Q.QuantizedTensor):
+                raise TypeError(
+                    f"layer {li}: register tables need QuantizedTensor "
+                    f"(got {type(q).__name__}) — run quant.quantize first")
+        return build_register_tables(self.to_soc_mapping(),
+                                     qweights=list(qweights), lif=lif)
+
     def summary(self) -> dict:
         es = self.energy_summary()
         return {
@@ -110,6 +132,8 @@ def _as_network(net: Any) -> NetworkGraph:
     if hasattr(net, "layer_sizes"):
         return from_snn_config(net)
     if isinstance(net, Sequence) and len(net) and hasattr(net[0], "shape"):
+        # raw weight matrices OR quant.QuantizedTensors (whose .shape is
+        # the index-tensor shape) — both expose per-layer (n_pre, n_post)
         return from_weights(net)
     if isinstance(net, Sequence):
         return from_layer_sizes(net)

@@ -22,6 +22,7 @@ from typing import NamedTuple
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 VALID_N = (4, 8, 16)
 VALID_W = (4, 8, 16)
@@ -34,6 +35,9 @@ class CodebookConfig:
     group_size: int = 0         # 0 => one codebook per tensor ("per-core");
                                 # else one per `group_size` output columns
     kmeans_iters: int = 25
+    zero_level: bool = False    # snap the centroid nearest 0 to exactly 0,
+                                # so pruned synapses stay absent on-chip (the
+                                # partial-update touch set sees w == 0)
 
     def __post_init__(self):
         assert self.n_levels in VALID_N, f"N must be in {VALID_N}"
@@ -105,6 +109,12 @@ def _quantize_arrays(w: jax.Array, cfg: CodebookConfig):
     grouped, gsize = _group_view(w.astype(jnp.float32), cfg.group_size)
     cents = jax.vmap(lambda v: _kmeans_1d(v, cfg.n_levels, cfg.kmeans_iters))(grouped)
     cents, scale = _fixed_point(cents, cfg.bit_width)
+    if cfg.zero_level:
+        # force one table entry to exact 0 (a "no synapse" level): pruned
+        # weights then dequantize to 0.0 and drop out of the touch set
+        zi = jnp.argmin(jnp.abs(cents), axis=-1)
+        cents = jnp.where(
+            jnp.arange(cents.shape[-1])[None, :] == zi[:, None], 0.0, cents)
 
     def assign(vals, c):
         return jnp.argmin(jnp.abs(vals[:, None] - c[None, :]), axis=1).astype(jnp.int8)
@@ -192,6 +202,114 @@ def memory_bytes(shape: tuple[int, ...], cfg: CodebookConfig, n_groups: int = 1)
     idx_bits = n_elems * cfg.index_bits
     table_bits = n_groups * cfg.n_levels * cfg.bit_width
     return (idx_bits + table_bits + 7) // 8
+
+
+# ---------------------------------------------------------------------------
+# Register-table round trip — the chip's actual storage format for codebooks
+# ---------------------------------------------------------------------------
+#
+# On the chip the per-core weight table lives in the register table as N
+# signed W-bit integers plus an implicit fixed-point step.  `_fixed_point`
+# already snapped every centroid to `word * scale`, so the integer words are
+# recoverable exactly; encode/decode below is bit-exact (decode recomputes
+# the identical f32 product `word * scale`).
+
+def codebook_to_words(codebook: jax.Array, scale: jax.Array,
+                      bit_width: int) -> np.ndarray:
+    """(G, N) f32 codebook -> (G, N) int32 signed W-bit register words.
+
+    Raises if any entry is not representable at `bit_width` (i.e. the
+    codebook did not come from `quantize` at this W).
+    """
+    cb = np.asarray(codebook, np.float32)
+    sc = np.asarray(scale, np.float32)[..., None]
+    words = np.rint(cb / sc).astype(np.int64)
+    if not np.allclose(words.astype(np.float32) * sc, cb, rtol=0, atol=0):
+        raise ValueError("codebook entries are not word*scale exact — was it "
+                         "produced by quantize() at this bit width?")
+    lo, hi = -(2 ** (bit_width - 1)), 2 ** (bit_width - 1) - 1
+    if words.min() < lo or words.max() > hi:
+        raise ValueError(
+            f"codebook words {words.min()}..{words.max()} exceed signed "
+            f"{bit_width}-bit range [{lo}, {hi}]")
+    return words.astype(np.int32)
+
+
+def words_to_codebook(words, scale) -> jax.Array:
+    """Inverse of `codebook_to_words`: bit-exact f32 reconstruction."""
+    w = jnp.asarray(words, jnp.float32)
+    return w * jnp.asarray(scale, jnp.float32)[..., None]
+
+
+def to_register_entries(q: QuantizedTensor, cfg: CodebookConfig
+                        ) -> list[tuple[tuple[int, ...], float]]:
+    """Lower a QuantizedTensor's codebook(s) into register-table payloads:
+    one `(words, scale)` pair per group, ready for `soc.RegisterTable`."""
+    words = codebook_to_words(q.codebook, q.scale, cfg.bit_width)
+    scales = np.asarray(q.scale, np.float32)
+    return [(tuple(int(x) for x in words[g]), float(scales[g]))
+            for g in range(words.shape[0])]
+
+
+def from_register_entry(words, scale, idx: jax.Array) -> jax.Array:
+    """Dequantize an index tensor through a register-table entry — the
+    path the chip's SPEs take (table lookup of W-bit words)."""
+    cb = words_to_codebook(jnp.asarray(words)[None, :], jnp.asarray([scale]))
+    return cb[0][idx]
+
+
+def register_entry_for_slice(q: QuantizedTensor, cfg: CodebookConfig,
+                             neuron_lo: int, neuron_hi: int | None = None
+                             ) -> tuple[tuple[int, ...], float]:
+    """The (words, scale) payload a core holding columns
+    [neuron_lo, neuron_hi) programs into its register table: the codebook
+    group covering that slice (group 0 for whole-tensor codebooks).
+    Single source of truth for the group-index selection used by the
+    simulator, the compiler and the deploy PTQ.
+
+    A core has exactly ONE table, so a slice that straddles a group
+    boundary cannot be represented — that is a mapping/quantization
+    mismatch and raises rather than silently programming only the first
+    group's codebook.
+    """
+    entries = to_register_entries(q, cfg)
+    if q.group_axis_size == 0:
+        return entries[0]
+    gs = q.group_axis_size
+    gi = min(neuron_lo // gs, len(entries) - 1)
+    if neuron_hi is not None and neuron_hi > neuron_lo:
+        gi_last = min((neuron_hi - 1) // gs, len(entries) - 1)
+        if gi_last != gi:
+            raise ValueError(
+                f"core slice [{neuron_lo}, {neuron_hi}) spans codebook "
+                f"groups {gi}..{gi_last} (group_size={gs}) — one core holds "
+                f"one table; re-partition on group boundaries or quantize "
+                f"per core (deploy.fit_per_core_codebooks)")
+    return entries[gi]
+
+
+def infer_bit_width(q: QuantizedTensor) -> int:
+    """Smallest valid W whose signed range holds every codebook word."""
+    last = None
+    for wbits in VALID_W:
+        try:
+            codebook_to_words(q.codebook, q.scale, wbits)
+            return wbits
+        except ValueError as e:
+            last = e
+    raise ValueError(f"codebook not representable at any W in {VALID_W}: {last}")
+
+
+def dequantize_via_registers(q: QuantizedTensor, bit_width: int | None = None
+                             ) -> jax.Array:
+    """Dequantize through the W-bit register-word round trip — exactly what
+    the chip computes.  Bit-identical to `dequantize(q)` (the round trip is
+    exact); routing through it additionally *proves* representability."""
+    wbits = bit_width or infer_bit_width(q)
+    cb = words_to_codebook(codebook_to_words(q.codebook, q.scale, wbits),
+                           q.scale)
+    return dequantize(QuantizedTensor(idx=q.idx, codebook=cb, scale=q.scale,
+                                      group_axis_size=q.group_axis_size))
 
 
 # ---------------------------------------------------------------------------

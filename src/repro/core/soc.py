@@ -27,7 +27,14 @@ from repro.core.zspe import CoreGeometry, CycleModel
 
 @dataclasses.dataclass(frozen=True)
 class RegisterTable:
-    """Per-core configuration registers (Fig. 1)."""
+    """Per-core configuration registers (Fig. 1).
+
+    `codebook_words` holds the core's shared weight table exactly as the
+    chip stores it: N signed W-bit integers; `codebook_scale` is the
+    fixed-point step.  `codebook()` reconstructs the float table the SPEs
+    dequantize against — bit-exact against the `QuantizedTensor` the
+    compiler lowered (see quant.codebook_to_words / words_to_codebook).
+    """
 
     core_id: int
     enabled: bool = True
@@ -36,6 +43,27 @@ class RegisterTable:
     reset: float = 0.0
     weight_levels: int = 16       # N in {4,8,16}
     weight_bits: int = 8          # W in {4,8,16}
+    codebook_words: tuple = ()    # N signed W-bit ints ((), if unprogrammed)
+    codebook_scale: float = 1.0
+
+    def __post_init__(self):
+        if self.codebook_words:
+            if len(self.codebook_words) != self.weight_levels:
+                raise ValueError(
+                    f"core {self.core_id}: {len(self.codebook_words)} codebook "
+                    f"words for N={self.weight_levels}")
+            lim = 2 ** (self.weight_bits - 1)
+            bad = [w for w in self.codebook_words
+                   if not (-lim <= int(w) <= lim - 1)]
+            if bad:
+                raise ValueError(
+                    f"core {self.core_id}: codebook words {bad} exceed signed "
+                    f"{self.weight_bits}-bit range")
+
+    def codebook(self) -> np.ndarray:
+        """The (N,) f32 weight table the SPEs read (words * scale)."""
+        return (np.asarray(self.codebook_words, np.float32)
+                * np.float32(self.codebook_scale))
 
 
 @dataclasses.dataclass(frozen=True)
@@ -119,6 +147,75 @@ def map_network(layer_sizes: Sequence[int],
     return Mapping(assignments=assignments, layer_sizes=list(layer_sizes))
 
 
+def build_register_tables(mapping: "Mapping", qweights=None, lif=None,
+                          layer_cfgs=None,
+                          default_cfg: CodebookConfig | None = None
+                          ) -> list[RegisterTable]:
+    """Lower a mapping (+ optional per-layer QuantizedTensors) to one
+    programmed RegisterTable per core assignment — the single
+    implementation behind ChipSimulator and the compiler.
+
+    `layer_cfgs` supplies each placed layer's CodebookConfig; when absent
+    it is inferred from the tensor (minimal W holding the words).  With no
+    `qweights` the tables carry only the neuron registers.
+    """
+    from repro.core import quant as Q
+    from repro.core.neuron import LIFParams
+
+    lif = lif or LIFParams()
+    default_cfg = default_cfg or CodebookConfig()
+    tables = []
+    for a in mapping.assignments:
+        words: tuple = ()
+        scale = 1.0
+        cfg = default_cfg
+        if qweights is not None:
+            q = qweights[a.layer - 1]
+            cfg = (layer_cfgs[a.layer - 1] if layer_cfgs is not None else
+                   CodebookConfig(n_levels=int(q.codebook.shape[-1]),
+                                  bit_width=Q.infer_bit_width(q)))
+            words, scale = Q.register_entry_for_slice(
+                q, cfg, a.neuron_lo, a.neuron_hi)
+        tables.append(RegisterTable(
+            core_id=a.core_id, threshold=lif.threshold, leak=lif.leak,
+            reset=lif.reset, weight_levels=cfg.n_levels,
+            weight_bits=cfg.bit_width, codebook_words=words,
+            codebook_scale=scale))
+    return tables
+
+
+def _reject_index_like(w, layer: int, quant_cfg: CodebookConfig | None) -> None:
+    """Catch codebook *indices* passed where weights belong.
+
+    Integer arrays are always rejected.  In the codebook path (a quant_cfg
+    is supplied) a float array whose values are all small non-negative
+    integers below N is almost certainly `QuantizedTensor.idx` cast to
+    float; silently re-fitting k-means over index values used to produce
+    garbage weights — raise instead and point at the right API.
+
+    The max >= 2 condition deliberately exempts binary {0, 1} matrices:
+    those are plausible real weights (masks/connectivity), and k-means
+    over {0, 1} reproduces them exactly, so no corruption is possible.
+    """
+    if isinstance(w, (int, float)) or not hasattr(w, "dtype"):
+        raise TypeError(f"layer {layer}: expected a weight matrix, got {w!r}")
+    if jnp.issubdtype(w.dtype, jnp.integer):
+        raise TypeError(
+            f"layer {layer}: integer weight array ({w.dtype}) looks like "
+            f"codebook indices, not synaptic weights — pass the full "
+            f"quant.QuantizedTensor (idx + codebook + scale) instead")
+    if quant_cfg is not None:
+        vals = np.asarray(w, np.float32)
+        if (vals.size and np.all(vals == np.round(vals)) and vals.min() >= 0
+                and 2 <= vals.max() <= quant_cfg.n_levels - 1):
+            raise ValueError(
+                f"layer {layer}: float weight array holds only integers in "
+                f"[0, {quant_cfg.n_levels}) — these look like codebook "
+                f"indices; re-fitting a codebook over index values would "
+                f"silently corrupt the network. Pass the QuantizedTensor "
+                f"from quant.quantize(), or the dequantized float weights")
+
+
 @dataclasses.dataclass
 class StepStats:
     """Per-timestep accounting gathered by the functional simulator."""
@@ -182,7 +279,8 @@ class ChipSimulator:
 
     def __init__(
         self,
-        weights: Sequence[jax.Array],          # [(n_pre, n_post), ...]
+        weights: Sequence,                     # [(n_pre, n_post) arrays] or
+                                               # [quant.QuantizedTensor, ...]
         quant_cfg: CodebookConfig | None = None,
         freq_hz: float = 100e6,
         geometry: CoreGeometry | None = None,
@@ -193,10 +291,50 @@ class ChipSimulator:
         mapping: Mapping | None = None,
         mapping_strategy: str = "anneal",
         engine: str = "compiled",
+        register_tables: Sequence[RegisterTable] | None = None,
+        lif=None,
     ):
         from repro.core.neuron import LIFParams  # local import to avoid cycle
+        from repro.core import quant as Q
 
-        self.weights = [jnp.asarray(w, jnp.float32) for w in weights]
+        weights = list(weights)
+        n_quant = sum(isinstance(w, Q.QuantizedTensor) for w in weights)
+        if 0 < n_quant < len(weights):
+            raise TypeError(
+                "weights mix QuantizedTensor and raw arrays — quantize every "
+                "layer (or none) before building the simulator")
+        self.qweights: list | None = None
+        self._layer_qcfg: list | None = None
+        if n_quant:
+            # already-fitted codebooks: the chip runs the register-word
+            # round trip of each table, never a re-fit.  N/W are per-core
+            # register fields, so each layer gets its own (validated)
+            # config — inferred per tensor, or checked against an explicit
+            # quant_cfg at this API boundary with the layer named.
+            self._layer_qcfg = []
+            for li, q in enumerate(weights):
+                n = int(q.codebook.shape[-1])
+                wb = Q.infer_bit_width(q)
+                if quant_cfg is not None:
+                    if n != quant_cfg.n_levels:
+                        raise ValueError(
+                            f"layer {li}: codebook has {n} levels but "
+                            f"quant_cfg says N={quant_cfg.n_levels}")
+                    if wb > quant_cfg.bit_width:
+                        raise ValueError(
+                            f"layer {li}: codebook words need W={wb} bits "
+                            f"but quant_cfg says W={quant_cfg.bit_width}")
+                    wb = quant_cfg.bit_width
+                self._layer_qcfg.append(
+                    CodebookConfig(n_levels=n, bit_width=wb))
+            quant_cfg = quant_cfg or self._layer_qcfg[0]
+            self.qweights = weights
+            self.weights = [Q.dequantize_via_registers(q, c.bit_width)
+                            for q, c in zip(weights, self._layer_qcfg)]
+        else:
+            for li, w in enumerate(weights):
+                _reject_index_like(w, li, quant_cfg)
+            self.weights = [jnp.asarray(w, jnp.float32) for w in weights]
         sizes = [int(self.weights[0].shape[0])] + [int(w.shape[1]) for w in self.weights]
         self.mapping = mapping or map_network(sizes, strategy=mapping_strategy)
         self.quant_cfg = quant_cfg or CodebookConfig(n_levels=16, bit_width=8)
@@ -227,11 +365,21 @@ class ChipSimulator:
         # routes are compiled ONCE from the mapping; each timestep only
         # replays them (no BFS in the simulation loop)
         self._layer_routes = self._compile_layer_routes()
-        self.lif = LIFParams(threshold=threshold, leak=leak,
-                             partial_update=partial_update)
-        if quant_cfg is not None:
-            from repro.core.quant import dequantize, quantize
-            self.weights = [dequantize(quantize(w, quant_cfg)) for w in self.weights]
+        # a full LIFParams (e.g. the SNNConfig's, for train->deploy parity)
+        # wins over the scalar threshold/leak conveniences
+        self.lif = (dataclasses.replace(lif, partial_update=partial_update)
+                    if lif is not None else
+                    LIFParams(threshold=threshold, leak=leak,
+                              partial_update=partial_update))
+        if quant_cfg is not None and self.qweights is None:
+            # float weights + a codebook config = post-training fit here
+            self.qweights = [Q.quantize(w, quant_cfg) for w in self.weights]
+            self._layer_qcfg = [quant_cfg] * len(self.weights)
+            self.weights = [Q.dequantize_via_registers(q, quant_cfg.bit_width)
+                            for q in self.qweights]
+        self.register_tables = (list(register_tables)
+                                if register_tables is not None
+                                else self._build_register_tables())
         # connectivity masks for the partial-update touch set (see
         # neuron.touch_mask): computed AFTER quantization so both engines
         # see the synapses the chip actually programs
@@ -249,6 +397,16 @@ class ChipSimulator:
             from repro.core.engine import CompiledEngine
             self._compiled = CompiledEngine(self)
         return self._compiled
+
+    def _build_register_tables(self) -> list[RegisterTable]:
+        """One programmed RegisterTable per core assignment.  With quantized
+        weights the core's shared table is the layer codebook (the group
+        covering the core's neuron slice when the tensor is group-quantized),
+        lowered to W-bit words — the exact values `self.weights` dequantized
+        through."""
+        return build_register_tables(
+            self.mapping, qweights=self.qweights, lif=self.lif,
+            layer_cfgs=self._layer_qcfg, default_cfg=self.quant_cfg)
 
     def _compile_layer_routes(self) -> dict[int, list[NOC.FlowRoute]]:
         """Static routes for every layer->layer transition in the mapping:

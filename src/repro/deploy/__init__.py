@@ -1,0 +1,20 @@
+"""repro.deploy — hardware-aware training→deploy pipeline.
+
+    deploy(cfg, data) ->
+        train     (train.snn_trainer: BPTT + spike-rate/L1/QAT hw losses)
+        quantize  (per-core codebook PTQ -> RegisterTables)
+        compile   (repro.compiler partition -> place -> route)
+        execute   (core.engine.CompiledEngine, batched)
+    -> DeployReport with accuracy/energy parity gates
+
+See examples/train_deploy_nmnist.py for the runnable walkthrough and
+benchmarks/deploy_bench.py for the regularized-vs-baseline study.
+"""
+from repro.deploy.pipeline import DeployConfig, deploy
+from repro.deploy.quantize import PerCoreQuant, fit_per_core_codebooks
+from repro.deploy.report import DeployReport, ParityGates
+
+__all__ = [
+    "DeployConfig", "DeployReport", "ParityGates", "PerCoreQuant",
+    "deploy", "fit_per_core_codebooks",
+]

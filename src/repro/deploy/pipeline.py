@@ -1,0 +1,163 @@
+"""The end-to-end hardware-aware training→deploy pipeline.
+
+One call — `deploy(cfg, data)` — closes the loop the repo previously left
+open between "train an SNN in JAX" and "simulate the chip":
+
+    train     surrogate-gradient BPTT with hardware-aware losses
+              (train.snn_trainer: spike-rate regularization for the ZSPE
+              skip rate, L1 pruning for the partial-update fraction,
+              codebook QAT via the STE fake-quant)
+    quantize  per-core codebook PTQ (deploy.quantize) — one N×W-bit table
+              per placed core, lowered to RegisterTable words
+    compile   repro.compiler partition→place→route with profile-guided
+              spike rates measured from the trained network
+    execute   core.engine.CompiledEngine over the mapped chip, batched
+
+and returns a `DeployReport` whose parity gates assert that the chip
+reproduces the trained model's accuracy (within tolerance) and lands
+within a margin of the paper's 0.96 pJ/SOP NMNIST figure.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import numpy as np
+
+from repro import compiler as COMP
+from repro.core.soc import ChipSimulator
+from repro.deploy.quantize import PerCoreQuant, fit_per_core_codebooks
+from repro.deploy.report import DeployReport, ParityGates
+from repro.models import snn as SNN
+from repro.models.snn import SNNConfig
+from repro.train.snn_trainer import SNNTrainConfig, SNNTrainer
+
+
+@dataclasses.dataclass(frozen=True)
+class DeployConfig:
+    train: SNNTrainConfig = SNNTrainConfig()
+    gates: ParityGates = ParityGates()
+    mapping_strategy: str = "anneal"
+    chip_freq_hz: float = 100e6
+    eval_batch: int = 256
+    eval_step: int = 999_983        # data seed-step held out from training
+    chip_chunk: int = 64            # chip-engine batch per XLA dispatch
+    prune_zero_level: bool | None = None   # None => follow hw.l1_weight > 0
+    verbose: bool = False
+
+
+def _chip_eval(sim: ChipSimulator, spikes, labels, chunk: int):
+    """Run the eval set through the compiled engine in fixed-size chunks
+    (one XLA program per chunk shape) and aggregate the accounting."""
+    B = int(spikes.shape[0])
+    counts_all = []
+    acc_stats = dict(nominal=0.0, performed=0.0, touched=0.0, wall=0.0,
+                     energy=0.0, noc_pj=0.0, noc_hops=0.0)
+    t_steps = int(spikes.shape[1])
+    for lo in range(0, B, chunk):
+        batch = spikes[lo:lo + chunk]
+        counts, reports = sim.run_batch(batch)
+        counts_all.append(np.asarray(counts))
+        for r in reports:
+            acc_stats["nominal"] += r.stats.nominal_sops
+            acc_stats["performed"] += r.stats.performed_sops
+            acc_stats["touched"] += r.stats.neurons_touched
+            acc_stats["wall"] += r.wall_cycles
+            acc_stats["energy"] += r.energy_pj
+            acc_stats["noc_pj"] += r.noc_energy_pj
+            acc_stats["noc_hops"] += r.stats.noc_hops
+    counts = np.concatenate(counts_all, axis=0)
+    acc = float(np.mean(np.argmax(counts, axis=-1) == np.asarray(labels)))
+    hidden = float(sum(sim.mapping.layer_sizes[1:]))
+    agg = {
+        "accuracy": acc,
+        "sparsity": 1.0 - acc_stats["performed"] / max(acc_stats["nominal"], 1.0),
+        "touch_fraction": acc_stats["touched"] / max(B * t_steps * hidden, 1.0),
+        "nominal_sops": acc_stats["nominal"],
+        "performed_sops": acc_stats["performed"],
+        "pj_per_sop": acc_stats["energy"] / max(acc_stats["nominal"], 1.0),
+        "energy_pj": acc_stats["energy"],
+        "wall_cycles": acc_stats["wall"],
+        "noc_energy_pj": acc_stats["noc_pj"],
+        "noc_hops": acc_stats["noc_hops"],
+        # power/throughput over the whole eval sweep
+        "power_mw": (acc_stats["energy"] * 1e-12
+                     / max(acc_stats["wall"] / sim.freq_hz, 1e-12) * 1e3),
+        "gsops": (acc_stats["nominal"]
+                  / max(acc_stats["wall"] / sim.freq_hz, 1e-12) / 1e9),
+    }
+    return counts, agg
+
+
+def deploy(cfg: SNNConfig, data, dcfg: DeployConfig | None = None,
+           params=None) -> DeployReport:
+    """Train (unless `params` is given), quantize per-core, compile, and
+    execute on the chip engine.  `data` is an EventStream-like object with
+    `.batch(batch_size, step) -> (spikes, labels)`."""
+    dcfg = dcfg or DeployConfig()
+    t = dcfg.train
+    log = print if dcfg.verbose else (lambda *a, **k: None)
+
+    # ---- train --------------------------------------------------------
+    trainer = SNNTrainer(cfg, t)
+    history: list[dict] = []
+    if params is None:
+        log(f"== train: {cfg.layer_sizes} x T={cfg.timesteps}, AdamW "
+            f"lr={t.lr}, hw={t.hw} ==")
+        params, history = trainer.fit(
+            lambda step: data.batch(t.batch, step),
+            on_metrics=(lambda s, m: log(
+                f"step {s:4d} loss {m['loss']:.3f} density {m['density']:.3f} "
+                f"rate {m['mean_rate']:.3f}")
+                if t.log_every and s % t.log_every == 0 else None))
+    final_loss = history[-1]["loss"] if history else None
+
+    eval_sp, eval_lb = data.batch(dcfg.eval_batch, dcfg.eval_step)
+    acc_train = float(SNN.accuracy(params, cfg, eval_sp, eval_lb))
+
+    # ---- compile (profile-guided) ------------------------------------
+    rates = COMP.measure_spike_rates(params, eval_sp[0], lif=cfg.lif)
+    graph = COMP.from_weights(params, spike_rates=rates)
+    compiled = COMP.compile_network(graph, strategy=dcfg.mapping_strategy)
+    mapping = compiled.to_soc_mapping()
+    log(f"== compile: {compiled.summary()} ==")
+
+    # ---- per-core codebook PTQ ---------------------------------------
+    prune = (t.hw.l1_weight > 0.0 if dcfg.prune_zero_level is None
+             else dcfg.prune_zero_level)
+    qcfg = dataclasses.replace(cfg.quant, zero_level=prune)
+    pq: PerCoreQuant = fit_per_core_codebooks(params, mapping, qcfg,
+                                              lif=cfg.lif)
+    eval_cfg = dataclasses.replace(cfg, qat=False)
+    acc_dequant = float(SNN.accuracy(pq.weights, eval_cfg, eval_sp, eval_lb))
+    log(f"== quantize: {pq.n_tables} per-core codebooks (N={qcfg.n_levels} "
+        f"x W={qcfg.bit_width}, zero_level={qcfg.zero_level}), rms "
+        f"{[round(e, 4) for e in pq.rms_error]} ==")
+
+    # ---- execute on the chip engine ----------------------------------
+    sim = ChipSimulator(pq.weights, freq_hz=dcfg.chip_freq_hz,
+                        mapping=mapping, register_tables=pq.tables,
+                        lif=cfg.lif, engine="compiled")
+    counts, chip = _chip_eval(sim, eval_sp, eval_lb, dcfg.chip_chunk)
+    log(f"== chip: acc {chip['accuracy']:.4f}, {chip['pj_per_sop']:.3f} "
+        f"pJ/SOP, sparsity {chip['sparsity']:.3f} ==")
+
+    gates = dcfg.gates.check(acc_train, chip["accuracy"], chip["pj_per_sop"])
+    return DeployReport(
+        layer_sizes=list(cfg.layer_sizes), timesteps=cfg.timesteps,
+        n_levels=qcfg.n_levels, bit_width=qcfg.bit_width, qat=cfg.qat,
+        regularized=t.hw.regularized(), train_steps=t.steps,
+        eval_samples=int(eval_sp.shape[0]),
+        final_loss=(None if final_loss is None else float(final_loss)),
+        acc_train=acc_train,
+        acc_dequant=acc_dequant, acc_chip=chip["accuracy"],
+        quant_rms_error=pq.rms_error,
+        sparsity=chip["sparsity"], touch_fraction=chip["touch_fraction"],
+        nominal_sops=chip["nominal_sops"],
+        performed_sops=chip["performed_sops"],
+        pj_per_sop=chip["pj_per_sop"], energy_pj=chip["energy_pj"],
+        power_mw=chip["power_mw"], gsops=chip["gsops"],
+        wall_cycles=chip["wall_cycles"],
+        noc_energy_pj=chip["noc_energy_pj"], noc_hops=chip["noc_hops"],
+        n_cores=len(mapping.active_core_ids()),
+        n_register_tables=pq.n_tables,
+        compile_summary=compiled.summary(), gates=gates)

@@ -50,7 +50,14 @@ def forward(params: Sequence[jax.Array], cfg: SNNConfig,
             spikes: jax.Array) -> tuple[jax.Array, dict]:
     """spikes (B, T, N_in) -> (spike-count logits (B, n_out), stats).
 
-    stats: per-layer spike sparsity + total SOPs, feeding the energy model.
+    stats feeds both the energy model and the hardware-aware training
+    losses (train/snn_trainer.py):
+      * performed/nominal SOPs, sparsity, touched — chip accounting;
+      * "rates" — per-layer mean firing rate (L,), DIFFERENTIABLE through
+        the surrogate gradient, so a regularizer on it trains the network
+        into the ZSPE zero-skip regime;
+      * "density" / "touch_fraction" — the two chip efficiency knobs as
+        plain fractions (reporting; not differentiable).
     """
     b, t, _ = spikes.shape
     weights = [_layer_weights(w, cfg) for w in params]
@@ -62,6 +69,7 @@ def forward(params: Sequence[jax.Array], cfg: SNNConfig,
 
     nominal_per_step = b * float(
         sum(wa * wb for wa, wb in zip(cfg.layer_sizes[:-1], cfg.layer_sizes[1:])))
+    neuron_steps = b * t * float(sum(cfg.layer_sizes[1:]))
 
     def step(carry, s_t):
         states = carry
@@ -70,18 +78,20 @@ def forward(params: Sequence[jax.Array], cfg: SNNConfig,
         spikes_out = None
         tot_sops = 0.0
         touched = 0.0
+        rates = []
         for w, st in zip(weights, states):
             current = cur_in @ w                      # ZSPE semantics
             nnz = jnp.sum(cur_in != 0)
             tot_sops += nnz * w.shape[1]
             st2, out, upd = lif_step(st, current, cfg.lif)
             touched += jnp.sum(upd)
+            rates.append(jnp.mean(out))               # surrogate-grad path
             new_states.append(st2)
             cur_in = out
             spikes_out = out
-        return new_states, (spikes_out, tot_sops, touched)
+        return new_states, (spikes_out, tot_sops, touched, jnp.stack(rates))
 
-    states, (out_spikes, sops, touched) = jax.lax.scan(
+    states, (out_spikes, sops, touched, rates) = jax.lax.scan(
         step, states, spikes.transpose(1, 0, 2))
     counts = out_spikes.sum(axis=0)                   # (B, n_out)
     nominal_total = nominal_per_step * t
@@ -89,7 +99,10 @@ def forward(params: Sequence[jax.Array], cfg: SNNConfig,
         "performed_sops": sops.sum(),
         "nominal_sops": jnp.asarray(nominal_total),
         "sparsity": 1.0 - sops.sum() / nominal_total,
+        "density": sops.sum() / nominal_total,
         "touched": touched.sum(),
+        "touch_fraction": touched.sum() / neuron_steps,
+        "rates": rates.mean(axis=0),                  # (L,), differentiable
     }
     return counts, stats
 
@@ -109,6 +122,9 @@ def accuracy(params, cfg: SNNConfig, spikes, labels) -> jax.Array:
 
 @partial(jax.jit, static_argnames=("cfg", "lr"))
 def sgd_step(params, cfg: SNNConfig, spikes, labels, lr: float = 0.5):
+    """Plain-SGD compatibility step.  New code should use
+    train.snn_trainer.SNNTrainer (AdamW, hardware-aware losses,
+    checkpoint/resume); this stays as the minimal dependency-free loop."""
     (loss, stats), grads = jax.value_and_grad(loss_fn, has_aux=True)(
         params, cfg, spikes, labels)
     new_params = [p - lr * g for p, g in zip(params, grads)]

@@ -1,0 +1,174 @@
+"""Hardware-aware SNN training — the `train` half of the train→deploy loop.
+
+The chip's 0.96 pJ/SOP depends on workloads *trained for* its three
+efficiency features, so the trainer owns three hardware-aware loss terms
+on top of the rate-coded cross-entropy:
+
+  * **spike-rate regularization** (`rate_weight`, `target_rate`) — a
+    squared hinge on each layer's mean firing rate, differentiable through
+    the surrogate gradient.  Hidden-layer spikes are the *inputs* the next
+    core's ZSPE scans, so pushing rates toward `target_rate` raises the
+    zero-skip rate (input sparsity) the energy model prices.
+  * **synapse pruning** (`l1_weight`) — L1 on the weights.  Dense layers
+    touch every post-neuron whenever any spike arrives; the partial-update
+    fraction only drops when synapses are exactly zero.  L1-trained
+    weights collapse onto the codebook's zero level at PTQ
+    (`CodebookConfig(zero_level=True)`), shrinking the touch set.
+  * **codebook QAT** (`SNNConfig.qat=True`) — the existing STE
+    `quant.fake_quant` in the forward, so the trained optimum already sits
+    on N-level codebooks and PTQ costs ~nothing.
+
+Mechanically this replaces models/snn.py's hand-rolled SGD with
+optim/adamw (warmup+cosine, clipping, decoupled decay) and
+checkpoint/manager (step-atomic snapshots, auto-resume).
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import Callable
+
+import jax
+import jax.numpy as jnp
+
+from repro.checkpoint.manager import CheckpointManager
+from repro.models import snn as SNN
+from repro.models.snn import SNNConfig
+from repro.optim import adamw
+
+
+@dataclasses.dataclass(frozen=True)
+class HWLossConfig:
+    """Weights/targets of the hardware-aware loss terms (all off by 0.0)."""
+
+    rate_weight: float = 0.0     # spike-rate squared hinge -> ZSPE skip rate
+    target_rate: float = 0.10    # mean firing rate ceiling per layer
+    l1_weight: float = 0.0       # synapse pruning -> partial-update fraction
+
+    def regularized(self) -> bool:
+        return self.rate_weight > 0.0 or self.l1_weight > 0.0
+
+
+@dataclasses.dataclass(frozen=True)
+class SNNTrainConfig:
+    steps: int = 60
+    batch: int = 64
+    lr: float = 2e-3
+    warmup_steps: int = 5
+    weight_decay: float = 0.0
+    clip_norm: float = 1.0
+    hw: HWLossConfig = HWLossConfig()
+    ckpt_dir: str | None = None      # enables save/auto-resume when set
+    save_every: int = 0              # 0 => only the final step is saved
+    log_every: int = 10
+
+
+def hw_loss_fn(params, cfg: SNNConfig, hw: HWLossConfig, spikes, labels):
+    """Cross-entropy + hardware-aware regularizers.  Returns
+    (loss, (ce, stats)) — stats are models.snn forward stats."""
+    counts, stats = SNN.forward(params, cfg, spikes)
+    logp = jax.nn.log_softmax(counts)
+    ce = -jnp.mean(jnp.take_along_axis(logp, labels[:, None], axis=1))
+    loss = ce
+    if hw.rate_weight:
+        # hidden layers only: their spikes feed the next core's ZSPE scan;
+        # output-layer spikes ARE the rate-coded readout, and suppressing
+        # them just fights the cross-entropy for zero energy benefit
+        excess = jnp.maximum(stats["rates"][:-1] - hw.target_rate, 0.0)
+        loss = loss + hw.rate_weight * jnp.sum(excess ** 2)
+    if hw.l1_weight:
+        l1 = sum(jnp.mean(jnp.abs(w)) for w in params)
+        loss = loss + hw.l1_weight * l1
+    return loss, (ce, stats)
+
+
+@partial(jax.jit, static_argnames=("cfg", "hw", "opt_cfg"))
+def train_step(params, opt_state, cfg: SNNConfig, hw: HWLossConfig,
+               opt_cfg: adamw.AdamWConfig, spikes, labels):
+    (loss, (ce, stats)), grads = jax.value_and_grad(
+        hw_loss_fn, has_aux=True)(params, cfg, hw, spikes, labels)
+    params, opt_state, opt_metrics = adamw.apply(
+        opt_cfg, grads, opt_state, params)
+    metrics = {
+        "loss": loss, "ce": ce,
+        "density": stats["density"],
+        "touch_fraction": stats["touch_fraction"],
+        "mean_rate": jnp.mean(stats["rates"]),
+        **opt_metrics,
+    }
+    return params, opt_state, metrics
+
+
+class SNNTrainer:
+    """Surrogate-gradient BPTT with AdamW, hardware-aware losses and
+    checkpoint/auto-resume.
+
+    >>> tr = SNNTrainer(cfg, SNNTrainConfig(steps=100, hw=HWLossConfig(
+    ...     rate_weight=1.0, target_rate=0.08, l1_weight=1e-3)))
+    >>> params, history = tr.fit(lambda step: ev.batch(64, step))
+    """
+
+    def __init__(self, cfg: SNNConfig, train_cfg: SNNTrainConfig | None = None):
+        self.cfg = cfg
+        self.train_cfg = train_cfg or SNNTrainConfig()
+        t = self.train_cfg
+        self.opt_cfg = adamw.AdamWConfig(
+            lr=t.lr, warmup_steps=t.warmup_steps, total_steps=max(t.steps, 1),
+            weight_decay=t.weight_decay, clip_norm=t.clip_norm)
+        self.ckpt = (CheckpointManager(t.ckpt_dir, async_writes=False)
+                     if t.ckpt_dir else None)
+
+    def init(self, key: jax.Array | None = None):
+        params = SNN.init_params(self.cfg, key if key is not None
+                                 else jax.random.PRNGKey(0))
+        return params, adamw.init(params)
+
+    def step(self, params, opt_state, spikes, labels):
+        return train_step(params, opt_state, self.cfg, self.train_cfg.hw,
+                          self.opt_cfg, spikes, labels)
+
+    def fit(self, batch_fn: Callable[[int], tuple],
+            key: jax.Array | None = None,
+            on_metrics: Callable[[int, dict], None] | None = None):
+        """Run `train_cfg.steps` steps of `batch_fn(step) -> (spikes,
+        labels)`.  Resumes from the newest complete checkpoint when a
+        ckpt_dir is configured.  Returns (params, history)."""
+        t = self.train_cfg
+        params, opt_state = self.init(key)
+        start = 0
+        if self.ckpt is not None:
+            latest = self.ckpt.restore_latest(
+                {"params": params, "opt": opt_state})
+            if latest[0] is not None:
+                start = latest[0]
+                params, opt_state = latest[1]["params"], latest[1]["opt"]
+        history: list[dict] = []
+        for step in range(start, t.steps):
+            spikes, labels = batch_fn(step)
+            params, opt_state, metrics = self.step(
+                params, opt_state, spikes, labels)
+            row = {"step": step, **{k: float(v) for k, v in metrics.items()}}
+            history.append(row)
+            if on_metrics is not None:
+                on_metrics(step, row)
+            if self.ckpt is not None and t.save_every and \
+                    (step + 1) % t.save_every == 0:
+                self.ckpt.save(step + 1,
+                               {"params": params, "opt": opt_state})
+        if self.ckpt is not None and start < t.steps:
+            self.ckpt.save(t.steps, {"params": params, "opt": opt_state})
+            self.ckpt.wait()
+        return params, history
+
+    def evaluate(self, params, spikes, labels) -> dict:
+        """Accuracy + the chip-relevant workload statistics."""
+        counts, stats = SNN.forward(params, self.cfg, spikes)
+        acc = jnp.mean((jnp.argmax(counts, axis=-1) == labels)
+                       .astype(jnp.float32))
+        return {
+            "accuracy": float(acc),
+            "density": float(stats["density"]),
+            "sparsity": float(stats["sparsity"]),
+            "touch_fraction": float(stats["touch_fraction"]),
+            "mean_rate": float(jnp.mean(stats["rates"])),
+        }

@@ -1,0 +1,120 @@
+"""End-to-end deploy pipeline: per-core PTQ correctness and the
+train→quantize→compile→execute loop's parity gates on a tiny workload."""
+import dataclasses
+import json
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.quant import CodebookConfig
+from repro.core.soc import map_network
+from repro.data.synthetic import EventStream
+from repro.deploy import (DeployConfig, ParityGates, deploy,
+                          fit_per_core_codebooks)
+from repro.models import snn as SNN
+from repro.models.snn import SNNConfig
+from repro.train.snn_trainer import HWLossConfig, SNNTrainConfig
+
+EV = EventStream(timesteps=5, height=8, width=8, seed=2)
+CFG = SNNConfig(layer_sizes=(EV.n_inputs, 64, 10), timesteps=5, qat=True)
+
+
+def test_fit_per_core_codebooks_slices_and_tables():
+    params = SNN.init_params(CFG, jax.random.PRNGKey(1))
+    mapping = map_network(list(CFG.layer_sizes), strategy="anneal")
+    pq = fit_per_core_codebooks(params, mapping, CodebookConfig(16, 8))
+    assert pq.n_tables == len(mapping.assignments)
+    assert [w.shape for w in pq.weights] == [w.shape for w in params]
+    # every slice's dequantized columns appear verbatim in the rebuilt
+    # weight matrix (per-core codebooks, stitched in neuron order)
+    from repro.core.quant import dequantize
+    for a in mapping.assignments:
+        q = pq.slices[(a.layer, a.core_id)]
+        np.testing.assert_array_equal(
+            np.asarray(pq.weights[a.layer - 1][:, a.neuron_lo:a.neuron_hi]),
+            np.asarray(dequantize(q)))
+    assert all(e < 0.25 for e in pq.rms_error), pq.rms_error
+    # table payloads survive the bit-exact register round trip
+    for rt in pq.tables:
+        assert len(rt.codebook_words) == 16
+        assert rt.codebook().dtype == np.float32
+
+
+def test_fit_per_core_ignores_group_size():
+    """A grouped CodebookConfig must not break the per-core fit: per-core
+    PTQ always fits ONE whole-slice table per core (arbitrary slice widths
+    from the placer need not divide group_size), and the RegisterTable must
+    hold exactly the codebook the executed weights dequantize through."""
+    from repro.core.quant import dequantize
+
+    params = SNN.init_params(CFG, jax.random.PRNGKey(1))
+    mapping = map_network(list(CFG.layer_sizes), strategy="anneal")
+    grouped = CodebookConfig(16, 8, group_size=24)   # does not divide slices
+    pq = fit_per_core_codebooks(params, mapping, grouped)
+    for a in mapping.assignments:
+        q = pq.slices[(a.layer, a.core_id)]
+        assert q.group_axis_size == 0                # whole-slice codebook
+        rt = next(t for t in pq.tables if t.core_id == a.core_id)
+        np.testing.assert_array_equal(rt.codebook(), np.asarray(q.codebook[0]))
+        np.testing.assert_array_equal(
+            np.asarray(pq.weights[a.layer - 1][:, a.neuron_lo:a.neuron_hi]),
+            np.asarray(dequantize(q)))
+
+
+def test_fit_per_core_rejects_incomplete_mapping():
+    params = SNN.init_params(CFG, jax.random.PRNGKey(1))
+    mapping = map_network(list(CFG.layer_sizes), strategy="anneal")
+    broken = dataclasses.replace(
+        mapping, assignments=[a for a in mapping.assignments if a.layer != 2])
+    with pytest.raises(ValueError, match="layer 2"):
+        fit_per_core_codebooks(params, broken, CodebookConfig(16, 8))
+
+
+def test_parity_gates_logic():
+    g = ParityGates(accuracy_tol=0.01, pj_per_sop_target=0.96, pj_margin=1.25)
+    ok = g.check(acc_train=0.95, acc_chip=0.945, pj_per_sop=1.0)
+    assert ok["passed"] and ok["accuracy_parity_ok"] and ok["energy_ok"]
+    bad_acc = g.check(acc_train=0.95, acc_chip=0.90, pj_per_sop=1.0)
+    assert not bad_acc["passed"] and not bad_acc["accuracy_parity_ok"]
+    bad_pj = g.check(acc_train=0.95, acc_chip=0.95, pj_per_sop=1.5)
+    assert not bad_pj["passed"] and not bad_pj["energy_ok"]
+
+
+def test_deploy_end_to_end_tiny(tmp_path):
+    """The full pipeline on a tiny net: chip accuracy tracks the JAX model,
+    the report serializes, and the chip runs in the paper's energy band."""
+    dcfg = DeployConfig(
+        train=SNNTrainConfig(steps=10, lr=8e-3,
+                             hw=HWLossConfig(rate_weight=1.0,
+                                             target_rate=0.05)),
+        gates=ParityGates(accuracy_tol=0.06),   # undertrained smoke net
+        eval_batch=64)
+    rep = deploy(CFG, EV, dcfg)
+    # chip == JAX forward over the same register weights (parity core)
+    assert abs(rep.acc_chip - rep.acc_dequant) <= 0.02, (
+        rep.acc_chip, rep.acc_dequant)
+    assert rep.gates["accuracy_parity_ok"], rep.gates
+    assert 0.5 < rep.pj_per_sop < 1.3          # paper band
+    assert 0.5 < rep.sparsity <= 1.0
+    assert rep.n_register_tables == rep.n_cores
+    assert rep.compile_summary["domains"] == 1
+    # serialization round trip
+    out = tmp_path / "report.json"
+    rep.save(str(out))
+    doc = json.loads(out.read_text())
+    assert doc["gates"]["accuracy_parity_ok"] is True
+    assert doc["pj_per_sop"] == rep.pj_per_sop
+    assert "PASS" in rep.summary() or "FAIL" in rep.summary()
+
+
+def test_deploy_skips_training_when_params_given():
+    params = SNN.init_params(CFG, jax.random.PRNGKey(4))
+    dcfg = DeployConfig(train=SNNTrainConfig(steps=0), eval_batch=32,
+                        gates=ParityGates(accuracy_tol=1.0))
+    rep = deploy(CFG, EV, dcfg, params=params)
+    assert rep.train_steps == 0
+    assert rep.final_loss is None      # never NaN: the JSON must stay valid
+    assert rep.eval_samples == 32
+    json.dumps(rep.to_dict(), allow_nan=False)

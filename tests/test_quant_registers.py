@@ -1,0 +1,171 @@
+"""Quant→RegisterTable round-trip: the chip's codebook storage format must
+be bit-exact for every (N, W) the hardware supports, and the simulator
+must refuse weight inputs that are actually codebook indices."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import quant as Q
+from repro.core.soc import ChipSimulator, RegisterTable
+
+ALL_NW = [(n, w) for n in Q.VALID_N for w in Q.VALID_W]
+
+
+@pytest.mark.parametrize("n_levels,bit_width", ALL_NW)
+def test_codebook_word_roundtrip_bit_exact(n_levels, bit_width):
+    w = jax.random.normal(jax.random.PRNGKey(7), (96, 48)) * 0.07
+    cfg = Q.CodebookConfig(n_levels=n_levels, bit_width=bit_width)
+    q = Q.quantize(w, cfg)
+    words = Q.codebook_to_words(q.codebook, q.scale, bit_width)
+    # signed W-bit range
+    lim = 2 ** (bit_width - 1)
+    assert words.min() >= -lim and words.max() <= lim - 1
+    # decode == original codebook, bit for bit
+    cb = Q.words_to_codebook(words, q.scale)
+    np.testing.assert_array_equal(np.asarray(cb), np.asarray(q.codebook))
+    # dequantizing through the register words == reference dequantize
+    np.testing.assert_array_equal(
+        np.asarray(Q.dequantize_via_registers(q, bit_width)),
+        np.asarray(Q.dequantize(q)))
+
+
+@pytest.mark.parametrize("n_levels,bit_width", ALL_NW)
+def test_register_table_roundtrip_bit_exact(n_levels, bit_width):
+    """quantize -> RegisterTable -> codebook() reproduces the fitted table
+    exactly, for every (N, W) in {4,8,16}^2."""
+    w = jax.random.normal(jax.random.PRNGKey(3), (64, 32)) * 0.05
+    cfg = Q.CodebookConfig(n_levels=n_levels, bit_width=bit_width)
+    q = Q.quantize(w, cfg)
+    (words, scale), = Q.to_register_entries(q, cfg)
+    rt = RegisterTable(core_id=12, weight_levels=n_levels,
+                       weight_bits=bit_width, codebook_words=words,
+                       codebook_scale=scale)
+    np.testing.assert_array_equal(rt.codebook(), np.asarray(q.codebook[0]))
+    # the chip's SPE lookup path reproduces the dequantized weights exactly
+    np.testing.assert_array_equal(
+        np.asarray(Q.from_register_entry(words, scale, q.idx)),
+        np.asarray(Q.dequantize(q)))
+
+
+def test_register_table_validates_payload():
+    with pytest.raises(ValueError, match="codebook words"):
+        RegisterTable(core_id=12, weight_levels=16, weight_bits=8,
+                      codebook_words=tuple(range(8)))      # wrong N
+    with pytest.raises(ValueError, match="range"):
+        RegisterTable(core_id=12, weight_levels=4, weight_bits=4,
+                      codebook_words=(0, 1, 2, 99))        # word > 4-bit
+
+
+def test_infer_bit_width_minimal():
+    w = jax.random.normal(jax.random.PRNGKey(0), (32, 32))
+    for wbits in Q.VALID_W:
+        q = Q.quantize(w, Q.CodebookConfig(n_levels=8, bit_width=wbits))
+        assert Q.infer_bit_width(q) <= wbits
+
+
+def test_zero_level_codebook_has_exact_zero():
+    rng = np.random.default_rng(0)
+    w = np.where(rng.random((64, 64)) < 0.5, 0.0,
+                 rng.normal(0, 0.1, (64, 64))).astype(np.float32)
+    q = Q.quantize(jnp.asarray(w), Q.CodebookConfig(16, 8, zero_level=True))
+    assert float(jnp.min(jnp.abs(q.codebook))) == 0.0
+    deq = np.asarray(Q.dequantize(q))
+    assert (deq == 0.0).mean() > 0.3   # pruned synapses stay absent
+
+
+# ---------------------------------------------------------------------------
+# ChipSimulator: quantized-weight path + index-array validation
+# ---------------------------------------------------------------------------
+
+def _toy_weights(rng):
+    return [jnp.asarray(rng.normal(0, 0.4, (96, 48)), jnp.float32),
+            jnp.asarray(rng.normal(0, 0.4, (48, 10)), jnp.float32)]
+
+
+def test_simulator_accepts_quantized_tensors():
+    rng = np.random.default_rng(0)
+    ws = _toy_weights(rng)
+    qcfg = Q.CodebookConfig(16, 8)
+    qs = [Q.quantize(w, qcfg) for w in ws]
+    sim_q = ChipSimulator(qs, quant_cfg=qcfg)
+    sim_f = ChipSimulator(ws, quant_cfg=qcfg, mapping=sim_q.mapping)
+    spikes = jnp.asarray(rng.random((6, 96)) < 0.1, jnp.float32)
+    cq, rq = sim_q.run(spikes)
+    cf, rf = sim_f.run(spikes)
+    np.testing.assert_array_equal(np.asarray(cq), np.asarray(cf))
+    assert abs(rq.energy_pj - rf.energy_pj) < 1e-6 * rf.energy_pj
+    # register tables are programmed with the layer codebooks
+    assert len(sim_q.register_tables) == len(sim_q.mapping.assignments)
+    for rt in sim_q.register_tables:
+        assert len(rt.codebook_words) == 16 and rt.weight_bits == 8
+
+
+def test_simulator_rejects_integer_weights():
+    rng = np.random.default_rng(1)
+    qs = [Q.quantize(w, Q.CodebookConfig(16, 8)) for w in _toy_weights(rng)]
+    with pytest.raises(TypeError, match="codebook indices"):
+        ChipSimulator([q.idx for q in qs], quant_cfg=Q.CodebookConfig(16, 8))
+
+
+def test_simulator_rejects_float_index_arrays():
+    """The silent-corruption bug: float-cast idx arrays used to be k-means
+    re-fitted as if they were weights.  Now a clear error."""
+    rng = np.random.default_rng(1)
+    qs = [Q.quantize(w, Q.CodebookConfig(16, 8)) for w in _toy_weights(rng)]
+    floats = [q.idx.astype(jnp.float32) for q in qs]
+    with pytest.raises(ValueError, match="look like codebook"):
+        ChipSimulator(floats, quant_cfg=Q.CodebookConfig(16, 8))
+
+
+def test_simulator_mixed_bit_widths_validated_at_boundary():
+    """Layers quantized at different W work (per-layer register configs);
+    an explicit quant_cfg too narrow for a layer raises naming the layer."""
+    rng = np.random.default_rng(3)
+    ws = _toy_weights(rng)
+    q4 = Q.quantize(ws[0], Q.CodebookConfig(16, 4))
+    q8 = Q.quantize(ws[1], Q.CodebookConfig(16, 8))
+    sim = ChipSimulator([q4, q8])
+    assert sim.register_tables[0].weight_bits in (4, 8)
+    by_layer = {a.layer: rt for a, rt in
+                zip(sim.mapping.assignments, sim.register_tables)}
+    assert by_layer[2].weight_bits == 8
+    with pytest.raises(ValueError, match="layer 1"):
+        ChipSimulator([q4, q8], quant_cfg=Q.CodebookConfig(16, 4))
+
+
+def test_register_entry_rejects_group_straddling_slice():
+    w = jax.random.normal(jax.random.PRNGKey(9), (32, 128))
+    cfg = Q.CodebookConfig(16, 8, group_size=64)
+    q = Q.quantize(w, cfg)
+    # slice inside one group is fine; straddling the 64-boundary raises
+    Q.register_entry_for_slice(q, cfg, 0, 64)
+    with pytest.raises(ValueError, match="spans codebook groups"):
+        Q.register_entry_for_slice(q, cfg, 32, 96)
+
+
+def test_simulator_rejects_mixed_inputs():
+    rng = np.random.default_rng(1)
+    ws = _toy_weights(rng)
+    q0 = Q.quantize(ws[0], Q.CodebookConfig(16, 8))
+    with pytest.raises(TypeError, match="mix"):
+        ChipSimulator([q0, ws[1]])
+
+
+def test_compiler_emits_register_tables():
+    from repro import compiler as COMP
+
+    rng = np.random.default_rng(2)
+    ws = _toy_weights(rng)
+    qcfg = Q.CodebookConfig(16, 8)
+    qs = [Q.quantize(w, qcfg) for w in ws]
+    compiled = COMP.compile_network(qs)
+    tables = compiled.register_tables(qs)
+    assert len(tables) == len(compiled.groups)
+    by_core = {t.core_id: t for t in tables}
+    for g in compiled.groups:
+        rt = by_core[compiled.placement.assignment[g.gid]]
+        np.testing.assert_array_equal(
+            rt.codebook(), np.asarray(qs[g.layer - 1].codebook[0]))
+    with pytest.raises(TypeError, match="QuantizedTensor"):
+        compiled.register_tables(ws)
