@@ -1,13 +1,19 @@
-"""Engine benchmark: compiled scan/vmap engine vs the interpretive
-reference simulator on an NMNIST-scale MLP.
+"""Engine benchmark: three-way compiled / fused / reference comparison on
+an NMNIST-scale MLP, plus a (batch, T, sparsity) sweep of the two array
+engines and the HBM-traffic accounting of the fused operands.
 
-Acceptance target: the compiled engine is >= 10x faster wall-clock than
-``engine="reference"`` at batch 32, T=20 (the reference pays O(T x layers
-x cores) Python dispatches per sample; the compiled path is one XLA
-executable for the whole batch).
+Acceptance targets:
+  * compiled >= 10x the interpretive reference at batch 32, T=20 (PR 2);
+  * the fused Pallas path's HBM bytes per timestep (weights as int8
+    codebook indexes + RegisterTable level values, spikes as uint16
+    16-spike words) drop >= 4x vs the compiled engine's dense f32 weight
+    constants + f32 spike lanes — hardware-independent, asserted here;
+  * fused wall-clock >= the compiled path (interpret mode on CPU; on a
+    real TPU the zero-skip + bitpacking target is >= 2x, tracked via the
+    fused_speedup_vs_compiled trajectory metric).
 
 Run:  PYTHONPATH=src python benchmarks/engine_bench.py [--batch 32]
-      [--timesteps 20] [--out engine_bench.json]
+      [--timesteps 20] [--no-sweep] [--out engine_bench.json]
 """
 from __future__ import annotations
 
@@ -20,9 +26,15 @@ import numpy as np
 
 NMNIST_LAYERS = (2312, 512, 10)      # 34x34x2 events -> hidden -> classes
 INPUT_DENSITY = 0.10                 # NMNIST-like event sparsity regime
+SWEEP = (                            # (batch, timesteps, input density)
+    (8, 10, 0.10),
+    (32, 20, 0.10),
+    (32, 20, 0.02),                  # ~98% sparse: the zero-skip regime
+)
 
 
-def build_workload(batch: int, timesteps: int, seed: int = 0):
+def build_sims(seed: int = 0, quantized: bool = True):
+    from repro.core.quant import CodebookConfig
     from repro.core.soc import ChipSimulator
 
     rng = np.random.default_rng(seed)
@@ -31,56 +43,138 @@ def build_workload(batch: int, timesteps: int, seed: int = 0):
                     jnp.float32)
         for i in range(len(NMNIST_LAYERS) - 1)
     ]
-    trains = jnp.asarray(
-        rng.random((batch, timesteps, NMNIST_LAYERS[0])) < INPUT_DENSITY,
-        jnp.float32)
-    ref = ChipSimulator(weights, freq_hz=100e6, engine="reference")
+    qcfg = CodebookConfig(n_levels=16, bit_width=8) if quantized else None
+    ref = ChipSimulator(weights, freq_hz=100e6, engine="reference",
+                        quant_cfg=qcfg)
     comp = ChipSimulator(weights, freq_hz=100e6, engine="compiled",
-                         mapping=ref.mapping)
-    return ref, comp, trains
+                         mapping=ref.mapping, quant_cfg=qcfg)
+    fused = ChipSimulator(weights, freq_hz=100e6, engine="fused",
+                          mapping=ref.mapping, quant_cfg=qcfg)
+    return ref, comp, fused
 
 
-def main(emit, batch: int = 32, timesteps: int = 20) -> dict:
-    ref, comp, trains = build_workload(batch, timesteps)
+def make_trains(batch: int, timesteps: int, density: float, seed: int = 0):
+    rng = np.random.default_rng(seed)
+    return jnp.asarray(
+        rng.random((batch, timesteps, NMNIST_LAYERS[0])) < density,
+        jnp.float32)
 
+
+def _time_batch(sim, trains, iters: int = 3):
+    """(first call incl. compile, best steady-state call) in seconds."""
     t0 = time.perf_counter()
-    counts_c, reports_c = comp.run_batch(trains)      # includes XLA compile
-    counts_c.block_until_ready()
-    compile_and_first_s = time.perf_counter() - t0
+    counts, _ = sim.run_batch(trains)
+    counts.block_until_ready()
+    first = time.perf_counter() - t0
+    best = float("inf")
+    for _ in range(iters):
+        t0 = time.perf_counter()
+        counts, reports = sim.run_batch(trains)
+        counts.block_until_ready()
+        best = min(best, time.perf_counter() - t0)
+    return first, best, counts, reports
 
-    t0 = time.perf_counter()
-    counts_c, reports_c = comp.run_batch(trains)
-    counts_c.block_until_ready()
-    compiled_s = time.perf_counter() - t0
+
+def hbm_bytes_per_step_compiled(sim, batch: int) -> int:
+    """The compiled engine's per-timestep weight + spike traffic: every
+    layer's dense f32 matrix (scan constant) + f32 spike lanes."""
+    return sum(int(w.shape[0]) * int(w.shape[1]) * 4
+               + batch * int(w.shape[0]) * 4
+               for w in sim.weights)
+
+
+def main(emit, batch: int = 32, timesteps: int = 20, sweep: bool = True) -> dict:
+    import jax
+
+    ref, comp, fused = build_sims()
+    trains = make_trains(batch, timesteps, INPUT_DENSITY)
+
+    comp_first, comp_s, counts_c, reports_c = _time_batch(comp, trains)
+    fused_first, fused_s, counts_f, reports_f = _time_batch(fused, trains)
 
     t0 = time.perf_counter()
     counts_r, reports_r = ref.run_batch(trains)
     reference_s = time.perf_counter() - t0
 
-    import jax
     if jax.default_backend() == "cpu":
-        # on CPU the two engines share XLA's reduction order -> bit-identical
+        # on CPU the engines share XLA's reduction order -> bit-identical
         assert np.array_equal(np.asarray(counts_c), np.asarray(counts_r)), \
             "compiled/reference spike mismatch"
+        assert np.array_equal(np.asarray(counts_f), np.asarray(counts_r)), \
+            "fused/reference spike mismatch"
     else:          # accelerator matmul accumulation order may differ by ulps
         np.testing.assert_allclose(np.asarray(counts_c), np.asarray(counts_r),
                                    atol=1)
-    speedup = reference_s / max(compiled_s, 1e-9)
+        np.testing.assert_allclose(np.asarray(counts_f), np.asarray(counts_r),
+                                   atol=1)
+
+    fe = fused.fused_engine()
+    # HBM accounting at the canonical batch (32) so the trajectory metric
+    # is invariant to the CLI --batch used for the wall-clock smoke
+    HBM_REF_BATCH = 32
+    hbm_c = hbm_bytes_per_step_compiled(comp, HBM_REF_BATCH)
+    hbm_f = fe.hbm_bytes_per_step(HBM_REF_BATCH)
+    hbm_reduction = hbm_c / max(hbm_f, 1)
+    assert hbm_reduction >= 4.0, (
+        f"fused HBM bytes/step must drop >= 4x vs dense f32 constants "
+        f"(got {hbm_reduction:.2f}x: {hbm_c} -> {hbm_f})")
+    assert fe.codebook_layers == len(fused.weights), \
+        "fused path must run every layer codebook-compressed"
+
+    speedup = reference_s / max(comp_s, 1e-9)
+    fused_speedup = reference_s / max(fused_s, 1e-9)
+    fused_vs_comp = comp_s / max(fused_s, 1e-9)
+    skip_words = float(np.mean(
+        [r.stats.spike_words_skipped for r in reports_f]))
     table = {
         "layer_sizes": list(NMNIST_LAYERS),
         "batch": batch,
         "timesteps": timesteps,
         "reference_s": round(reference_s, 4),
-        "compiled_s": round(compiled_s, 4),
-        "compile_and_first_s": round(compile_and_first_s, 4),
+        "compiled_s": round(comp_s, 4),
+        "compile_and_first_s": round(comp_first, 4),
         "speedup": round(speedup, 2),
-        "samples_per_s_compiled": round(batch / max(compiled_s, 1e-9), 1),
+        "samples_per_s_compiled": round(batch / max(comp_s, 1e-9), 1),
         "samples_per_s_reference": round(batch / max(reference_s, 1e-9), 1),
         "pj_per_sop": round(reports_c[0].pj_per_sop, 4),
+        # fused engine (PR 4)
+        "fused_s": round(fused_s, 4),
+        "fused_compile_and_first_s": round(fused_first, 4),
+        "samples_per_s_fused": round(batch / max(fused_s, 1e-9), 1),
+        "fused_speedup": round(fused_speedup, 2),
+        "fused_speedup_vs_compiled": round(fused_vs_comp, 3),
+        "fused_pj_per_sop": round(reports_f[0].pj_per_sop, 4),
+        "fused_codebook_layers": fe.codebook_layers,
+        "fused_spike_words_skipped_mean": round(skip_words, 1),
+        "hbm_bytes_per_step_compiled": hbm_c,
+        "hbm_bytes_per_step_fused": hbm_f,
+        "hbm_reduction_fused": round(hbm_reduction, 2),
+        "sharded": fe.last_run_sharded,
+        "n_devices": len(jax.devices()),
     }
-    emit("engine_batched_vs_reference", compiled_s * 1e6,
+
+    if sweep:
+        rows = []
+        for b, t, dens in SWEEP:
+            tr = make_trains(b, t, dens, seed=b + t)
+            _, cs, cc, _ = _time_batch(comp, tr)
+            _, fs, cf, frep = _time_batch(fused, tr)
+            assert np.array_equal(np.asarray(cc), np.asarray(cf)) or \
+                jax.default_backend() != "cpu"
+            rows.append({
+                "batch": b, "timesteps": t, "sparsity": round(1 - dens, 3),
+                "compiled_s": round(cs, 4), "fused_s": round(fs, 4),
+                "fused_vs_compiled": round(cs / max(fs, 1e-9), 3),
+                "pj_per_sop": round(frep[0].pj_per_sop, 4),
+            })
+        table["sweep"] = rows
+
+    emit("engine_batched_vs_reference", comp_s * 1e6,
          {"speedup": table["speedup"],
           "samples_per_s": table["samples_per_s_compiled"]})
+    emit("engine_fused_vs_compiled", fused_s * 1e6,
+         {"fused_vs_compiled": table["fused_speedup_vs_compiled"],
+          "hbm_reduction": table["hbm_reduction_fused"]})
     return table
 
 
@@ -93,6 +187,8 @@ if __name__ == "__main__":
     ap = argparse.ArgumentParser()
     ap.add_argument("--batch", type=int, default=32)
     ap.add_argument("--timesteps", type=int, default=20)
+    ap.add_argument("--no-sweep", action="store_true",
+                    help="skip the (batch, T, sparsity) sweep")
     ap.add_argument("--out", default=None,
                     help="write the result table to this JSON file")
     args = ap.parse_args()
@@ -100,7 +196,8 @@ if __name__ == "__main__":
     def emit(name, us, derived):
         print(f"{name},{us:.1f},{json.dumps(derived)}")
 
-    table = main(emit, batch=args.batch, timesteps=args.timesteps)
+    table = main(emit, batch=args.batch, timesteps=args.timesteps,
+                 sweep=not args.no_sweep)
     print(json.dumps(table, indent=1))
     if args.out:
         with open(args.out, "w") as f:

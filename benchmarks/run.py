@@ -44,6 +44,14 @@ def trajectory(results: dict) -> dict:
         "engine.pj_per_sop": eng.get("pj_per_sop"),
         "engine.samples_per_s_compiled": eng.get("samples_per_s_compiled"),
         "engine.compiled_s": eng.get("compiled_s"),
+        # fused Pallas engine (PR 4): same-host ratio vs compiled, energy
+        # parity, and the hardware-independent HBM-traffic reduction of
+        # the codebook-word + spike-word operands
+        "engine.fused_speedup_vs_compiled":
+            eng.get("fused_speedup_vs_compiled"),
+        "engine.samples_per_s_fused": eng.get("samples_per_s_fused"),
+        "engine.fused_pj_per_sop": eng.get("fused_pj_per_sop"),
+        "engine.hbm_reduction_fused": eng.get("hbm_reduction_fused"),
         # chip energy model at the paper's NMNIST operating point
         "chip.nmnist_sim_pj_per_sop": nm.get("sim_pj_per_sop"),
         "chip.nmnist_model_pj_per_sop": nm.get("model_chip_pj_per_sop"),

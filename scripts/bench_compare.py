@@ -36,6 +36,14 @@ METRICS: dict[str, tuple[str, bool, str]] = {
     "engine.pj_per_sop": ("lower", True, "det"),
     "engine.samples_per_s_compiled": ("higher", False, "timing"),
     "engine.compiled_s": ("lower", False, "timing"),
+    # fused Pallas engine (PR 4): the fused/compiled ratio is same-host
+    # normalized (gated, timing threshold); energy parity and the
+    # HBM-traffic reduction are deterministic model outputs (gated,
+    # strict threshold)
+    "engine.fused_speedup_vs_compiled": ("higher", True, "timing"),
+    "engine.samples_per_s_fused": ("higher", False, "timing"),
+    "engine.fused_pj_per_sop": ("lower", True, "det"),
+    "engine.hbm_reduction_fused": ("higher", True, "det"),
     "chip.nmnist_sim_pj_per_sop": ("lower", True, "det"),
     "chip.nmnist_model_pj_per_sop": ("lower", True, "det"),
     "compiler.anneal_improvement": ("higher", True, "det"),

@@ -1,4 +1,4 @@
-"""Batched XLA-compiled chip engine: scan-over-time, vmap-over-batch.
+"""Batched XLA-compiled chip engines: scan-over-time, vmap-over-batch.
 
 `ChipSimulator.run` (core/soc.py) is an interpretive Python loop — one
 sample, one timestep, one layer at a time, with every counter crossing
@@ -6,33 +6,50 @@ the host boundary.  That is the right shape for a *reference* model and
 the wrong shape for throughput: the chip's dataflow is static per
 (mapping, T), so the whole inference can be one XLA program.
 
-`CompiledEngine` lowers a `ChipSimulator`'s compiled mapping into pure
-array form once, at construction:
+Two array engines share one lowering (`lower_tables`) and one
+pricing/report stage (`_EngineBase.run_batch` -> `energy.price_batched`,
+the same function the interpretive reference uses, so the paths cannot
+drift):
 
-  * per-core slice tables — for each layer, the neuron-slice sizes and a
-    dense core index so per-core cycle costs become one
-    `segment_sum(timestep_cycles_array(...))` per layer;
-  * flow tables — each layer transition's precompiled `FlowRoute`s are
-    lowered by `noc.compile_flow_table` to per-spike hop counts and
-    energy (level-2/off-chip hops priced by the interconnect model), so
-    the NoC replay is two multiply-adds inside the trace;
-  * the (dequantized-codebook) weight matrices as scan constants.
+* `CompiledEngine` (PR 2) — the mapping, cycle and NoC models lowered to
+  arrays; per layer-step a dense `spikes @ w` against dequantized f32
+  weight constants plus a separate `lif_step`.  `jax.lax.scan` over T
+  under `jax.vmap` over the batch.
 
-Execution is then `jax.lax.scan` over timesteps nested under `jax.vmap`
-over a batch of spike trains.  The scan emits per-step *raw counters*
-(spike counts, touched neurons, per-core wall cycles, hops, NoC pJ) as
-traced arrays; energy pricing happens once at the end through
-`energy.price_batched` — the same function the interpretive reference
-uses, so the two paths cannot drift.
+* `FusedEngine` (PR 4) — the chip's actual pipeline shape: each
+  layer-step is ONE Pallas kernel (kernels/fused_timestep.py) that scans
+  **bitpacked 16-spike words** (uint16, 32x fewer HBM bytes than f32
+  lanes), popcounts and zero-skips empty spike tiles (`pl.when`),
+  dequantizes codebook indexes against `RegisterTable` words in-register
+  (the dense f32 matrix never exists in HBM — indexes are int8, 4x
+  smaller), and applies the partial-update LIF step in the same VMEM
+  pass.  Spikes stay packed between layers; per-row empty-word counts
+  are emitted as ZSPE skip telemetry (`StepStats.spike_words_skipped`).
+  In interpret mode the kernel runs one (B, K, N) tile whose float
+  program is expression-identical to the compiled engine's, so the two
+  array engines agree bit-exactly; vs the interpretive reference the
+  usual compiled-vs-reference contract applies (below).
 
-Differential testing against the interpretive path lives in
-tests/test_engine_equiv.py; benchmarks/engine_bench.py measures the
-speedup (>= 10x on an NMNIST-scale MLP at batch 32, T=20 on CPU).
+Both engines shard the batch across available devices with
+`shard_map` (batch axis, weights replicated) when the batch divides the
+device count, and the fused engine donates its membrane-state buffers to
+the XLA program (`donate_argnums`), so v/elapsed are updated in place.
+
+The bit-identical-spikes contract is validated on the CPU backend,
+where XLA's reduction order for the (B, n) @ (n, m) batched matmul
+matches the reference's per-sample product.  On GPU/TPU backends the
+accumulation order may differ, so currents can differ by ~1 ulp and
+a threshold tie could flip a spike — compare with a tolerance there.
+
+Differential testing lives in tests/test_engine_equiv.py (both engines
+vs the reference, fused vs compiled bit-exact, skip counters vs a numpy
+popcount oracle); benchmarks/engine_bench.py runs the three-way
+compiled/fused/reference sweep.
 """
 from __future__ import annotations
 
 import dataclasses
-from typing import TYPE_CHECKING, Sequence
+from typing import TYPE_CHECKING
 
 import jax
 import jax.numpy as jnp
@@ -40,6 +57,7 @@ import numpy as np
 
 from repro.core import energy as E
 from repro.core import noc as NOC
+from repro.core import zspe as Z
 from repro.core.neuron import init_state, lif_step, touch_mask
 
 if TYPE_CHECKING:  # pragma: no cover - import cycle guard (soc -> engine)
@@ -91,7 +109,255 @@ def lower_tables(sim: "ChipSimulator") -> EngineTables:
                         nominal_sops_per_step=nominal)
 
 
-class CompiledEngine:
+@dataclasses.dataclass(frozen=True)
+class FusedLayerWeights:
+    """One layer's weight operand for the fused kernel.
+
+    Codebook form when every core slice of the layer has a programmed
+    `RegisterTable` whose words reproduce the executed weights exactly
+    (`idx` int8 indexes + `cbw` per-column level values = words x scale);
+    dense f32 fallback otherwise (float-only simulators).  Rows are
+    padded to the 16-spike word boundary with zeros — bit-neutral, since
+    the padded spike bits are zero too.
+    """
+
+    n_pre: int
+    n_post: int
+    kw: int                        # spike words per input row
+    idx: jax.Array | None          # (kw*16, n_post) int8
+    cbw: jax.Array | None          # (n_levels, n_post) f32
+    dense: jax.Array | None        # (kw*16, n_post) f32
+    all_nonzero: bool = False      # every real weight element != 0: the
+                                   # touch-count matmul collapses to the
+                                   # per-row spike popcount (same ints)
+
+    @property
+    def codebook_mode(self) -> bool:
+        return self.idx is not None
+
+    def hbm_bytes_per_step(self, batch: int) -> int:
+        """Weight + input-spike HBM traffic for one timestep at `batch`."""
+        spikes = batch * self.kw * 2                       # uint16 words
+        if self.codebook_mode:
+            return (self.idx.size * 1 + self.cbw.size * 4 + spikes)
+        return self.dense.size * 4 + spikes
+
+
+def _lower_codebook_layer(sim: "ChipSimulator", li: int,
+                          ) -> tuple[np.ndarray, np.ndarray] | None:
+    """Rebuild (idx, cbw) for layer `li` from the per-core RegisterTables.
+
+    Returns None when any slice lacks a programmed table or the table
+    words do not reproduce the executed weights bit-exactly — the caller
+    then falls back to the dense-weight kernel.
+    """
+    w = np.asarray(sim.weights[li], np.float32)
+    n_pre, n_post = w.shape
+    # one physical core holds one assignment, so core_id keys the table
+    # regardless of list ordering (deploy's per-core PTQ orders tables by
+    # (layer, slice), the simulator by mapping.assignments)
+    by_core: dict[int, object] = {}
+    for rt in sim.register_tables:
+        if rt.core_id in by_core:
+            return None                                # ambiguous: bail
+        by_core[rt.core_id] = rt
+    slices = [(a, by_core.get(a.core_id))
+              for a in sim.mapping.assignments if a.layer == li + 1]
+    if not slices or any(rt is None for _, rt in slices):
+        return None
+    covered = sum(a.n_neurons for a, _ in slices)
+    if covered != n_post:
+        return None
+    n_levels = max(rt.weight_levels for _, rt in slices)
+    idx = np.zeros((n_pre, n_post), np.int8)
+    cbw = np.zeros((n_levels, n_post), np.float32)
+    for a, rt in slices:
+        if not rt.codebook_words:
+            return None
+        cb = rt.codebook()                                 # (L,) f32
+        cols = w[:, a.neuron_lo:a.neuron_hi]
+        ii = np.argmin(np.abs(cols[:, :, None] - cb[None, None, :]), axis=-1)
+        if not np.array_equal(cb[ii], cols):
+            return None                                    # not table-exact
+        idx[:, a.neuron_lo:a.neuron_hi] = ii.astype(np.int8)
+        cbw[:len(cb), a.neuron_lo:a.neuron_hi] = cb[:, None]
+    return idx, cbw
+
+
+def _pick_engine_block(m: int, k: int, n: int,
+                       interpret: bool) -> tuple[int, int] | None:
+    """Kernel tile for one engine layer-step.
+
+    Interpret mode runs one exact (m, n) tile — that is what makes the
+    fused path bit-exact against the compiled engine.  Compiled (real
+    TPU) mode must respect VMEM: cap the in-flight dequantized weight
+    slab at ~4 MB (k * bn f32) and the batch rows at 8, choosing the
+    largest *divisors* so no padding plumbing is needed in the scan.
+    """
+    if interpret:
+        return None
+
+    def largest_divisor(d: int, cap: int) -> int:
+        for c in range(min(d, max(cap, 1)), 0, -1):
+            if d % c == 0:
+                return c
+        return 1
+
+    bm = largest_divisor(m, 8)
+    bn = largest_divisor(n, max(1, (1 << 20) // max(k, 1)))
+    return (bm, bn)
+
+
+def lower_fused_weights(sim: "ChipSimulator") -> tuple[FusedLayerWeights, ...]:
+    """Lower every layer to its fused-kernel weight operand."""
+    out = []
+    for li, w in enumerate(sim.weights):
+        n_pre, n_post = int(w.shape[0]), int(w.shape[1])
+        kw = Z.spike_word_count(n_pre)
+        kp = kw * Z.SPIKE_WORD_BITS
+        nz = bool(np.all(np.asarray(w) != 0))
+        cbk = _lower_codebook_layer(sim, li)
+        if cbk is not None:
+            idx, cbw = cbk
+            idx = np.pad(idx, ((0, kp - n_pre), (0, 0)))
+            out.append(FusedLayerWeights(
+                n_pre=n_pre, n_post=n_post, kw=kw,
+                idx=jnp.asarray(idx), cbw=jnp.asarray(cbw), dense=None,
+                all_nonzero=nz))
+        else:
+            dense = np.pad(np.asarray(w, np.float32),
+                           ((0, kp - n_pre), (0, 0)))
+            out.append(FusedLayerWeights(
+                n_pre=n_pre, n_post=n_post, kw=kw,
+                idx=None, cbw=None, dense=jnp.asarray(dense),
+                all_nonzero=nz))
+    return tuple(out)
+
+
+# ---------------------------------------------------------------------------
+# shared execution / pricing stage
+# ---------------------------------------------------------------------------
+
+class _EngineBase:
+    """Lowering + execution + pricing shared by both array engines.
+
+    Subclasses provide `_make_executable(sharded)` returning a callable
+    from an f32 (B, T, n_in) spike-train array to the per-step counter
+    dict `ys` (leaves lead with the batch axis).  `run_batch` prices the
+    counters through `energy.price_batched` — the identical code path
+    for both engines and the interpretive reference.
+    """
+
+    def __init__(self, sim: "ChipSimulator", shard: bool = True):
+        self.sim = sim
+        self.tables = lower_tables(sim)
+        self.shard = shard
+        self.last_run_sharded = False
+        self._exec: dict[bool, object] = {}
+
+    # -- trace construction (subclass hooks) --------------------------------
+
+    def _make_executable(self, sharded: bool):
+        raise NotImplementedError
+
+    def _shard_wrap(self, fn, n_args: int = 1):
+        """Wrap a batched-run function in a shard_map over the batch axis
+        (weights/tables are closure constants -> replicated)."""
+        try:                         # jax >= 0.4.35 promotes it to core
+            from jax import shard_map
+        except ImportError:          # older releases: experimental module
+            from jax.experimental.shard_map import shard_map
+        from jax.sharding import Mesh, PartitionSpec as P
+
+        mesh = Mesh(np.array(jax.devices()), ("batch",))
+        spec = P("batch")
+        return shard_map(fn, mesh=mesh, in_specs=(spec,) * n_args,
+                         out_specs=spec, check_rep=False)
+
+    def _flow_consts(self):
+        return [
+            None if ft is None else
+            (ft.n_flows, float(ft.hops_total), float(ft.energy_total_pj))
+            for ft in self.tables.flows
+        ]
+
+    # -- execution ----------------------------------------------------------
+
+    def run_raw(self, spike_trains: jax.Array) -> dict:
+        """Run the XLA program; returns the per-step counter arrays."""
+        trains = jnp.asarray(spike_trains, jnp.float32)
+        if trains.ndim != 3:
+            raise ValueError(f"expected (batch, T, n_in), got {trains.shape}")
+        ndev = len(jax.devices())
+        sharded = bool(self.shard and ndev > 1
+                       and int(trains.shape[0]) % ndev == 0)
+        if sharded not in self._exec:
+            self._exec[sharded] = self._make_executable(sharded)
+        self.last_run_sharded = sharded
+        return self._exec[sharded](trains)
+
+    def run_batch(self, spike_trains: jax.Array
+                  ) -> tuple[jax.Array, list["ChipReport"]]:
+        """(B, T, n_in) spike trains -> ((B, n_out) counts, per-sample
+        ChipReports)."""
+        from repro.core.soc import ChipReport, StepStats
+
+        sim = self.sim
+        tbl = self.tables
+        ys = self.run_raw(spike_trains)
+        B, T = int(spike_trains.shape[0]), int(spike_trains.shape[1])
+        out_counts = jnp.sum(ys["out"], axis=1)
+
+        n_posts = np.array([lt.n_post for lt in tbl.layers], np.float64)
+        nnz = np.asarray(ys["nnz"], np.float64)          # (B, T, L)
+        touched = np.asarray(ys["touched"], np.float64)
+        spikes_in = nnz.sum(axis=(1, 2))
+        performed = (nnz * n_posts).sum(axis=(1, 2))
+        neurons_touched = touched.sum(axis=(1, 2))
+        wall = np.asarray(ys["wall"], np.float64).sum(axis=1)
+        noc_hops = np.asarray(ys["noc_hops"], np.float64).sum(axis=1)
+        noc_pj = np.asarray(ys["noc_pj"], np.float64).sum(axis=1)
+        routed = np.asarray(ys["routed"], np.float64).sum(axis=1)
+        skipped_words = (np.asarray(ys["skip_words"], np.float64)
+                         .sum(axis=(1, 2)) if "skip_words" in ys
+                         else np.zeros(B))
+        nominal = float(tbl.nominal_sops_per_step) * T
+
+        priced = E.price_batched(
+            sim.core_model, sim.riscv,
+            nominal_sops=np.full(B, nominal), performed_sops=performed,
+            noc_energy_pj=noc_pj, wall_cycles=wall, steps=T,
+            freq_hz=sim.freq_hz, zero_skip=sim.zero_skip,
+            partial_update=sim.partial_update)
+
+        reports = []
+        for b in range(B):
+            acc = StepStats(
+                nominal_sops=nominal,
+                performed_sops=float(performed[b]),
+                spikes_in=float(spikes_in[b]),
+                spikes_routed=float(routed[b]),
+                neurons_touched=float(neurons_touched[b]),
+                noc_hops=float(noc_hops[b]),
+                noc_energy_pj=float(noc_pj[b]),
+                spike_words_skipped=float(skipped_words[b]),
+            )
+            reports.append(ChipReport(
+                steps=T, stats=acc,
+                energy_pj=float(priced["total_pj"][b]),
+                core_energy_pj=float(priced["core_pj"][b]),
+                noc_energy_pj=float(noc_pj[b]),
+                riscv_energy_pj=float(priced["riscv_pj"][b]),
+                wall_cycles=float(wall[b]), freq_hz=sim.freq_hz))
+        return out_counts, reports
+
+    def run(self, spike_train: jax.Array) -> tuple[jax.Array, "ChipReport"]:
+        """Single-sample convenience wrapper (batch of 1)."""
+        counts, reports = self.run_batch(jnp.asarray(spike_train)[None])
+        return counts[0], reports[0]
+
+
+class CompiledEngine(_EngineBase):
     """One XLA program per (mapping, T, batch) instead of O(T x layers x
     cores) Python dispatches.
 
@@ -100,20 +366,7 @@ class CompiledEngine:
     exact integer counts emitted per step and summed in float64 on the
     host, so SOP/flit/energy totals agree with the reference within
     float32 rounding of the cycle expressions (<< 1e-6 relative).
-
-    The bit-identical-spikes contract is validated on the CPU backend,
-    where XLA's reduction order for the (B, n) @ (n, m) batched matmul
-    matches the reference's per-sample product.  On GPU/TPU backends the
-    accumulation order may differ, so currents can differ by ~1 ulp and
-    a threshold tie could flip a spike — compare with a tolerance there.
     """
-
-    def __init__(self, sim: "ChipSimulator"):
-        self.sim = sim
-        self.tables = lower_tables(sim)
-        self._run_jit = jax.jit(self._build_run())
-
-    # -- trace construction -------------------------------------------------
 
     def _build_run(self):
         sim = self.sim
@@ -127,11 +380,7 @@ class CompiledEngine:
             (lt, jnp.asarray(lt.slice_sizes), jnp.asarray(lt.core_index))
             for lt in tbl.layers
         ]
-        flow_consts = [
-            None if ft is None else
-            (ft.n_flows, float(ft.hops_total), float(ft.energy_total_pj))
-            for ft in tbl.flows
-        ]
+        flow_consts = self._flow_consts()
 
         def step(states, spikes_t):
             spikes = spikes_t
@@ -192,67 +441,172 @@ class CompiledEngine:
 
         return run
 
-    # -- execution ----------------------------------------------------------
+    def _make_executable(self, sharded: bool):
+        fn = self._build_run()
+        if sharded:
+            fn = self._shard_wrap(fn, n_args=1)
+        return jax.jit(fn)
 
-    def run_raw(self, spike_trains: jax.Array) -> dict:
-        """Run the XLA program; returns the per-step counter arrays."""
-        trains = jnp.asarray(spike_trains, jnp.float32)
-        if trains.ndim != 3:
-            raise ValueError(f"expected (batch, T, n_in), got {trains.shape}")
-        return self._run_jit(trains)
 
-    def run_batch(self, spike_trains: jax.Array
-                  ) -> tuple[jax.Array, list["ChipReport"]]:
-        """(B, T, n_in) spike trains -> ((B, n_out) counts, per-sample
-        ChipReports)."""
-        from repro.core.soc import ChipReport, StepStats
+class FusedEngine(_EngineBase):
+    """The fused-kernel hot path: one Pallas kernel per layer-step.
+
+    Spikes travel bitpacked (uint16 16-spike words) through the whole
+    scan — the input train is packed once, each layer's output spikes are
+    re-packed for the next layer — and weights stay codebook-compressed
+    (int8 indexes + per-column RegisterTable level values) whenever the
+    simulator's register tables reproduce the executed weights exactly.
+    Membrane state is passed in explicitly and donated to the XLA
+    program, so v/elapsed update in place across calls.
+
+    In interpret mode (CPU) each kernel runs one (B, K, N) tile whose
+    float program matches the compiled engine expression-for-expression:
+    with word-aligned layer widths the two array engines produce
+    bit-identical spikes, states and counters (tests assert equality, not
+    closeness).  When a layer width is not a multiple of 16, the zero
+    bits padding the last spike word can regroup a small matmul's
+    reduction by an ulp — integer counters stay exact, and spikes agree
+    under the same empirical contract as compiled-vs-reference.
+    """
+
+    def __init__(self, sim: "ChipSimulator", shard: bool = True):
+        if sim.lif.reset_mode != "hard":
+            raise ValueError(
+                "FusedEngine supports hard reset only (the chip's updater); "
+                f"got reset_mode={sim.lif.reset_mode!r} — use "
+                "engine='compiled'")
+        super().__init__(sim, shard=shard)
+        self.fused_weights = lower_fused_weights(sim)
+        self.last_states = None      # final LIF states of the last run
+
+    @property
+    def codebook_layers(self) -> int:
+        return sum(lw.codebook_mode for lw in self.fused_weights)
+
+    def hbm_bytes_per_step(self, batch: int) -> int:
+        """Weight + spike HBM bytes per timestep (the fused operands)."""
+        return sum(lw.hbm_bytes_per_step(batch) for lw in self.fused_weights)
+
+    def _build_run(self):
+        from repro.kernels.fused_timestep import (fused_timestep_codebook,
+                                                  fused_timestep_dense)
+        from repro.kernels.ops import interpret_default
 
         sim = self.sim
         tbl = self.tables
-        ys = self.run_raw(spike_trains)
-        B, T = int(spike_trains.shape[0]), int(spike_trains.shape[1])
-        out_counts = jnp.sum(ys["out"], axis=1)
+        lif = sim.lif
+        cyc = sim.cycle_model
+        n_active = tbl.n_active_cores
+        interp = interpret_default()
+        fused_w = self.fused_weights
+        layer_consts = [
+            (lt, jnp.asarray(lt.slice_sizes)[None, :],
+             jnp.asarray(lt.core_index))
+            for lt in tbl.layers
+        ]
+        flow_consts = self._flow_consts()
+        lif_kw = dict(threshold=float(lif.threshold), leak=float(lif.leak),
+                      reset=float(lif.reset),
+                      partial_update=bool(lif.partial_update))
 
-        n_posts = np.array([lt.n_post for lt in tbl.layers], np.float64)
-        nnz = np.asarray(ys["nnz"], np.float64)          # (B, T, L)
-        touched = np.asarray(ys["touched"], np.float64)
-        spikes_in = nnz.sum(axis=(1, 2))
-        performed = (nnz * n_posts).sum(axis=(1, 2))
-        neurons_touched = touched.sum(axis=(1, 2))
-        wall = np.asarray(ys["wall"], np.float64).sum(axis=1)
-        noc_hops = np.asarray(ys["noc_hops"], np.float64).sum(axis=1)
-        noc_pj = np.asarray(ys["noc_pj"], np.float64).sum(axis=1)
-        routed = np.asarray(ys["routed"], np.float64).sum(axis=1)
-        nominal = float(tbl.nominal_sops_per_step) * T
+        def layer_apply(li, packed, state):
+            lw = fused_w[li]
+            block = _pick_engine_block(int(packed.shape[0]),
+                                       lw.kw * Z.SPIKE_WORD_BITS,
+                                       lw.n_post, interp)
+            if lw.codebook_mode:
+                return fused_timestep_codebook(
+                    packed, lw.idx, lw.cbw, state.v, state.elapsed,
+                    gather=interp, all_nonzero=lw.all_nonzero,
+                    block=block, interpret=interp, **lif_kw)
+            return fused_timestep_dense(
+                packed, lw.dense, state.v, state.elapsed,
+                all_nonzero=lw.all_nonzero, block=block, interpret=interp,
+                **lif_kw)
 
-        priced = E.price_batched(
-            sim.core_model, sim.riscv,
-            nominal_sops=np.full(B, nominal), performed_sops=performed,
-            noc_energy_pj=noc_pj, wall_cycles=wall, steps=T,
-            freq_hz=sim.freq_hz, zero_skip=sim.zero_skip,
-            partial_update=sim.partial_update)
+        def step(states, packed_t):          # packed_t: (B, kw0) uint16
+            from repro.core.neuron import LIFState
 
-        reports = []
-        for b in range(B):
-            acc = StepStats(
-                nominal_sops=nominal,
-                performed_sops=float(performed[b]),
-                spikes_in=float(spikes_in[b]),
-                spikes_routed=float(routed[b]),
-                neurons_touched=float(neurons_touched[b]),
-                noc_hops=float(noc_hops[b]),
-                noc_energy_pj=float(noc_pj[b]),
-            )
-            reports.append(ChipReport(
-                steps=T, stats=acc,
-                energy_pj=float(priced["total_pj"][b]),
-                core_energy_pj=float(priced["core_pj"][b]),
-                noc_energy_pj=float(noc_pj[b]),
-                riscv_energy_pj=float(priced["riscv_pj"][b]),
-                wall_cycles=float(wall[b]), freq_hz=sim.freq_hz))
-        return out_counts, reports
+            packed = packed_t
+            B = packed.shape[0]
+            wall = jnp.zeros((B, n_active), jnp.float32)
+            nnzs, toucheds, fireds, skips = [], [], [], []
+            noc_hops = jnp.zeros((B,), jnp.float32)
+            noc_pj = jnp.zeros((B,), jnp.float32)
+            routed = jnp.zeros((B,), jnp.float32)
+            new_states = []
+            out = None
+            for li, lw in enumerate(fused_w):
+                lt, slices, core_idx = layer_consts[li]
+                vo, eo, out, tc, nnz_rows, ew = layer_apply(
+                    li, packed, states[li])
+                new_states.append(LIFState(v=vo, elapsed=eo))
+                nnz = nnz_rows[:, 0].astype(jnp.float32)       # (B,)
+                ew = ew[:, 0]
+                tsum = jnp.sum(tc, axis=-1).astype(jnp.float32)
+                fired = jnp.sum(out, axis=-1)                  # (B,)
+                core_touched = tsum[:, None] * slices / max(lt.n_post, 1)
+                core_cyc = cyc.timestep_cycles_array(
+                    lt.n_pre, slices, nnz[:, None], core_touched,
+                    sim.zero_skip, sim.partial_update)         # (B, A)
+                wall = wall + jax.vmap(
+                    lambda c: jax.ops.segment_sum(
+                        c, core_idx, num_segments=n_active))(core_cyc)
+                if flow_consts[li] is not None:
+                    n_flows, hops_tot, pj_tot = flow_consts[li]
+                    per_src = jnp.maximum(
+                        1, fired.astype(jnp.int32) // max(n_flows, 1)
+                    ).astype(jnp.float32)
+                    live = (fired > 0).astype(jnp.float32)
+                    noc_hops = noc_hops + live * per_src * hops_tot
+                    noc_pj = noc_pj + live * per_src * pj_tot
+                    routed = routed + live * fired
+                nnzs.append(nnz)
+                toucheds.append(tsum)
+                fireds.append(fired)
+                skips.append(ew.astype(jnp.float32))
+                packed = Z.pack_spike_words(out)   # next layer's spike words
+            ys = {
+                "nnz": jnp.stack(nnzs, axis=-1),               # (B, L)
+                "touched": jnp.stack(toucheds, axis=-1),
+                "fired": jnp.stack(fireds, axis=-1),
+                "skip_words": jnp.stack(skips, axis=-1),
+                "wall": jnp.max(wall, axis=-1),                # (B,)
+                "noc_hops": noc_hops,
+                "noc_pj": noc_pj,
+                "routed": routed,
+                "out": out,                                    # (B, n_out)
+            }
+            return tuple(new_states), ys
 
-    def run(self, spike_train: jax.Array) -> tuple[jax.Array, "ChipReport"]:
-        """Single-sample convenience wrapper (batch of 1)."""
-        counts, reports = self.run_batch(jnp.asarray(spike_train)[None])
-        return counts[0], reports[0]
+        def run(packed_trains, states):      # (B, T, kw0) uint16, LIFStates
+            packed_t = jnp.swapaxes(packed_trains, 0, 1)
+            final, ys = jax.lax.scan(step, states, packed_t)
+            ys = jax.tree_util.tree_map(
+                lambda a: jnp.swapaxes(a, 0, 1), ys)
+            # final states are returned so the donated membrane buffers
+            # have same-shaped outputs to alias into (in-place update)
+            return ys, final
+
+        return run
+
+    def _make_executable(self, sharded: bool):
+        from repro.core.neuron import LIFState
+
+        fn = self._build_run()
+        if sharded:
+            fn = self._shard_wrap(fn, n_args=2)
+        run_jit = jax.jit(fn, donate_argnums=(1,))   # donate membrane state
+        pack = jax.jit(Z.pack_spike_words)
+        fused_w = self.fused_weights
+
+        def executable(trains):              # (B, T, n_in) f32
+            B = int(trains.shape[0])
+            states = tuple(
+                LIFState(v=jnp.zeros((B, lw.n_post), jnp.float32),
+                         elapsed=jnp.zeros((B, lw.n_post), jnp.int32))
+                for lw in fused_w)
+            ys, self.last_states = run_jit(pack(trains), states)
+            return ys
+
+        return executable

@@ -228,6 +228,7 @@ class StepStats:
     core_cycles: float = 0.0         # max over cores (parallel execution)
     noc_hops: float = 0.0
     noc_energy_pj: float = 0.0
+    spike_words_skipped: float = 0.0  # ZSPE word-scan skips (fused engine)
 
     @property
     def sparsity(self) -> float:
@@ -266,12 +267,19 @@ class ChipSimulator:
     """Functional + energy simulation of the whole SoC for a feed-forward
     SNN described by per-layer weight matrices.
 
-    Two execution engines share one lowered mapping:
+    Three execution engines share one lowered mapping:
 
     * ``engine="compiled"`` (default) — `repro.core.engine.CompiledEngine`:
       the whole inference is one XLA program (`jax.lax.scan` over
       timesteps, `jax.vmap` over the batch), with the mapping, cycle and
-      NoC models lowered to arrays.  This is the throughput path.
+      NoC models lowered to arrays.
+    * ``engine="fused"`` — `repro.core.engine.FusedEngine`: each
+      layer-step is one Pallas kernel (kernels/fused_timestep.py) fusing
+      the ZSPE word scan (bitpacked uint16 spikes), in-register codebook
+      dequant from the RegisterTable words, and the partial-update LIF
+      step in a single VMEM pass; batches shard over available devices
+      via shard_map.  This is the throughput path; bit-identical to
+      ``compiled`` under interpret mode.
     * ``engine="reference"`` — the original interpretive Python loop
       (one sample, one timestep, one layer at a time).  Kept as the
       differential-testing oracle; see tests/test_engine_equiv.py.
@@ -385,11 +393,12 @@ class ChipSimulator:
         # see the synapses the chip actually programs
         self.nonzero_weights = [(w != 0).astype(jnp.float32)
                                 for w in self.weights]
-        if engine not in ("compiled", "reference"):
-            raise ValueError(f"engine must be 'compiled' or 'reference', "
-                             f"got {engine!r}")
+        if engine not in ("compiled", "fused", "reference"):
+            raise ValueError(f"engine must be 'compiled', 'fused' or "
+                             f"'reference', got {engine!r}")
         self.engine = engine
         self._compiled = None    # CompiledEngine, built lazily
+        self._fused = None       # FusedEngine, built lazily
 
     def compiled_engine(self):
         """The lazily-built batched XLA engine for this mapping."""
@@ -397,6 +406,23 @@ class ChipSimulator:
             from repro.core.engine import CompiledEngine
             self._compiled = CompiledEngine(self)
         return self._compiled
+
+    def fused_engine(self):
+        """The lazily-built fused-Pallas-kernel engine for this mapping."""
+        if self._fused is None:
+            from repro.core.engine import FusedEngine
+            self._fused = FusedEngine(self)
+        return self._fused
+
+    def array_engine(self):
+        """The batched array engine selected at construction (compiled or
+        fused); raises for the reference engine, which has no lowering."""
+        if self.engine == "fused":
+            return self.fused_engine()
+        if self.engine == "compiled":
+            return self.compiled_engine()
+        raise ValueError("the reference engine is interpretive — no "
+                         "array lowering to return")
 
     def _build_register_tables(self) -> list[RegisterTable]:
         """One programmed RegisterTable per core assignment.  With quantized
@@ -425,20 +451,20 @@ class ChipSimulator:
     def run(self, spike_train: jax.Array) -> tuple[jax.Array, ChipReport]:
         """spike_train: (T, n_in) binary.  Returns (out_spike_counts, report).
 
-        Dispatches to the engine selected at construction; both engines
+        Dispatches to the engine selected at construction; all engines
         return identical spikes and matching accounting.
         """
-        if self.engine == "compiled":
-            return self.compiled_engine().run(spike_train)
+        if self.engine in ("compiled", "fused"):
+            return self.array_engine().run(spike_train)
         return self.run_reference(spike_train)
 
     def run_batch(self, spike_trains: jax.Array
                   ) -> tuple[jax.Array, list[ChipReport]]:
         """spike_trains: (B, T, n_in).  Returns ((B, n_out) counts, one
-        ChipReport per sample).  The compiled engine runs the batch as a
-        single vmapped XLA program; the reference engine loops samples."""
-        if self.engine == "compiled":
-            return self.compiled_engine().run_batch(spike_trains)
+        ChipReport per sample).  The array engines run the batch as a
+        single XLA program; the reference engine loops samples."""
+        if self.engine in ("compiled", "fused"):
+            return self.array_engine().run_batch(spike_trains)
         outs, reports = [], []
         for b in range(int(spike_trains.shape[0])):
             counts, rep = self.run_reference(spike_trains[b])

@@ -33,6 +33,64 @@ def zspe_matmul(spikes: jax.Array, weights: jax.Array) -> jax.Array:
     return spikes.astype(weights.dtype) @ weights
 
 
+# ---------------------------------------------------------------------------
+# Spike words — the chip's on-wire spike format (16 spikes per word)
+# ---------------------------------------------------------------------------
+#
+# The ZSPE front-end loads 16 pre-synaptic spikes per cycle as one word from
+# the ping-pong cache and scans the word's bits in parallel; an all-zero
+# word generates no synaptic work at all.  These helpers are the software
+# model of that format: binary spike vectors travel as uint16 words (32x
+# fewer bytes than f32 lanes), and `empty_spike_words` is the per-row count
+# of words the ZSPE scan skips outright — the skip telemetry the fused
+# engine emits and tests/test_engine_equiv.py checks against a numpy
+# popcount oracle.
+
+SPIKE_WORD_BITS = 16
+
+
+def spike_word_count(n: int) -> int:
+    """Words needed for `n` spikes (the last word zero-padded)."""
+    return -(-int(n) // SPIKE_WORD_BITS)
+
+
+def pack_spike_words(spikes: jax.Array) -> jax.Array:
+    """(..., K) {0,1} -> (..., ceil(K/16)) uint16, LSB-first per word.
+
+    Padding bits (K up to the word boundary) are zero, so popcounts over
+    packed words equal popcounts over the unpacked spikes exactly.
+    """
+    k = spikes.shape[-1]
+    kw = spike_word_count(k)
+    pad = kw * SPIKE_WORD_BITS - k
+    bits = jnp.asarray(spikes != 0, jnp.uint16)
+    if pad:
+        bits = jnp.pad(bits, [(0, 0)] * (bits.ndim - 1) + [(0, pad)])
+    bits = bits.reshape(*bits.shape[:-1], kw, SPIKE_WORD_BITS)
+    shifts = jnp.arange(SPIKE_WORD_BITS, dtype=jnp.uint16)
+    return jnp.sum(bits << shifts, axis=-1, dtype=jnp.uint16)
+
+
+def unpack_spike_words(packed: jax.Array, n: int | None = None) -> jax.Array:
+    """Inverse of `pack_spike_words` -> (..., n) f32 {0,1}.
+
+    `n` crops the trailing word's zero padding (defaults to all 16*Kw
+    lanes, which is the padded width the fused kernel consumes).
+    """
+    shifts = jnp.arange(SPIKE_WORD_BITS, dtype=jnp.uint16)
+    bits = (packed[..., None] >> shifts) & jnp.uint16(1)
+    flat = bits.reshape(*packed.shape[:-1],
+                        packed.shape[-1] * SPIKE_WORD_BITS)
+    if n is not None:
+        flat = flat[..., :n]
+    return flat.astype(jnp.float32)
+
+
+def empty_spike_words(packed: jax.Array) -> jax.Array:
+    """Per-row count of all-zero 16-spike words (the ZSPE word-scan skip)."""
+    return jnp.sum((packed == 0).astype(jnp.int32), axis=-1)
+
+
 def zspe_matmul_q(spikes: jax.Array, q: QuantizedTensor) -> jax.Array:
     return zspe_matmul(spikes, dequantize(q))
 

@@ -11,7 +11,10 @@ open between "train an SNN in JAX" and "simulate the chip":
               per placed core, lowered to RegisterTable words
     compile   repro.compiler partition→place→route with profile-guided
               spike rates measured from the trained network
-    execute   core.engine.CompiledEngine over the mapped chip, batched
+    execute   the batched chip engine over the mapped chip — by default
+              core.engine.FusedEngine (one Pallas kernel per layer-step:
+              bitpacked spike words, in-register RegisterTable dequant,
+              fused LIF), with engine="compiled" as the scan/vmap option
 
 and returns a `DeployReport` whose parity gates assert that the chip
 reproduces the trained model's accuracy (within tolerance) and lands
@@ -41,6 +44,10 @@ class DeployConfig:
     eval_batch: int = 256
     eval_step: int = 999_983        # data seed-step held out from training
     chip_chunk: int = 64            # chip-engine batch per XLA dispatch
+    engine: str = "fused"           # chip execution engine; the fused
+                                    # Pallas path consumes the per-core
+                                    # RegisterTables directly (codebook
+                                    # dequant in-register)
     prune_zero_level: bool | None = None   # None => follow hw.l1_weight > 0
     verbose: bool = False
 
@@ -134,9 +141,16 @@ def deploy(cfg: SNNConfig, data, dcfg: DeployConfig | None = None,
         f"{[round(e, 4) for e in pq.rms_error]} ==")
 
     # ---- execute on the chip engine ----------------------------------
+    engine = dcfg.engine
+    if engine == "fused" and cfg.lif.reset_mode != "hard":
+        # the fused kernel implements the chip's hard-reset updater only;
+        # soft-reset models keep deploying through the compiled engine
+        log(f"== engine: reset_mode={cfg.lif.reset_mode!r} not supported "
+            f"by the fused kernel — falling back to 'compiled' ==")
+        engine = "compiled"
     sim = ChipSimulator(pq.weights, freq_hz=dcfg.chip_freq_hz,
                         mapping=mapping, register_tables=pq.tables,
-                        lif=cfg.lif, engine="compiled")
+                        lif=cfg.lif, engine=engine)
     counts, chip = _chip_eval(sim, eval_sp, eval_lb, dcfg.chip_chunk)
     log(f"== chip: acc {chip['accuracy']:.4f}, {chip['pj_per_sop']:.3f} "
         f"pJ/SOP, sparsity {chip['sparsity']:.3f} ==")

@@ -68,7 +68,7 @@ def _kernel(q_ref, k_ref, v_ref, o_ref, acc_ref, m_ref, l_ref, *,
 @functools.partial(jax.jit, static_argnames=("causal", "bq", "bk", "interpret"))
 def flash_attention(
     q: jax.Array,          # (B, H, S, hd)
-    k: jax.Array,          # (B, H, T, hd) — kv heads pre-broadcast to H
+    k: jax.Array,          # (B, KV, T, hd); KV == H, or H % KV == 0 (GQA)
     v: jax.Array,
     *,
     causal: bool = True,
@@ -76,15 +76,24 @@ def flash_attention(
     bk: int = 128,
     interpret: bool = True,
 ) -> jax.Array:
+    """GQA is handled in the BlockSpec index maps: query-head grid cell g
+    reads kv row (g // H)·KV + (g % H) // group, so the (B, KV, T, hd)
+    cache is consumed directly — no `jnp.repeat` materializing group
+    copies of K/V in HBM (the kernel exists to cut that traffic)."""
     b, h, s, hd = q.shape
-    t = k.shape[2]
+    kvh, t = k.shape[1], k.shape[2]
     assert s % bq == 0 and t % bk == 0, (s, t, bq, bk)
+    assert h % kvh == 0, (h, kvh)
+    group = h // kvh
     scale = hd ** -0.5
     kv_steps = t // bk
 
     q3 = q.reshape(b * h, s, hd)
-    k3 = k.reshape(b * h, t, hd)
-    v3 = v.reshape(b * h, t, hd)
+    k3 = k.reshape(b * kvh, t, hd)
+    v3 = v.reshape(b * kvh, t, hd)
+
+    def kv_row(g, i):
+        return ((g // h) * kvh + (g % h) // group, 0, 0)
 
     grid = (b * h, s // bq)
     out = pl.pallas_call(
@@ -93,8 +102,8 @@ def flash_attention(
         grid=grid,
         in_specs=[
             pl.BlockSpec((1, bq, hd), lambda g, i: (g, i, 0)),
-            pl.BlockSpec((1, t, hd), lambda g, i: (g, 0, 0)),
-            pl.BlockSpec((1, t, hd), lambda g, i: (g, 0, 0)),
+            pl.BlockSpec((1, t, hd), kv_row),
+            pl.BlockSpec((1, t, hd), kv_row),
         ],
         out_specs=pl.BlockSpec((1, bq, hd), lambda g, i: (g, i, 0)),
         out_shape=jax.ShapeDtypeStruct((b * h, s, hd), q.dtype),

@@ -6,6 +6,7 @@ custom VJPs where the kernels appear in training graphs.
 """
 from __future__ import annotations
 
+import functools
 import os
 from functools import partial
 
@@ -13,16 +14,32 @@ import jax
 import jax.numpy as jnp
 
 from repro.kernels import codebook_matmul as _cbm
+from repro.kernels import fused_timestep as _fused
 from repro.kernels import lif_update as _lif
 from repro.kernels import zspe_spmm as _zspe
 from repro.kernels import ref as _ref
 
 
-def _interpret_default() -> bool:
+@functools.lru_cache(maxsize=1)
+def interpret_default() -> bool:
+    """Whether Pallas kernels run in interpret mode by default.
+
+    Resolved ONCE per process (cached): the env var and backend cannot
+    change under a running program, and re-reading `os.environ` on every
+    kernel dispatch showed up in the fused-engine hot path.  Controlled by
+    ``REPRO_PALLAS_INTERPRET`` (documented in the README): unset -> True
+    unless the backend is a real TPU; "0"/"false" forces compiled Mosaic
+    kernels; anything else forces interpret mode.  Tests that mutate the
+    env must call ``interpret_default.cache_clear()``.
+    """
     env = os.environ.get("REPRO_PALLAS_INTERPRET")
     if env is not None:
         return env not in ("0", "false", "False")
     return jax.default_backend() != "tpu"
+
+
+# Backwards-compatible alias (pre-PR4 private name).
+_interpret_default = interpret_default
 
 
 def _pad_to(x: jax.Array, mults: tuple[int, ...], value=0) -> jax.Array:
@@ -57,7 +74,7 @@ def codebook_matmul(x: jax.Array, idx: jax.Array, codebook: jax.Array,
 
 
 def _codebook_matmul_fwd_impl(x, idx, codebook, interpret):
-    interp = _interpret_default() if interpret is None else interpret
+    interp = interpret_default() if interpret is None else interpret
     lead = x.shape[:-1]
     k = x.shape[-1]
     n = idx.shape[-1]
@@ -106,7 +123,7 @@ def zspe_spmm(spikes: jax.Array, weights: jax.Array,
     with_stats=True additionally returns the skipped-tile counters used to
     drive the energy model with measured skip rates.
     """
-    interp = _interpret_default() if interpret is None else interpret
+    interp = interpret_default() if interpret is None else interpret
     lead = spikes.shape[:-1]
     k = spikes.shape[-1]
     n = weights.shape[-1]
@@ -129,7 +146,7 @@ def zspe_spmm(spikes: jax.Array, weights: jax.Array,
 def lif_update(v, elapsed, current, *, threshold=1.0, leak=0.9, reset=0.0,
                interpret: bool | None = None):
     """(..., N) fused partial-update LIF step via the Pallas kernel."""
-    interp = _interpret_default() if interpret is None else interpret
+    interp = interpret_default() if interpret is None else interpret
     lead = v.shape[:-1]
     n = v.shape[-1]
     v2 = v.reshape(-1, n)
@@ -144,6 +161,60 @@ def lif_update(v, elapsed, current, *, threshold=1.0, leak=0.9, reset=0.0,
         block=(bb, bn), interpret=interp)
     crop = lambda a: a[:b, :n].reshape(*lead, n)
     return crop(vo), crop(eo), crop(sp), crop(upd)
+
+
+# ---------------------------------------------------------------------------
+# fused ZSPE -> dequant -> LIF timestep
+# ---------------------------------------------------------------------------
+
+def fused_timestep(spikes, weights, v, elapsed, *, codebook=None,
+                   threshold=1.0, leak=0.9, reset=0.0,
+                   partial_update: bool = True,
+                   block: tuple[int, int] | None = None,
+                   interpret: bool | None = None):
+    """One fused layer-timestep with arbitrary (M, K, N) shapes.
+
+    `spikes` is (M, K) {0,1} f32 — packed to uint16 words here (the
+    engine keeps trains packed across the whole scan and calls the raw
+    kernel directly).  `weights` is either a dense (K, N) f32 matrix or,
+    with `codebook` given as an (n_levels, N) per-column level table, a
+    (K, N) int8 index matrix.  Padding (K to the 16-spike word, M/N to
+    `block` multiples) is applied and cropped here; padded spike bits are
+    zero so counters and currents are unaffected, and padded columns are
+    dropped before the caller sees them.
+
+    Returns (v', elapsed', spikes_out, touched, nnz_rows, empty_words)
+    with `empty_words` counting only the ceil(K/16) real spike words.
+    """
+    from repro.core.zspe import pack_spike_words, spike_word_count
+
+    interp = interpret_default() if interpret is None else interpret
+    m, k = spikes.shape
+    n = v.shape[-1]
+    kw = spike_word_count(k)
+    packed = pack_spike_words(jnp.asarray(spikes, jnp.float32))
+    kp = kw * _fused.SPIKE_WORD_BITS
+
+    bm, bn = (m, n) if block is None else block
+    packed = _pad_to(packed, (bm, kw))
+    vp = _pad_to(v, (bm, bn))
+    ep = _pad_to(elapsed, (bm, bn))
+    if codebook is not None:
+        w0 = _pad_to(jnp.asarray(weights, jnp.int8), (kp, bn))
+        cbw = _pad_to(jnp.asarray(codebook, jnp.float32), (1, bn))
+        outs = _fused.fused_timestep_codebook(
+            packed, w0, cbw, vp, ep, threshold=threshold, leak=leak,
+            reset=reset, partial_update=partial_update, gather=interp,
+            block=(bm, bn), interpret=interp)
+    else:
+        w0 = _pad_to(jnp.asarray(weights, jnp.float32), (kp, bn))
+        outs = _fused.fused_timestep_dense(
+            packed, w0, vp, ep, threshold=threshold, leak=leak,
+            reset=reset, partial_update=partial_update,
+            block=(bm, bn), interpret=interp)
+    vo, eo, sp, tc, nnz, ew = outs
+    crop = lambda a: a[:m, :n]
+    return (crop(vo), crop(eo), crop(sp), crop(tc), nnz[:m, 0], ew[:m, 0])
 
 
 # Re-export oracles for convenience

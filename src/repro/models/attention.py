@@ -5,9 +5,16 @@ Decode supports two cache shardings (see DESIGN.md §5):
   * sequence-sharded cache (flash-decoding style) otherwise — softmax
     partials combine through XLA's all-reduce of the sharded reduction.
 The code itself is sharding-agnostic; the launcher picks PartitionSpecs.
+
+Train/prefill self-attention can route through the Pallas flash kernel
+(kernels/flash_attention.py) when ``REPRO_FLASH_ATTENTION=1`` and the
+shape qualifies (128-multiple sequence, no sliding window) — the VMEM
+online-softmax path that collapses the score tensor's HBM round trips.
 """
 from __future__ import annotations
 
+import functools
+import os
 from typing import NamedTuple
 
 import jax
@@ -16,6 +23,70 @@ import jax.numpy as jnp
 from repro.models.common import ArchConfig, Initializer, apply_rope
 
 NEG_INF = -1e30
+
+
+@functools.lru_cache(maxsize=1)
+def _flash_enabled() -> bool:
+    return os.environ.get("REPRO_FLASH_ATTENTION", "0") not in (
+        "0", "false", "False")
+
+
+def _flash_ok(cfg: ArchConfig, s: int) -> bool:
+    return (_flash_enabled() and s % 128 == 0 and s > 128
+            and cfg.sliding_window <= 0)
+
+
+@jax.custom_vjp
+def _flash_core(qh, kh, vh):
+    """(B,H,S,hd) q, (B,KV,S,hd) k/v — the kernel consumes GQA caches
+    directly (its BlockSpec index maps group query heads onto kv rows),
+    so no group copies of K/V are materialized in HBM."""
+    from repro.kernels.flash_attention import flash_attention
+    from repro.kernels.ops import interpret_default
+
+    return flash_attention(qh, kh, vh, causal=True,
+                           interpret=interpret_default())
+
+
+def _flash_core_fwd(qh, kh, vh):
+    return _flash_core(qh, kh, vh), (qh, kh, vh)
+
+
+def _flash_core_bwd(res, g):
+    # pallas_call has no AD rule; the backward is the exact gradient of
+    # the reference SDPA (same math as the kernel's online softmax, to
+    # float tolerance).  It rematerializes the (S, T) scores — O(S^2)
+    # memory on the backward only; a fused flash backward kernel is the
+    # future fix if that becomes the training bottleneck.
+    from repro.kernels.ref import flash_attention_ref
+
+    qh, kh, vh = res
+    grp = qh.shape[1] // kh.shape[1]
+
+    def ref(qh, kh, vh):
+        kb = jnp.repeat(kh, grp, axis=1) if grp > 1 else kh
+        vb = jnp.repeat(vh, grp, axis=1) if grp > 1 else vh
+        return flash_attention_ref(qh, kb, vb, causal=True)
+
+    _, vjp = jax.vjp(ref, qh, kh, vh)
+    return vjp(g.astype(qh.dtype))
+
+
+_flash_core.defvjp(_flash_core_fwd, _flash_core_bwd)
+
+
+def _sdpa_flash(q, k, v):
+    """Causal SDPA through the Pallas flash kernel.
+
+    q (B,S,H,hd), k/v (B,S,kv,hd) -> (B,S,H*hd).  Numerics: online
+    softmax in f32 — matches `_sdpa` to float tolerance, not bit-exactly.
+    Differentiable via a custom VJP (reference-SDPA backward), so the
+    flash route stays usable in training graphs.
+    """
+    b, s, h, hd = q.shape
+    out = _flash_core(q.transpose(0, 2, 1, 3), k.transpose(0, 2, 1, 3),
+                      v.transpose(0, 2, 1, 3))
+    return out.transpose(0, 2, 1, 3).reshape(b, s, h * hd).astype(v.dtype)
 
 
 def init_attention(init: Initializer, cfg: ArchConfig, n_layers: int,
@@ -128,7 +199,9 @@ def attention_train(x, p, cfg: ArchConfig, positions=None):
     if positions is None:
         positions = jnp.arange(s)[None, :]
     q, k, v = _qkv(x, p, cfg, positions)
-    if cfg.attn_chunk and s % cfg.attn_chunk == 0 and s > cfg.attn_chunk:
+    if _flash_ok(cfg, s):
+        out = _sdpa_flash(q, k, v)
+    elif cfg.attn_chunk and s % cfg.attn_chunk == 0 and s > cfg.attn_chunk:
         out = _sdpa_chunked(q, k, v, cfg, cfg.attn_chunk)
     else:
         mask = causal_mask(s, cfg.sliding_window)[None]
@@ -164,7 +237,9 @@ def attention_prefill(x, p, cfg: ArchConfig, cache_len: int):
     b, s, _ = x.shape
     positions = jnp.arange(s)[None, :]
     q, k, v = _qkv(x, p, cfg, positions)
-    if cfg.attn_chunk and s % cfg.attn_chunk == 0 and s > cfg.attn_chunk:
+    if _flash_ok(cfg, s):
+        out = _sdpa_flash(q, k, v)
+    elif cfg.attn_chunk and s % cfg.attn_chunk == 0 and s > cfg.attn_chunk:
         out = _sdpa_chunked(q, k, v, cfg, cfg.attn_chunk)
     else:
         mask = causal_mask(s, cfg.sliding_window)[None]

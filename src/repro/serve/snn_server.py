@@ -2,8 +2,10 @@
 
 The neuromorphic analogue of serve/server.py's LM loop: event-camera
 requests arrive, are grouped into fixed-size batch slots, and each group
-runs as ONE XLA program through `ChipSimulator.run_batch`
-(scan-over-time, vmap-over-batch).  Short groups are padded with
+runs as ONE XLA program through `ChipSimulator.run_batch` — the compiled
+scan/vmap engine or the fused Pallas-kernel engine (`engine="fused"`);
+either engine shards slots across available devices when the batch
+divides the device count.  Short groups are padded with
 all-zero spike trains so every group hits the same compiled (mapping, T,
 batch) executable — no retrace per request count, which is what keeps
 tail latency flat under load.
@@ -37,8 +39,9 @@ class SnnServer:
     """Fixed-slot batching over one compiled chip executable per (T, B)."""
 
     def __init__(self, sim: ChipSimulator, batch_slots: int = 8):
-        if sim.engine != "compiled":
-            raise ValueError("SnnServer requires a compiled-engine simulator")
+        if sim.engine not in ("compiled", "fused"):
+            raise ValueError("SnnServer requires an array-engine simulator "
+                             "(engine='compiled' or 'fused')")
         self.sim = sim
         self.slots = batch_slots
         self.queue: list[SnnRequest] = []

@@ -1,13 +1,18 @@
-"""Differential tests: the batched XLA-compiled engine vs the
-interpretive reference simulator.
+"""Differential tests: the batched array engines (compiled scan/vmap and
+fused Pallas-kernel) vs the interpretive reference simulator.
 
-The compiled engine (core/engine.py) must be a *drop-in* for the
+Each array engine (core/engine.py) must be a *drop-in* for the
 reference loop: spikes bit-identical, SOP/flit/energy accounting within
 1e-6 relative, across dense and conv-shaped networks, single- and
 multi-domain mappings, quantized and fp32 weights, batch 1 and batch 8.
-Engine invariants (batched == stacked, zero input, placement
-permutation) are property-tested via tests/hypothesis_compat.py.
+The fused engine is additionally held to a *stronger* contract vs the
+compiled engine — bit-exact equality of spikes AND accounting (its
+kernel runs the identical float program) — and its ZSPE spike-word skip
+telemetry is checked against a numpy popcount oracle.  Engine invariants
+(batched == stacked, zero input, placement permutation) are
+property-tested via tests/hypothesis_compat.py.
 """
+import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
@@ -24,6 +29,8 @@ STAT_FIELDS = ("nominal_sops", "performed_sops", "spikes_in",
 REPORT_FIELDS = ("energy_pj", "core_energy_pj", "noc_energy_pj",
                  "riscv_energy_pj", "wall_cycles")
 
+ENGINES = ("compiled", "fused")
+
 
 def make_weights(rng, sizes, scale=0.5):
     return [jnp.asarray(rng.normal(0, scale, (sizes[i], sizes[i + 1])),
@@ -36,11 +43,11 @@ def make_trains(rng, batch, timesteps, n_in, density=0.25):
                        jnp.float32)
 
 
-def sim_pair(weights, mapping=None, quant_cfg=None, **kw):
-    """Reference + compiled simulators sharing one mapping."""
+def sim_pair(weights, mapping=None, quant_cfg=None, engine="compiled", **kw):
+    """Reference + array-engine simulators sharing one mapping."""
     ref = ChipSimulator(weights, engine="reference", mapping=mapping,
                         quant_cfg=quant_cfg, **kw)
-    comp = ChipSimulator(weights, engine="compiled", mapping=ref.mapping,
+    comp = ChipSimulator(weights, engine=engine, mapping=ref.mapping,
                          quant_cfg=quant_cfg, **kw)
     return ref, comp
 
@@ -86,54 +93,65 @@ def multi_domain_mapping(sizes):
 # randomized differential cases
 # ---------------------------------------------------------------------------
 
+@pytest.mark.parametrize("engine", ENGINES)
 @pytest.mark.parametrize("batch", [1, 8])
 @pytest.mark.parametrize("seed", [0, 1, 2])
-def test_dense_fp32_matches_reference(seed, batch):
+def test_dense_fp32_matches_reference(seed, batch, engine):
     rng = np.random.default_rng(seed)
     n_hidden = int(rng.integers(32, 128))
     sizes = (int(rng.integers(16, 64)), n_hidden, 10)
     w = make_weights(rng, sizes)
-    ref, comp = sim_pair(w, mapping_strategy="greedy")
+    ref, comp = sim_pair(w, mapping_strategy="greedy", engine=engine)
     assert_equivalent(ref, comp, make_trains(rng, batch, 10, sizes[0]))
 
 
+@pytest.mark.parametrize("engine", ENGINES)
 @pytest.mark.parametrize("batch", [1, 8])
-def test_dense_quantized_matches_reference(batch):
+def test_dense_quantized_matches_reference(batch, engine):
     rng = np.random.default_rng(7)
     sizes = (48, 96, 32, 10)
     w = make_weights(rng, sizes, scale=0.1)
-    ref, comp = sim_pair(w, quant_cfg=CodebookConfig(n_levels=16, bit_width=8))
+    ref, comp = sim_pair(w, quant_cfg=CodebookConfig(n_levels=16, bit_width=8),
+                         engine=engine)
+    if engine == "fused":
+        # the registers are programmed -> every layer must run compressed
+        fe = comp.fused_engine()
+        assert fe.codebook_layers == len(w)
     assert_equivalent(ref, comp, make_trains(rng, batch, 12, sizes[0]))
 
 
+@pytest.mark.parametrize("engine", ENGINES)
 @pytest.mark.parametrize("batch", [1, 8])
-def test_conv_shaped_matches_reference(batch):
+def test_conv_shaped_matches_reference(batch, engine):
     rng = np.random.default_rng(11)
     sizes = conv_shaped_sizes()
     w = make_weights(rng, sizes, scale=0.15)
-    ref, comp = sim_pair(w)
+    ref, comp = sim_pair(w, engine=engine)
     assert_equivalent(ref, comp, make_trains(rng, batch, 6, sizes[0],
                                              density=0.15))
 
 
+@pytest.mark.parametrize("engine", ENGINES)
 @pytest.mark.parametrize("batch", [1, 8])
-def test_multi_domain_matches_reference(batch):
+def test_multi_domain_matches_reference(batch, engine):
     rng = np.random.default_rng(23)
     sizes = (16, 128, 64)
     mapping = multi_domain_mapping(sizes)
     w = make_weights(rng, sizes)
-    ref, comp = sim_pair(w, mapping=mapping)
+    ref, comp = sim_pair(w, mapping=mapping, engine=engine)
     assert ref.interconnect is not None        # level-2 pricing active
     assert_equivalent(ref, comp, make_trains(rng, batch, 8, sizes[0],
                                              density=0.3))
 
 
-def test_baseline_scheme_matches_reference():
+@pytest.mark.parametrize("engine", ENGINES)
+def test_baseline_scheme_matches_reference(engine):
     """No zero-skip / full MP update (the paper's 'traditional' baseline)."""
     rng = np.random.default_rng(3)
     sizes = (32, 64, 10)
     w = make_weights(rng, sizes)
-    ref, comp = sim_pair(w, zero_skip=False, partial_update=False)
+    ref, comp = sim_pair(w, zero_skip=False, partial_update=False,
+                         engine=engine)
     assert_equivalent(ref, comp, make_trains(rng, 2, 8, sizes[0]))
 
 
@@ -142,10 +160,14 @@ def test_run_dispatches_by_engine():
     w = make_weights(rng, (24, 32, 10))
     train = make_trains(rng, 1, 6, 24)[0]
     ref, comp = sim_pair(w)
-    counts_c, rep_c = comp.run(train)          # compiled single-sample path
     counts_r, rep_r = ref.run(train)           # reference path via run()
-    np.testing.assert_array_equal(np.asarray(counts_c), np.asarray(counts_r))
-    assert abs(rep_c.energy_pj - rep_r.energy_pj) <= REL_TOL * rep_r.energy_pj
+    for engine in ENGINES:
+        sim = ChipSimulator(w, engine=engine, mapping=ref.mapping)
+        counts_c, rep_c = sim.run(train)       # array single-sample path
+        np.testing.assert_array_equal(np.asarray(counts_c),
+                                      np.asarray(counts_r))
+        assert (abs(rep_c.energy_pj - rep_r.energy_pj)
+                <= REL_TOL * rep_r.energy_pj)
     with pytest.raises(ValueError):
         ChipSimulator(w, engine="warp-drive")
 
@@ -225,6 +247,145 @@ def test_total_sops_permutation_invariant(seed):
 
 
 # ---------------------------------------------------------------------------
+# fused engine: stronger contracts than the compiled/reference pair
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("quant", [False, True])
+def test_fused_bitexact_vs_compiled(quant):
+    """Fused vs compiled is not a tolerance comparison: with word-aligned
+    layer widths (every n_pre a multiple of 16, so spike packing adds no
+    K padding) the fused kernel runs the identical float program, and
+    spikes AND every accounting field must be exactly equal."""
+    rng = np.random.default_rng(17)
+    sizes = (48, 80, 32, 10)
+    w = make_weights(rng, sizes, scale=0.2)
+    qcfg = CodebookConfig(n_levels=16, bit_width=8) if quant else None
+    comp = ChipSimulator(w, engine="compiled", quant_cfg=qcfg)
+    fus = ChipSimulator(w, engine="fused", mapping=comp.mapping,
+                        quant_cfg=qcfg)
+    trains = make_trains(rng, 4, 10, sizes[0])
+    counts_c, reps_c = comp.run_batch(trains)
+    counts_f, reps_f = fus.run_batch(trains)
+    np.testing.assert_array_equal(np.asarray(counts_f), np.asarray(counts_c))
+    for rc, rf in zip(reps_c, reps_f):
+        for f in STAT_FIELDS:
+            assert getattr(rf.stats, f) == getattr(rc.stats, f), f
+        for f in REPORT_FIELDS:
+            assert getattr(rf, f) == getattr(rc, f), f
+
+
+def test_fused_skip_words_match_popcount_oracle():
+    """The fused engine's ZSPE skip telemetry == an exact numpy popcount:
+    for every (sample, step), the number of all-zero 16-spike words in
+    the layer's input."""
+    from repro.core.zspe import SPIKE_WORD_BITS
+
+    rng = np.random.default_rng(29)
+    n_in, n_out = 70, 12                        # 70 spikes -> 5 words/step
+    w = make_weights(rng, (n_in, n_out))
+    sim = ChipSimulator(w, engine="fused", mapping_strategy="greedy")
+    trains = make_trains(rng, 3, 9, n_in, density=0.05)
+    ys = sim.fused_engine().run_raw(trains)
+    skip = np.asarray(ys["skip_words"])         # (B, T, L=1)
+    assert skip.shape == (3, 9, 1)
+
+    t_np = np.asarray(trains)                   # exact word-level oracle
+    n_words = -(-n_in // SPIKE_WORD_BITS)
+    padded = np.zeros((3, 9, n_words * SPIKE_WORD_BITS), np.float32)
+    padded[:, :, :n_in] = t_np
+    words = padded.reshape(3, 9, n_words, SPIKE_WORD_BITS)
+    expected = (words.sum(-1) == 0).sum(-1)     # empty words per (b, t)
+    assert expected.sum() > 0, "case must exercise the word-skip path"
+    assert expected.sum() < 3 * 9 * n_words, "case must also do work"
+    np.testing.assert_array_equal(skip[:, :, 0], expected)
+
+    # the per-report aggregate is the plain sum of the telemetry
+    _, reps = sim.run_batch(trains)
+    for b, rep in enumerate(reps):
+        assert rep.stats.spike_words_skipped == expected[b].sum()
+
+
+def test_fused_per_core_register_tables_run_compressed():
+    """Deploy-style per-core PTQ: every layer must lower to codebook mode
+    (RegisterTable words consumed in-register) and match the reference."""
+    from repro.core.soc import map_network
+    from repro.deploy import fit_per_core_codebooks
+    from repro.models import snn as SNN
+    from repro.models.snn import SNNConfig
+
+    cfg = SNNConfig(layer_sizes=(64, 48, 10), timesteps=6)
+    params = SNN.init_params(cfg, jax.random.PRNGKey(0))
+    mapping = map_network(list(cfg.layer_sizes), strategy="anneal")
+    pq = fit_per_core_codebooks(params, mapping, CodebookConfig(16, 8))
+
+    ref = ChipSimulator(pq.weights, engine="reference", mapping=mapping,
+                        register_tables=pq.tables)
+    fus = ChipSimulator(pq.weights, engine="fused", mapping=mapping,
+                        register_tables=pq.tables)
+    fe = fus.fused_engine()
+    assert fe.codebook_layers == len(pq.weights)
+    # codebook operands are int8 indexes: materially fewer weight HBM
+    # bytes even at this toy size (the asymptotic >= 4x — f32 vs int8,
+    # level table amortized over large K — is asserted at NMNIST scale
+    # by benchmarks/engine_bench.py)
+    dense_bytes = sum(lw.n_pre * lw.n_post * 4 for lw in fe.fused_weights)
+    fused_w_bytes = sum(
+        lw.idx.size * 1 + lw.cbw.size * 4 for lw in fe.fused_weights)
+    assert dense_bytes / fused_w_bytes >= 1.9
+    rng = np.random.default_rng(5)
+    assert_equivalent(ref, fus, make_trains(rng, 4, 6, 64, density=0.2))
+
+
+def test_fused_shard_map_multi_device():
+    """With >= 2 devices and a divisible batch the fused engine runs the
+    program through shard_map and still matches the reference exactly."""
+    if len(jax.devices()) < 2:
+        pytest.skip("needs XLA_FLAGS=--xla_force_host_platform_device_count=2")
+    rng = np.random.default_rng(31)
+    sizes = (48, 64, 10)
+    w = make_weights(rng, sizes)
+    ref = ChipSimulator(w, engine="reference")
+    fus = ChipSimulator(w, engine="fused", mapping=ref.mapping)
+    trains = make_trains(rng, 4, 8, sizes[0])
+    counts, reps = fus.run_batch(trains)
+    assert fus.fused_engine().last_run_sharded
+    for b in range(4):
+        counts_r, rep_r = ref.run_reference(trains[b])
+        np.testing.assert_array_equal(np.asarray(counts[b]),
+                                      np.asarray(counts_r))
+        assert (abs(reps[b].energy_pj - rep_r.energy_pj)
+                <= REL_TOL * rep_r.energy_pj)
+    # a batch that does not divide the device count falls back cleanly
+    counts3, _ = fus.run_batch(trains[:3])
+    assert not fus.fused_engine().last_run_sharded
+    np.testing.assert_array_equal(np.asarray(counts3),
+                                  np.asarray(counts[:3]))
+
+
+def test_fused_engine_block_selection():
+    """Interpret mode runs one exact tile (the bit-exact config); the
+    real-TPU path tiles to divisors that cap the VMEM weight slab."""
+    from repro.core.engine import _pick_engine_block
+
+    assert _pick_engine_block(32, 2320, 512, interpret=True) is None
+    bm, bn = _pick_engine_block(32, 8192, 8192, interpret=False)
+    assert 32 % bm == 0 and 8192 % bn == 0
+    assert bm <= 8 and 8192 * bn <= 1 << 20        # <= 4 MB f32 slab
+    bm, bn = _pick_engine_block(3, 16, 509, interpret=False)   # prime N
+    assert bm in (1, 3) and 509 % bn == 0
+
+
+def test_fused_rejects_soft_reset():
+    from repro.core.neuron import LIFParams
+
+    rng = np.random.default_rng(2)
+    w = make_weights(rng, (16, 8))
+    sim = ChipSimulator(w, engine="fused", lif=LIFParams(reset_mode="soft"))
+    with pytest.raises(ValueError, match="hard reset"):
+        sim.fused_engine()
+
+
+# ---------------------------------------------------------------------------
 # array-native NoC replay agrees with the interpretive replay
 # ---------------------------------------------------------------------------
 
@@ -258,13 +419,14 @@ def test_flow_table_matches_replay_flows():
 # serving path rides the batched engine
 # ---------------------------------------------------------------------------
 
-def test_snn_server_batches_requests():
+@pytest.mark.parametrize("engine", ENGINES)
+def test_snn_server_batches_requests(engine):
     from repro.serve.snn_server import SnnRequest, SnnServer
 
     rng = np.random.default_rng(0)
     sizes = (32, 64, 10)
     w = make_weights(rng, sizes)
-    sim = ChipSimulator(w, engine="compiled", mapping_strategy="greedy")
+    sim = ChipSimulator(w, engine=engine, mapping_strategy="greedy")
     srv = SnnServer(sim, batch_slots=4)
     events = [np.asarray(rng.random((8, 32)) < 0.3, np.float32)
               for _ in range(6)]
