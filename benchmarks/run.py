@@ -19,7 +19,7 @@ import sys
 
 TRAJECTORY_SCHEMA_VERSION = 1
 
-SECTIONS = ("fig3", "fig5", "compiler", "engine", "deploy", "fig6",
+SECTIONS = ("fig3", "fig5", "noc", "compiler", "engine", "deploy", "fig6",
             "table1", "kernels", "roofline")
 
 
@@ -33,6 +33,8 @@ def trajectory(results: dict) -> dict:
     comp = results.get("compiler") or {}
     t1 = results.get("table1") or {}
     dep = results.get("deploy") or {}
+    noc = results.get("noc") or {}
+    noc_eng = noc.get("engine") or {}
     nm = next((r for r in t1.get("workloads", [])
                if str(r.get("workload", "")).startswith("NMNIST")), {})
     anneal = next((r for r in comp.get("mapping_cost", [])
@@ -57,6 +59,19 @@ def trajectory(results: dict) -> dict:
         "chip.nmnist_model_pj_per_sop": nm.get("model_chip_pj_per_sop"),
         # mapping compiler quality
         "compiler.anneal_improvement": anneal.get("vs_contiguous"),
+        # NoC contention (PR 5): saturation onset of the fullerene fabric,
+        # its margin over the 4x8 mesh under identical uniform traffic,
+        # the engine-level contention share of wall cycles, and the
+        # source-exactness probe (equal spike totals, different source
+        # cores, different NoC energy — 0.0 would mean the accounting
+        # regressed to a split heuristic)
+        "noc.contention_saturation_fullerene":
+            (noc.get("saturation_inject_rate") or {}).get("fullerene"),
+        "noc.contention_saturation_ratio_vs_mesh":
+            noc.get("saturation_ratio_vs_mesh"),
+        "noc.contention_wall_share": noc_eng.get("contention_wall_share"),
+        "noc.source_exact_delta":
+            (noc_eng.get("source_exact_probe") or {}).get("relative_delta"),
         # train->deploy pipeline energy parity
         "deploy.pj_per_sop_regularized": dep.get("regularized_pj_per_sop"),
         "deploy.pj_per_sop_baseline": dep.get("baseline_pj_per_sop"),
@@ -88,9 +103,10 @@ def main(argv=None) -> None:
     root = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
     sys.path.insert(0, os.path.join(root, "src"))
     sys.path.insert(0, root)                    # `python benchmarks/run.py`
-    from benchmarks import (compiler_bench, deploy_bench, engine_bench,
-                            fig3_core_efficiency, fig5_noc, fig6_riscv_power,
-                            kernel_bench, roofline, table1_chip)
+    from benchmarks import (compiler_bench, contention_bench, deploy_bench,
+                            engine_bench, fig3_core_efficiency, fig5_noc,
+                            fig6_riscv_power, kernel_bench, roofline,
+                            table1_chip)
 
     results = {}
     print("name,us_per_call,derived")
@@ -102,6 +118,8 @@ def main(argv=None) -> None:
         results["fig3"] = fig3_core_efficiency.main(emit)
     if "fig5" in only:
         results["fig5"] = fig5_noc.main(emit)
+    if "noc" in only:
+        results["noc"] = contention_bench.main(emit)
     if "compiler" in only:
         results["compiler"] = compiler_bench.main(emit)
     if "engine" in only:

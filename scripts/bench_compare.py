@@ -47,6 +47,16 @@ METRICS: dict[str, tuple[str, bool, str]] = {
     "chip.nmnist_sim_pj_per_sop": ("lower", True, "det"),
     "chip.nmnist_model_pj_per_sop": ("lower", True, "det"),
     "compiler.anneal_improvement": ("higher", True, "det"),
+    # NoC contention (PR 5): deterministic model outputs.  The saturation
+    # onset and its margin over the mesh are the decentralization claim;
+    # the source-exactness delta must stay > 0 (a fall back to split
+    # heuristics would zero it, a -100% change any threshold gates).
+    # The engine's contention share of wall cycles is informational — it
+    # tracks workload shape, not a better/worse axis.
+    "noc.contention_saturation_fullerene": ("higher", True, "det"),
+    "noc.contention_saturation_ratio_vs_mesh": ("higher", True, "det"),
+    "noc.contention_wall_share": ("lower", False, "det"),
+    "noc.source_exact_delta": ("higher", True, "det"),
     "deploy.pj_per_sop_regularized": ("lower", True, "det"),
     "deploy.pj_per_sop_baseline": ("lower", False, "det"),
     "deploy.pj_per_sop_saving": ("higher", False, "det"),

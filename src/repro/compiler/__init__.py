@@ -117,6 +117,7 @@ class CompiledNetwork:
             "cost": round(self.cost, 3),
             "baseline_cost": round(self.baseline_cost, 3),
             "improvement": round(self.improvement, 3),
+            "congestion": round(self.placement.congestion, 3),
             "router_table_entries": self.routed.router_tables.n_entries(),
             "l2_hops_per_step": round(es["l2_hops_per_step"], 3),
             "noc_pj_per_step": round(es["noc_pj_per_step"], 3),
@@ -143,12 +144,17 @@ def _as_network(net: Any) -> NetworkGraph:
 def compile_network(net: Any, chip: ChipSpec | None = None, *,
                     strategy: str = "anneal", seed: int = 0,
                     anneal_iters: int = 4000, spread: bool = True,
+                    congestion_weight: float = 0.0,
                     verify: bool = False) -> CompiledNetwork:
     """Run the full partition -> place -> route -> scale-up pipeline.
 
     strategy: "anneal" (default), "greedy" (constructive only), or
     "contiguous" (the legacy layout, for baselines).  `spread` hands idle
     cores to big layers (lower wall cycles, more placement freedom).
+    `congestion_weight > 0` adds the bottleneck CMRouter's spike occupancy
+    (what the engines charge as `noc_contention_cycles`) to the anneal
+    objective — trade hops for a flatter router-load profile; the
+    resulting `Placement.congestion` records the bottleneck either way.
     """
     spec = chip or ChipSpec()
     graph = _as_network(net)
@@ -160,7 +166,8 @@ def compile_network(net: Any, chip: ChipSpec | None = None, *,
                                  spec.interconnect.level2_premium())
     placement = PL.place(groups, flows, dist, su.core_slots, spec,
                          su.n_domains, strategy=strategy, seed=seed,
-                         anneal_iters=anneal_iters)
+                         anneal_iters=anneal_iters, adjacency=su.adjacency,
+                         congestion_weight=congestion_weight)
     baseline = PL.placement_cost(
         PL.contiguous_place(groups, su.core_slots), flows, dist)
     routed = R.route(groups, placement.assignment, su.adjacency,

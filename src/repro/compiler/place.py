@@ -18,6 +18,13 @@ Strategies:
   * "anneal"     — the greedy seed refined by simulated annealing (random
     swap/relocate moves, Metropolis acceptance, geometric cooling).
     Deterministic given `seed`.
+
+Congestion-aware mode: `congestion_weight > 0` adds the bottleneck
+CMRouter's spike occupancy (the same per-path router-load accounting the
+engines' `noc.FlowTable` replays exactly) to the anneal objective —
+hop-cost alone can pile chatty groups around one router, which the
+engines now surface as `noc_contention_cycles`; the weighted objective
+trades a few hops for a flatter router-load profile.
 """
 from __future__ import annotations
 
@@ -57,12 +64,19 @@ def weighted_distances(adj: np.ndarray, level2_nodes: frozenset[int],
 
 @dataclasses.dataclass
 class Placement:
-    """gid -> physical core node id, plus the cost bookkeeping."""
+    """gid -> physical core node id, plus the cost bookkeeping.
+
+    `congestion` is the bottleneck router's expected spike occupancy per
+    timestep under the group-traffic weights (0.0 when not evaluated);
+    `congestion_weight` records the knob the optimizer ran with.
+    """
 
     assignment: dict[int, int]
     cost: float
     strategy: str
     n_domains: int
+    congestion: float = 0.0
+    congestion_weight: float = 0.0
 
     def core_of(self, gid: int) -> int:
         return self.assignment[gid]
@@ -73,6 +87,66 @@ def placement_cost(assignment: dict[int, int],
                    dist: np.ndarray) -> float:
     return float(sum(w * dist[assignment[s], assignment[d]]
                      for s, d, w in flows))
+
+
+def path_load_table(adj: np.ndarray) -> np.ndarray:
+    """Per-spike router occupancy of every routed (src, dst) pair.
+
+    `load[u, v, r]` counts how often the programmed shortest path u -> v
+    occupies node `r` as a sender — the same sender-charging convention
+    as `noc.FlowTable.router_load`.  Placement flows are *pairwise*, so a
+    source that fans out to k groups charges shared upstream links k
+    times where the engines' broadcast replay (link union per FlowRoute)
+    charges them once: the prediction is an upper bound on the replayed
+    bottleneck, tight for P2P traffic.
+    """
+    from repro.core import noc as NOC
+
+    rt = NOC.RoutingTable(adj)
+    n = adj.shape[0]
+    load = np.zeros((n, n, n), np.float32)
+    for u in range(n):
+        for v in range(n):
+            if u == v:
+                continue
+            for node in rt.path(u, v)[:-1]:
+                load[u, v, node] += 1
+    return load
+
+
+def congestion_cost(assignment: dict[int, int],
+                    flows: list[tuple[int, int, float]],
+                    path_load: np.ndarray) -> float:
+    """Bottleneck-router spike occupancy of the placed pairwise traffic
+    (see `path_load_table` for the broadcast-sharing caveat)."""
+    if not flows:
+        return 0.0
+    load = np.zeros(path_load.shape[0])
+    for s, d, w in flows:
+        load += w * path_load[assignment[s], assignment[d]]
+    return float(load.max())
+
+
+def placed_congestion(assignment: dict[int, int],
+                      flows: list[tuple[int, int, float]],
+                      adj: np.ndarray) -> float:
+    """`congestion_cost` for ONE final placement, without materializing
+    the (n, n, n) `path_load_table` — walks only the F assigned paths.
+    Same sender-charging convention; used to record
+    `Placement.congestion` on every compile cheaply."""
+    from repro.core import noc as NOC
+
+    if not flows:
+        return 0.0
+    rt = NOC.RoutingTable(adj)
+    load = np.zeros(adj.shape[0])
+    for s, d, w in flows:
+        u, v = assignment[s], assignment[d]
+        if u == v:
+            continue
+        for node in rt.path(u, v)[:-1]:
+            load[node] += w
+    return float(load.max())
 
 
 def contiguous_place(groups: list[CoreGroup], core_slots: np.ndarray
@@ -116,15 +190,24 @@ def anneal_place(assignment: dict[int, int],
                  flows: list[tuple[int, int, float]],
                  dist: np.ndarray, core_slots: np.ndarray,
                  seed: int = 0, iters: int = 4000,
-                 t0: float | None = None, t_end: float = 1e-3
-                 ) -> dict[int, int]:
-    """Refine by simulated annealing over swap/relocate moves."""
+                 t0: float | None = None, t_end: float = 1e-3,
+                 path_load: np.ndarray | None = None,
+                 congestion_weight: float = 0.0) -> dict[int, int]:
+    """Refine by simulated annealing over swap/relocate moves.
+
+    With `congestion_weight > 0` (and a `path_load` table) the objective
+    becomes hop-cost + weight * bottleneck-router occupancy; the
+    congestion term is global (a max over routers), so it is re-evaluated
+    per candidate move instead of delta-tracked.
+    """
     rng = np.random.default_rng(seed)
     gids = list(assignment.keys())
     occupied = dict(assignment)
     used = set(occupied.values())
     free = [int(c) for c in core_slots if c not in used]
     cost = placement_cost(occupied, flows, dist)
+    congested = congestion_weight > 0.0 and path_load is not None
+    cong = congestion_cost(occupied, flows, path_load) if congested else 0.0
     # flows grouped per gid for delta evaluation
     touching: dict[int, list[tuple[int, float]]] = {g: [] for g in gids}
     for s, d, w in flows:
@@ -134,8 +217,16 @@ def anneal_place(assignment: dict[int, int],
     def local_cost(gid: int, at: int, asg: dict[int, int]) -> float:
         return sum(w * dist[at, asg[o]] for o, w in touching[gid] if o != gid)
 
+    def cong_delta() -> tuple[float, float]:
+        """(objective delta, new congestion) for the already-applied move."""
+        if not congested:
+            return 0.0, 0.0
+        new_cong = congestion_cost(occupied, flows, path_load)
+        return congestion_weight * (new_cong - cong), new_cong
+
     t0 = t0 if t0 is not None else max(cost / max(len(gids), 1), 1.0)
-    best, best_cost = dict(occupied), cost
+    obj = cost + congestion_weight * cong
+    best, best_obj = dict(occupied), obj
     for it in range(iters):
         temp = t0 * (t_end / t0) ** (it / max(iters - 1, 1))
         if free and rng.random() < 0.3:
@@ -144,11 +235,16 @@ def anneal_place(assignment: dict[int, int],
             c_new = free[int(rng.integers(len(free)))]
             c_old = occupied[g]
             delta = local_cost(g, c_new, occupied) - local_cost(g, c_old, occupied)
+            occupied[g] = c_new
+            cdelta, new_cong = cong_delta()
+            delta += cdelta
             if delta < 0 or rng.random() < np.exp(-delta / max(temp, 1e-12)):
-                occupied[g] = c_new
                 free.remove(c_new)
                 free.append(c_old)
-                cost += delta
+                obj += delta
+                cong = new_cong if congested else cong
+            else:
+                occupied[g] = c_old
         else:
             # swap two groups' cores
             i, j = rng.integers(len(gids)), rng.integers(len(gids))
@@ -160,19 +256,37 @@ def anneal_place(assignment: dict[int, int],
             occupied[ga], occupied[gb] = cb, ca
             after = local_cost(ga, cb, occupied) + local_cost(gb, ca, occupied)
             delta = after - before
+            cdelta, new_cong = cong_delta()
+            delta += cdelta
             if delta < 0 or rng.random() < np.exp(-delta / max(temp, 1e-12)):
-                cost += delta
+                obj += delta
+                cong = new_cong if congested else cong
             else:
                 occupied[ga], occupied[gb] = ca, cb
-        if cost < best_cost:
-            best, best_cost = dict(occupied), cost
+        if obj < best_obj:
+            best, best_obj = dict(occupied), obj
     return best
 
 
 def place(groups: list[CoreGroup], flows: list[tuple[int, int, float]],
           dist: np.ndarray, core_slots: np.ndarray, spec: ChipSpec,
           n_domains: int, strategy: str = "anneal", seed: int = 0,
-          anneal_iters: int = 4000) -> Placement:
+          anneal_iters: int = 4000, adjacency: np.ndarray | None = None,
+          congestion_weight: float = 0.0) -> Placement:
+    """Place core groups.  `congestion_weight > 0` (needs `adjacency`)
+    adds the bottleneck-router occupancy to the anneal objective; the
+    resulting Placement always records its `congestion` when `adjacency`
+    is available, whatever the weight.  The full (n, n, n) path-load
+    table (random lookups for anneal moves) is only built when the
+    weight is active."""
+    if congestion_weight > 0.0 and strategy != "anneal":
+        raise ValueError(
+            f"congestion_weight is an anneal-objective knob; "
+            f"strategy {strategy!r} would silently ignore it")
+    if congestion_weight > 0.0 and adjacency is None:
+        raise ValueError("congestion_weight > 0 needs the adjacency matrix")
+    path_load = (path_load_table(adjacency)
+                 if congestion_weight > 0.0 else None)
     if strategy == "contiguous":
         asg = contiguous_place(groups, core_slots)
     elif strategy == "greedy":
@@ -182,9 +296,14 @@ def place(groups: list[CoreGroup], flows: list[tuple[int, int, float]],
                  contiguous_place(groups, core_slots))
         asg = min(seeds, key=lambda a: placement_cost(a, flows, dist))
         asg = anneal_place(asg, flows, dist, core_slots,
-                           seed=seed, iters=anneal_iters)
+                           seed=seed, iters=anneal_iters,
+                           path_load=path_load,
+                           congestion_weight=congestion_weight)
     else:
         raise ValueError(f"unknown placement strategy {strategy!r}")
     return Placement(assignment=asg,
                      cost=placement_cost(asg, flows, dist),
-                     strategy=strategy, n_domains=n_domains)
+                     strategy=strategy, n_domains=n_domains,
+                     congestion=(placed_congestion(asg, flows, adjacency)
+                                 if adjacency is not None else 0.0),
+                     congestion_weight=congestion_weight)

@@ -9,7 +9,11 @@ the wrong shape for throughput: the chip's dataflow is static per
 Two array engines share one lowering (`lower_tables`) and one
 pricing/report stage (`_EngineBase.run_batch` -> `energy.price_batched`,
 the same function the interpretive reference uses, so the paths cannot
-drift):
+drift).  NoC accounting is source-exact: the scan emits integer per-core
+fired counts (`out @ slice_onehot`) and the host replays them against
+the per-flow `noc.FlowTable` vectors in float64, adding the bottleneck
+router's M/M/1 `contention_cycles` to the wall clock — identical
+arithmetic to the reference loop (DESIGN.md §7).  The engines:
 
 * `CompiledEngine` (PR 2) — the mapping, cycle and NoC models lowered to
   arrays; per layer-step a dense `spikes @ w` against dequantized f32
@@ -72,6 +76,7 @@ class LayerTables:
     n_post: int
     slice_sizes: np.ndarray    # (A,) neurons held by each core slice
     core_index: np.ndarray     # (A,) dense index into the active-core list
+    slice_onehot: np.ndarray   # (n_post, A) f32 neuron -> core-slice indicator
 
 
 @dataclasses.dataclass(frozen=True)
@@ -85,16 +90,28 @@ class EngineTables:
 
 
 def lower_tables(sim: "ChipSimulator") -> EngineTables:
-    """Lower a simulator's mapping + precompiled routes to pure arrays."""
+    """Lower a simulator's mapping + precompiled routes to pure arrays.
+
+    `slice_onehot` segments a layer's neuron axis into its core slices:
+    `out @ slice_onehot` yields integer-exact per-core fired/touched
+    counts inside the scan.  Row `i` of layer `li`'s count vector aligns
+    with row `i` of `flows[li]` (both follow `cores_of_layer` assignment
+    order), which is what makes the per-flow NoC replay source-exact.
+    """
     active = sim.mapping.active_core_ids()
     dense = {cid: i for i, cid in enumerate(active)}
     layers = []
     for li, w in enumerate(sim.weights):
         asn = sim.mapping.cores_of_layer(li + 1)
+        n_post = int(w.shape[1])
+        onehot = np.zeros((n_post, len(asn)), np.float32)
+        for i, a in enumerate(asn):
+            onehot[a.neuron_lo:a.neuron_hi, i] = 1.0
         layers.append(LayerTables(
-            n_pre=int(w.shape[0]), n_post=int(w.shape[1]),
+            n_pre=int(w.shape[0]), n_post=n_post,
             slice_sizes=np.array([a.n_neurons for a in asn], np.float32),
-            core_index=np.array([dense[a.core_id] for a in asn], np.int32)))
+            core_index=np.array([dense[a.core_id] for a in asn], np.int32),
+            slice_onehot=onehot))
     flows: list[NOC.FlowTable | None] = []
     for li in range(len(sim.weights)):
         if li + 1 < len(sim.weights):
@@ -274,13 +291,6 @@ class _EngineBase:
         return shard_map(fn, mesh=mesh, in_specs=(spec,) * n_args,
                          out_specs=spec, check_rep=False)
 
-    def _flow_consts(self):
-        return [
-            None if ft is None else
-            (ft.n_flows, float(ft.hops_total), float(ft.energy_total_pj))
-            for ft in self.tables.flows
-        ]
-
     # -- execution ----------------------------------------------------------
 
     def run_raw(self, spike_trains: jax.Array) -> dict:
@@ -299,7 +309,14 @@ class _EngineBase:
     def run_batch(self, spike_trains: jax.Array
                   ) -> tuple[jax.Array, list["ChipReport"]]:
         """(B, T, n_in) spike trains -> ((B, n_out) counts, per-sample
-        ChipReports)."""
+        ChipReports).
+
+        NoC pricing happens here, on the host, in float64: the scan emits
+        integer-exact per-core fired counts (`fired_core_{li}`) and the
+        per-flow replay (`noc.replay_flows_exact`) + the M/M/1 contention
+        term (`noc.contention_cycles`) run the same f64 arithmetic the
+        interpretive reference does, so the engines cannot drift from it.
+        """
         from repro.core.soc import ChipReport, StepStats
 
         sim = self.sim
@@ -314,14 +331,30 @@ class _EngineBase:
         spikes_in = nnz.sum(axis=(1, 2))
         performed = (nnz * n_posts).sum(axis=(1, 2))
         neurons_touched = touched.sum(axis=(1, 2))
-        wall = np.asarray(ys["wall"], np.float64).sum(axis=1)
-        noc_hops = np.asarray(ys["noc_hops"], np.float64).sum(axis=1)
-        noc_pj = np.asarray(ys["noc_pj"], np.float64).sum(axis=1)
-        routed = np.asarray(ys["routed"], np.float64).sum(axis=1)
+        core_wall = np.asarray(ys["wall"], np.float64)   # (B, T) core-only
         skipped_words = (np.asarray(ys["skip_words"], np.float64)
                          .sum(axis=(1, 2)) if "skip_words" in ys
                          else np.zeros(B))
         nominal = float(tbl.nominal_sops_per_step) * T
+
+        # exact per-flow NoC replay: counts are integers, pricing is f64
+        noc_hops = np.zeros(B)
+        noc_pj = np.zeros(B)
+        routed = np.zeros(B)
+        load = np.zeros((B, T, sim.adj.shape[0]))
+        for li, ft in enumerate(tbl.flows):
+            if ft is None:
+                continue
+            fired_core = np.asarray(ys[f"fired_core_{li}"], np.float64)
+            h, e, ld = NOC.replay_flows_exact(ft, fired_core)  # (B, T, ...)
+            noc_hops += h.sum(axis=1)
+            noc_pj += e.sum(axis=1)
+            load += ld
+            routed += fired_core.sum(axis=(1, 2))
+        contention = NOC.contention_cycles(
+            load.max(axis=2), core_wall, sim.router)     # (B, T)
+        wall = (core_wall + contention).sum(axis=1)
+        noc_contention = contention.sum(axis=1)
 
         priced = E.price_batched(
             sim.core_model, sim.riscv,
@@ -340,6 +373,7 @@ class _EngineBase:
                 neurons_touched=float(neurons_touched[b]),
                 noc_hops=float(noc_hops[b]),
                 noc_energy_pj=float(noc_pj[b]),
+                noc_contention_cycles=float(noc_contention[b]),
                 spike_words_skipped=float(skipped_words[b]),
             )
             reports.append(ChipReport(
@@ -377,21 +411,20 @@ class CompiledEngine(_EngineBase):
         cyc = sim.cycle_model
         n_active = tbl.n_active_cores
         layer_consts = [
-            (lt, jnp.asarray(lt.slice_sizes), jnp.asarray(lt.core_index))
+            (lt, jnp.asarray(lt.slice_sizes), jnp.asarray(lt.core_index),
+             jnp.asarray(lt.slice_onehot))
             for lt in tbl.layers
         ]
-        flow_consts = self._flow_consts()
+        has_flow = [ft is not None for ft in tbl.flows]
 
         def step(states, spikes_t):
             spikes = spikes_t
             wall = jnp.zeros((n_active,), jnp.float32)
             nnzs, toucheds, fireds = [], [], []
-            noc_hops = jnp.float32(0.0)
-            noc_pj = jnp.float32(0.0)
-            routed = jnp.float32(0.0)
+            fired_cores = {}
             new_states = []
             for li, w in enumerate(weights):
-                lt, slices, core_idx = layer_consts[li]
+                lt, slices, core_idx, onehot = layer_consts[li]
                 nnz = jnp.sum(spikes != 0).astype(jnp.float32)
                 current = spikes @ w
                 st, out, touched = lif_step(
@@ -399,22 +432,20 @@ class CompiledEngine(_EngineBase):
                     touched=touch_mask(spikes, nonzero_w[li]))
                 new_states.append(st)
                 tsum = jnp.sum(touched).astype(jnp.float32)
-                core_touched = tsum * slices / max(lt.n_post, 1)
+                # integer-exact per-core-slice touched counts: the cycle
+                # model ceils them, and exact ints cannot straddle a ceil
+                # boundary between f32 (here) and f64 (reference)
+                core_touched = touched.astype(jnp.float32) @ onehot
                 core_cyc = cyc.timestep_cycles_array(
                     lt.n_pre, slices, nnz, core_touched,
                     sim.zero_skip, sim.partial_update)
                 wall = wall + jax.ops.segment_sum(
                     core_cyc, core_idx, num_segments=n_active)
                 fired = jnp.sum(out).astype(jnp.float32)
-                if flow_consts[li] is not None:
-                    n_flows, hops_tot, pj_tot = flow_consts[li]
-                    per_src = jnp.maximum(
-                        1, fired.astype(jnp.int32) // max(n_flows, 1)
-                    ).astype(jnp.float32)
-                    live = (fired > 0).astype(jnp.float32)
-                    noc_hops = noc_hops + live * per_src * hops_tot
-                    noc_pj = noc_pj + live * per_src * pj_tot
-                    routed = routed + live * fired
+                if has_flow[li]:
+                    # per-source-core fired counts, row-aligned with the
+                    # layer's FlowTable; priced exactly on the host
+                    fired_cores[f"fired_core_{li}"] = out @ onehot
                 nnzs.append(nnz)
                 toucheds.append(tsum)
                 fireds.append(fired)
@@ -424,10 +455,8 @@ class CompiledEngine(_EngineBase):
                 "touched": jnp.stack(toucheds),
                 "fired": jnp.stack(fireds),
                 "wall": jnp.max(wall),
-                "noc_hops": noc_hops,
-                "noc_pj": noc_pj,
-                "routed": routed,
                 "out": spikes,
+                **fired_cores,
             }
             return tuple(new_states), ys
 
@@ -501,10 +530,10 @@ class FusedEngine(_EngineBase):
         fused_w = self.fused_weights
         layer_consts = [
             (lt, jnp.asarray(lt.slice_sizes)[None, :],
-             jnp.asarray(lt.core_index))
+             jnp.asarray(lt.core_index), jnp.asarray(lt.slice_onehot))
             for lt in tbl.layers
         ]
-        flow_consts = self._flow_consts()
+        has_flow = [ft is not None for ft in tbl.flows]
         lif_kw = dict(threshold=float(lif.threshold), leak=float(lif.leak),
                       reset=float(lif.reset),
                       partial_update=bool(lif.partial_update))
@@ -531,13 +560,11 @@ class FusedEngine(_EngineBase):
             B = packed.shape[0]
             wall = jnp.zeros((B, n_active), jnp.float32)
             nnzs, toucheds, fireds, skips = [], [], [], []
-            noc_hops = jnp.zeros((B,), jnp.float32)
-            noc_pj = jnp.zeros((B,), jnp.float32)
-            routed = jnp.zeros((B,), jnp.float32)
+            fired_cores = {}
             new_states = []
             out = None
             for li, lw in enumerate(fused_w):
-                lt, slices, core_idx = layer_consts[li]
+                lt, slices, core_idx, onehot = layer_consts[li]
                 vo, eo, out, tc, nnz_rows, ew = layer_apply(
                     li, packed, states[li])
                 new_states.append(LIFState(v=vo, elapsed=eo))
@@ -545,22 +572,16 @@ class FusedEngine(_EngineBase):
                 ew = ew[:, 0]
                 tsum = jnp.sum(tc, axis=-1).astype(jnp.float32)
                 fired = jnp.sum(out, axis=-1)                  # (B,)
-                core_touched = tsum[:, None] * slices / max(lt.n_post, 1)
+                # exact per-slice touched counts (tc is the 0/1 mask)
+                core_touched = tc.astype(jnp.float32) @ onehot  # (B, A)
                 core_cyc = cyc.timestep_cycles_array(
                     lt.n_pre, slices, nnz[:, None], core_touched,
                     sim.zero_skip, sim.partial_update)         # (B, A)
                 wall = wall + jax.vmap(
                     lambda c: jax.ops.segment_sum(
                         c, core_idx, num_segments=n_active))(core_cyc)
-                if flow_consts[li] is not None:
-                    n_flows, hops_tot, pj_tot = flow_consts[li]
-                    per_src = jnp.maximum(
-                        1, fired.astype(jnp.int32) // max(n_flows, 1)
-                    ).astype(jnp.float32)
-                    live = (fired > 0).astype(jnp.float32)
-                    noc_hops = noc_hops + live * per_src * hops_tot
-                    noc_pj = noc_pj + live * per_src * pj_tot
-                    routed = routed + live * fired
+                if has_flow[li]:
+                    fired_cores[f"fired_core_{li}"] = out @ onehot
                 nnzs.append(nnz)
                 toucheds.append(tsum)
                 fireds.append(fired)
@@ -572,10 +593,8 @@ class FusedEngine(_EngineBase):
                 "fired": jnp.stack(fireds, axis=-1),
                 "skip_words": jnp.stack(skips, axis=-1),
                 "wall": jnp.max(wall, axis=-1),                # (B,)
-                "noc_hops": noc_hops,
-                "noc_pj": noc_pj,
-                "routed": routed,
                 "out": out,                                    # (B, n_out)
+                **fired_cores,
             }
             return tuple(new_states), ys
 

@@ -276,6 +276,7 @@ class TrafficReport:
     energy_pj: float
     cycles: float
     mode_counts: dict
+    router_load: np.ndarray | None = None   # (n_nodes,) spike occupancy
 
     @property
     def avg_hops(self) -> float:
@@ -388,6 +389,7 @@ def replay_flows(
         energy_pj=energy,
         cycles=cycles,
         mode_counts=modes,
+        router_load=router_load,
     )
 
 
@@ -396,12 +398,16 @@ class FlowTable:
     """Array lowering of a set of compiled `FlowRoute`s.
 
     Everything `replay_flows` derives per call is precomputed into flat
-    numpy arrays so a whole-timestep replay becomes a handful of
-    multiply-adds — cheap on the host and, more importantly, liftable into
-    a traced XLA program (the compiled engine bakes `hops_total` /
-    `energy_total_pj` in as scan constants).  Pricing matches
-    `replay_flows` exactly: per-spike hop counts, P2P/broadcast rates, and
-    level-2 (off-chip) hops via the interconnect model.
+    numpy arrays indexed by flow, so a whole-timestep replay becomes a
+    handful of multiply-adds — cheap on the host and, more importantly,
+    usable from a traced XLA program.  The vectors are *per spike*:
+    pricing a timestep with exact per-source-core fired counts is
+    `fired @ hops` / `fired @ energy_pj` / `fired @ router_load` (see
+    `replay_flows_exact`), which matches `replay_flows` on the same
+    per-flow counts bit-for-bit in f64.  `src_core` records each flow's
+    source core node id, aligning row `i` with the i-th core slice of
+    the firing layer (the engines' per-layer slice tables preserve this
+    order).
     """
 
     n_flows: int
@@ -409,6 +415,7 @@ class FlowTable:
     energy_pj: np.ndarray      # (F,) float64 per-spike energy of each flow
     router_load: np.ndarray    # (F, n_nodes) int64 per-spike router occupancy
     dst_fanout: np.ndarray     # (F,) int64 destinations per flow
+    src_core: np.ndarray       # (F,) int64 source core node id per flow
 
     @property
     def hops_total(self) -> int:
@@ -429,9 +436,11 @@ def compile_flow_table(routes: Sequence[FlowRoute],
     energy = np.zeros(f, np.float64)
     load = np.zeros((f, n_nodes), np.int64)
     fanout = np.zeros(f, np.int64)
+    src = np.zeros(f, np.int64)
     for i, route in enumerate(routes):
         hops[i] = route.hops
         fanout[i] = len(route.dsts)
+        src[i] = route.src
         for u, _v in route.links:
             load[i, u] += 1
         if interconnect is None:
@@ -442,7 +451,54 @@ def compile_flow_table(routes: Sequence[FlowRoute],
             energy[i] = interconnect.flow_pj(
                 route.l1_hops, route.l2_hops, broadcast=route.mode != "p2p")
     return FlowTable(n_flows=f, hops=hops, energy_pj=energy,
-                     router_load=load, dst_fanout=fanout)
+                     router_load=load, dst_fanout=fanout, src_core=src)
+
+
+def replay_flows_exact(table: FlowTable, fired):
+    """Exact per-flow replay: `fired` holds each flow's spike count.
+
+    `fired` is (..., F) — arbitrary leading axes (batch, time) broadcast
+    through.  Returns float64 (hops, energy_pj, router_load) where
+    `router_load` is (..., n_nodes) spike occupancy per router — the
+    input to `contention_cycles`.  Agrees with `replay_flows` on the same
+    [(route, n_spikes)] list to f64 rounding: two firing patterns with
+    equal *total* spikes but different source cores price differently,
+    which the old uniform-split heuristic could not express.
+    """
+    fired = np.asarray(fired, np.float64)
+    hops = fired @ table.hops.astype(np.float64)
+    energy = fired @ table.energy_pj
+    load = fired @ table.router_load.astype(np.float64)
+    return hops, energy, load
+
+
+def contention_cycles(bottleneck_spikes, compute_cycles,
+                      params: RouterParams = RouterParams()):
+    """Router-contention cycles a timestep adds to the wall clock.
+
+    `bottleneck_spikes` is the busiest router's spike occupancy for the
+    step (max over `replay_flows_exact`'s router_load); it drains at the
+    CMRouter's `peak_throughput` spikes/cycle, so the pure serialization
+    cost is service = bottleneck / peak.  The spikes are offered while
+    the cores compute (`compute_cycles`, the step's core critical path),
+    giving a bottleneck utilization over the step interval of
+
+        rho = service / (service + compute_cycles)
+
+    and the M/M/1 waiting factor 1/(1-rho) — the same queueing model
+    `latency_vs_injection` applies per hop — inflates the drain:
+
+        contention = service / (1 - rho) = service + service^2 / window
+
+    Light load (service << window) costs just the serialization; an
+    overloaded bottleneck grows quadratically.  Decentralized topologies
+    with even router load (the fullerene's low degree variance) stay in
+    the light regime at injection rates that saturate a mesh or tree.
+    Broadcasts with arbitrary leading axes; zero spikes cost zero cycles.
+    """
+    service = np.asarray(bottleneck_spikes, np.float64) / params.peak_throughput
+    window = np.maximum(np.asarray(compute_cycles, np.float64), 1e-9)
+    return service + service * service / window
 
 
 def replay_flows_array(table: FlowTable, n_spikes,
@@ -499,29 +555,14 @@ def uniform_random_flows(
 # Contention study: latency vs injection rate (the classic NoC curve)
 # --------------------------------------------------------------------------
 
-def latency_vs_injection(
-    adj: np.ndarray,
-    endpoints: np.ndarray,
-    rates: Sequence[float] = (0.02, 0.05, 0.1, 0.2, 0.3, 0.38),
-    params: RouterParams = RouterParams(),
-    seed: int = 0,
-) -> list[dict]:
-    """Average spike latency under uniform-random traffic as the per-node
-    injection rate rises (spikes/node/cycle).
-
-    Queueing model: each hop's service rate is the router's peak
-    throughput; with utilization rho on the bottleneck router, the mean
-    per-hop wait scales as 1/(1-rho) (M/M/1).  Latency = zero-load hops *
-    (1 + rho/(1-rho)).  Saturation appears as rho -> 1, and decentralized
-    topologies (low degree variance -> even router load) saturate later —
-    the paper's uniformity argument made quantitative.
-    """
-    rng = np.random.default_rng(seed)
-    rt = RoutingTable(adj)
-    n = adj.shape[0]
+def uniform_pair_loads(rt: RoutingTable, endpoints: np.ndarray
+                       ) -> tuple[np.ndarray, float]:
+    """Expected per-router hop occupancy of one uniform-random spike over
+    `endpoints` (all ordered pairs equally likely), plus the zero-load
+    average hop count.  Shared by `latency_vs_injection` and
+    `saturation_injection_rate`."""
+    n = rt.adj.shape[0]
     ep = np.asarray(endpoints)
-    out = []
-    # expected per-router load per injected spike (hop occupancy)
     loads = np.zeros(n)
     hops_total = 0
     n_pairs = 0
@@ -535,7 +576,46 @@ def latency_vs_injection(
             hops_total += len(path) - 1
             n_pairs += 1
     loads /= n_pairs                      # per injected spike
-    zero_load_hops = hops_total / n_pairs
+    return loads, hops_total / n_pairs
+
+
+def saturation_injection_rate(adj: np.ndarray, endpoints,
+                              params: RouterParams = RouterParams()) -> float:
+    """Per-endpoint injection rate (spikes/node/cycle) at which the
+    bottleneck router of uniform-random traffic reaches rho = 1.
+
+    From the `latency_vs_injection` model, rho = loads.max() * lam *
+    n_endpoints / peak_throughput, so saturation onset is the closed form
+    lam* = peak / (loads.max() * n_endpoints).  Decentralized topologies
+    (even router load -> small loads.max()) sustain higher rates — the
+    paper's degree-variance argument as a single number per topology.
+    """
+    rt = RoutingTable(adj)
+    ep = np.asarray(endpoints)
+    loads, _ = uniform_pair_loads(rt, ep)
+    return float(params.peak_throughput / (loads.max() * len(ep)))
+
+
+def latency_vs_injection(
+    adj: np.ndarray,
+    endpoints: np.ndarray,
+    rates: Sequence[float] = (0.02, 0.05, 0.1, 0.2, 0.3, 0.38),
+    params: RouterParams = RouterParams(),
+) -> list[dict]:
+    """Average spike latency under uniform-random traffic as the per-node
+    injection rate rises (spikes/node/cycle).
+
+    Queueing model: each hop's service rate is the router's peak
+    throughput; with utilization rho on the bottleneck router, the mean
+    per-hop wait scales as 1/(1-rho) (M/M/1).  Latency = zero-load hops *
+    (1 + rho/(1-rho)).  Saturation appears as rho -> 1, and decentralized
+    topologies (low degree variance -> even router load) saturate later —
+    the paper's uniformity argument made quantitative.
+    """
+    rt = RoutingTable(adj)
+    ep = np.asarray(endpoints)
+    out = []
+    loads, zero_load_hops = uniform_pair_loads(rt, ep)
 
     for lam in rates:
         # spikes injected per cycle across all endpoints

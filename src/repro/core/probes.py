@@ -1,0 +1,58 @@
+"""Diagnostic probe networks for the NoC accounting model.
+
+`source_exact_probe` builds the canonical source-exactness witness: an
+identity first layer split over several physical cores so the hidden
+firing pattern — and therefore the NoC *source cores* — mirror the input
+spikes exactly.  Firing the slice on the core nearest the output core vs
+the slice on the farthest one moves the same spike count to a different
+source, which must change `noc_energy_pj`/`noc_hops` under per-flow
+accounting (and could not under a uniform-split heuristic).
+
+Shared by tests/test_engine_equiv.py (the regression test) and
+benchmarks/contention_bench.py (the gated `noc.source_exact_delta`
+trajectory metric), so the two cannot drift apart.
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+import numpy as np
+
+
+def source_exact_probe(engine: str = "compiled", n: int = 64,
+                       slice_n: int = 8, seed: int = 13, **kw):
+    """Returns (sim, srcs, dst): a ChipSimulator whose first (identity)
+    layer is split into `n // slice_n` slices on cores `srcs`, feeding a
+    10-neuron output layer on core `dst`."""
+    from repro.core import noc as NOC
+    from repro.core.soc import ChipSimulator, CoreAssignment, Mapping
+
+    rng = np.random.default_rng(seed)
+    eye = jnp.asarray(2.0 * np.eye(n, dtype=np.float32))
+    w2 = jnp.asarray(rng.normal(0, 0.2, (n, 10)), jnp.float32)
+    srcs = [int(c) for c in NOC.core_ids()[:n // slice_n]]
+    dst = int(NOC.core_ids()[n // slice_n])
+    mapping = Mapping(
+        assignments=[CoreAssignment(core_id=c, layer=1,
+                                    neuron_lo=i * slice_n,
+                                    neuron_hi=(i + 1) * slice_n)
+                     for i, c in enumerate(srcs)]
+        + [CoreAssignment(core_id=dst, layer=2, neuron_lo=0, neuron_hi=10)],
+        layer_sizes=[n, n, 10])
+    return ChipSimulator([eye, w2], engine=engine, mapping=mapping, **kw), \
+        srcs, dst
+
+
+def source_exact_patterns(sim, srcs, dst, slice_n: int = 8, steps: int = 6):
+    """(near, far, (near_hops, far_hops)): two (1, steps, n) spike trains
+    with EQUAL total spikes — one fires only the slice whose core sits
+    nearest `dst`, the other only the farthest slice."""
+    n = int(sim.weights[0].shape[0])
+    dist = sim.routing.dist
+    near = int(np.argmin([dist[c, dst] for c in srcs]))
+    far = int(np.argmax([dist[c, dst] for c in srcs]))
+    lo = np.zeros((1, steps, n), np.float32)
+    hi = np.zeros((1, steps, n), np.float32)
+    lo[:, :, near * slice_n:(near + 1) * slice_n] = 1.0
+    hi[:, :, far * slice_n:(far + 1) * slice_n] = 1.0
+    return (jnp.asarray(lo), jnp.asarray(hi),
+            (int(dist[srcs[near], dst]), int(dist[srcs[far], dst])))

@@ -228,6 +228,7 @@ class StepStats:
     core_cycles: float = 0.0         # max over cores (parallel execution)
     noc_hops: float = 0.0
     noc_energy_pj: float = 0.0
+    noc_contention_cycles: float = 0.0  # M/M/1 bottleneck-router wait cycles
     spike_words_skipped: float = 0.0  # ZSPE word-scan skips (fused engine)
 
     @property
@@ -486,6 +487,7 @@ class ChipSimulator:
         for t in range(T):
             spikes = spike_train[t].astype(jnp.float32)
             per_core_cycles: dict[int, float] = {}
+            step_load = np.zeros(self.adj.shape[0], np.float64)
             for li, w in enumerate(self.weights):
                 n_pre, n_post = int(w.shape[0]), int(w.shape[1])
                 nnz = float(jnp.sum(spikes != 0))
@@ -498,29 +500,43 @@ class ChipSimulator:
                 acc.nominal_sops += n_pre * n_post
                 acc.performed_sops += nnz * n_post
                 acc.neurons_touched += float(jnp.sum(touched))
-                # cycles for each core holding a slice of this layer
-                for a in self.mapping.cores_of_layer(li + 1):
-                    core_touched = float(jnp.sum(touched)) * a.n_neurons / max(n_post, 1)
+                touched_np = np.asarray(touched)
+                out_np = np.asarray(out)
+                asn = self.mapping.cores_of_layer(li + 1)
+                # cycles for each core holding a slice of this layer, from
+                # the exact (integer) touched count of the core's slice
+                for a in asn:
+                    core_touched = float(
+                        touched_np[a.neuron_lo:a.neuron_hi].sum())
                     cyc = self.cycle_model.timestep_cycles(
                         n_pre, a.n_neurons, nnz, core_touched,
                         self.zero_skip, self.partial_update)
                     per_core_cycles[a.core_id] = per_core_cycles.get(a.core_id, 0.0) + cyc
-                # NoC: spikes fired by this layer travel to next layer's
-                # cores over the precompiled routes (replay, no BFS here)
-                fired = float(jnp.sum(out))
+                # NoC: the spikes each source core fired travel its own
+                # precompiled flow (replay, no BFS here) — source-exact,
+                # so where a spike fires from changes what it costs
+                fired = float(out_np.sum())
                 if fired > 0 and li + 1 < len(self.weights):
                     routes = self._layer_routes[li + 1]
-                    per_src = max(1, int(fired) // max(len(routes), 1))
+                    fired_per_src = [
+                        int(out_np[a.neuron_lo:a.neuron_hi].sum())
+                        for a in asn]
                     rep = NOC.replay_flows(
-                        [(fr, per_src) for fr in routes], self.router,
+                        list(zip(routes, fired_per_src)), self.router,
                         n_nodes=self.adj.shape[0],
                         interconnect=self.interconnect)
                     acc.noc_hops += rep.total_hops
                     acc.noc_energy_pj += rep.energy_pj
                     acc.spikes_routed += fired
+                    step_load += rep.router_load
                 spikes = out
             out_counts = out_counts + spikes
-            wall += max(per_core_cycles.values()) if per_core_cycles else 1.0
+            core_wall = max(per_core_cycles.values()) if per_core_cycles else 1.0
+            # bottleneck-router contention stalls the timestep barrier
+            cont = float(NOC.contention_cycles(
+                step_load.max(), core_wall, self.router))
+            acc.noc_contention_cycles += cont
+            wall += core_wall + cont
 
         return out_counts, self._report(T, acc, wall)
 

@@ -18,6 +18,7 @@ with S a binary {0,1} matrix.  `zspe_matmul` is the pure-jnp semantics
 from __future__ import annotations
 
 import dataclasses
+import math
 
 import jax
 import jax.numpy as jnp
@@ -131,8 +132,10 @@ class CycleModel:
         g = self.geom
         load = -(-n_pre // g.spike_lanes)
         syn_ops = (nnz if zero_skip else n_pre) * n_post
-        syn = syn_ops / g.spe_lanes
-        upd = touched if partial_update else n_post
+        # integer cycle counts, as documented: the SPEs cannot issue a
+        # fractional cycle, nor can the updater touch 2.5 neurons
+        syn = math.ceil(syn_ops / g.spe_lanes)
+        upd = math.ceil(touched) if partial_update else n_post
         return load, syn, upd
 
     def timestep_cycles(self, n_pre: int, n_post: int, nnz: float,
@@ -148,11 +151,15 @@ class CycleModel:
         """Array-native `stage_cycles`: `n_post`/`touched` may be jnp arrays
         (one entry per core slice of a layer) and `nnz` a traced scalar, so
         the compiled engine can price every core of a layer in one
-        vectorized expression inside `jax.lax.scan`."""
+        vectorized expression inside `jax.lax.scan`.  Applies the same
+        `ceil` as the scalar path; the engines feed it integer-exact
+        per-slice nnz/touched counts, so the two paths cannot disagree
+        at a ceil boundary."""
         g = self.geom
         load = -(-n_pre // g.spike_lanes)
-        syn = (nnz if zero_skip else float(n_pre)) * n_post / g.spe_lanes
-        upd = touched if partial_update else n_post
+        syn = jnp.ceil((nnz if zero_skip else float(n_pre)) * n_post
+                       / g.spe_lanes)
+        upd = jnp.ceil(touched) if partial_update else n_post
         return load, syn, upd
 
     def timestep_cycles_array(self, n_pre: int, n_post, nnz, touched,

@@ -70,8 +70,10 @@ class SnnServer:
     def run(self) -> list[SnnRequest]:
         """Drain the queue.  Requests are grouped by T (each distinct train
         length is its own executable) and served in slot-sized batches.
-        Requests leave the queue only once their group is served, so a
-        failing group leaves everything not yet served still queued."""
+        Requests leave the queue only once their group is served — one
+        rebuild pass per served group (not O(group x queue) `.remove`
+        scans) — so a failing group leaves everything not yet served
+        still queued."""
         by_len: dict[int, list[SnnRequest]] = defaultdict(list)
         for r in self.queue:
             by_len[int(r.events.shape[0])].append(r)
@@ -80,7 +82,7 @@ class SnnServer:
             for i in range(0, len(reqs), self.slots):
                 group = reqs[i:i + self.slots]
                 self._serve_group(group)
-                for r in group:
-                    self.queue.remove(r)
+                served = {id(r) for r in group}
+                self.queue = [r for r in self.queue if id(r) not in served]
                 done.extend(group)
         return done

@@ -147,6 +147,39 @@ def test_scaleup_spans_two_domains_with_l2_pricing():
     assert ic.flow_pj(0, 10) > ic.flow_pj(10, 0)
 
 
+def test_congestion_aware_placement_flattens_router_load():
+    """With `congestion_weight > 0` the anneal objective trades a few
+    hops for a lower bottleneck-router occupancy; every placement records
+    its congestion, and the placement stays injective."""
+    sizes = [256, 512, 512, 256, 10]
+    base = COMP.compile_network(sizes, strategy="anneal", seed=0)
+    aware = COMP.compile_network(sizes, strategy="anneal", seed=0,
+                                 congestion_weight=2.0)
+    assert base.placement.congestion > 0
+    assert aware.placement.congestion < base.placement.congestion
+    assert aware.placement.congestion_weight == 2.0
+    cores = list(aware.placement.assignment.values())
+    assert len(cores) == len(set(cores))
+    # telemetry surfaces in the summary either way
+    assert base.summary()["congestion"] == round(base.placement.congestion, 3)
+
+
+def test_path_load_table_matches_flow_table_router_load():
+    """The placement-side path-load prediction uses the same router-load
+    convention the engines replay (`FlowTable.router_load`): each link
+    charges its sending node."""
+    from repro.compiler.place import path_load_table
+
+    adj = NOC.fullerene_adjacency()
+    load = path_load_table(adj)
+    rt = NOC.RoutingTable(adj)
+    cores = [int(c) for c in NOC.core_ids()]
+    for src, dst in [(cores[0], cores[7]), (cores[3], cores[19])]:
+        fr = NOC.compile_flow(rt, src, [dst])
+        table = NOC.compile_flow_table([fr], n_nodes=adj.shape[0])
+        np.testing.assert_array_equal(load[src, dst], table.router_load[0])
+
+
 def test_single_domain_has_no_l2_hops():
     cn = COMP.compile_network(list(NMNIST_SIZES))
     assert cn.plan.n_domains == 1

@@ -25,7 +25,7 @@ REL_TOL = 1e-6
 
 STAT_FIELDS = ("nominal_sops", "performed_sops", "spikes_in",
                "spikes_routed", "neurons_touched", "noc_hops",
-               "noc_energy_pj")
+               "noc_energy_pj", "noc_contention_cycles")
 REPORT_FIELDS = ("energy_pj", "core_energy_pj", "noc_energy_pj",
                  "riscv_energy_pj", "wall_cycles")
 
@@ -386,6 +386,67 @@ def test_fused_rejects_soft_reset():
 
 
 # ---------------------------------------------------------------------------
+# source-exact NoC accounting (PR 5 tentpole)
+# ---------------------------------------------------------------------------
+
+def test_noc_accounting_is_source_exact():
+    """Two firing patterns with EQUAL total fired spikes but different
+    source cores must price differently — the uniform-split heuristic
+    could not tell them apart.  All three engines must agree per pattern.
+    The probe network is shared with benchmarks/contention_bench.py via
+    repro.core.probes."""
+    from repro.core.probes import source_exact_patterns, source_exact_probe
+
+    sim_c, srcs, dst = source_exact_probe("compiled")
+    sim_r, *_ = source_exact_probe("reference")
+    sim_f, *_ = source_exact_probe("fused")
+    near_tr, far_tr, (near_hops, far_hops) = source_exact_patterns(
+        sim_c, srcs, dst)
+    assert near_hops != far_hops
+    reports = []
+    for tr in (near_tr, far_tr):
+        assert_equivalent(sim_r, sim_c, tr)   # reference vs compiled
+        assert_equivalent(sim_r, sim_f, tr)   # reference vs fused
+        _, [rep_c] = sim_c.run_batch(tr)
+        reports.append(rep_c)
+    assert reports[0].stats.spikes_routed == reports[1].stats.spikes_routed
+    # ...but the near-core pattern is strictly cheaper on the NoC
+    assert reports[0].stats.noc_energy_pj < reports[1].stats.noc_energy_pj
+    assert reports[0].stats.noc_hops < reports[1].stats.noc_hops
+
+
+@pytest.mark.parametrize("engine", ENGINES + ("reference",))
+def test_zero_spike_batches_are_finite(engine):
+    """All-padding (zero) batches through run_batch on every engine: all
+    counters zero, and no NaN/inf anywhere in the derived report fields."""
+    rng = np.random.default_rng(41)
+    w = make_weights(rng, (32, 48, 10))
+    sim = ChipSimulator(w, engine=engine, mapping_strategy="greedy")
+    counts, reps = sim.run_batch(jnp.zeros((3, 5, 32), jnp.float32))
+    assert float(jnp.abs(counts).max()) == 0.0
+    for rep in reps:
+        s = rep.stats
+        assert s.performed_sops == 0.0 and s.spikes_in == 0.0
+        assert s.spikes_routed == 0.0 and s.noc_hops == 0.0
+        assert s.noc_energy_pj == 0.0 and s.noc_contention_cycles == 0.0
+        for val in (rep.pj_per_sop, rep.power_mw, s.sparsity,
+                    rep.energy_pj, rep.wall_cycles, rep.gsops):
+            assert np.isfinite(val), (engine, val)
+        assert s.sparsity == 1.0
+
+
+def test_step_stats_sparsity_zero_nominal():
+    """A default-constructed (or zero-input) StepStats reports sparsity
+    1.0 instead of raising ZeroDivisionError — same convention as
+    energy.price_batched."""
+    from repro.core.soc import StepStats
+
+    assert StepStats().sparsity == 1.0
+    assert StepStats(nominal_sops=0.0, performed_sops=0.0).sparsity == 1.0
+    assert StepStats(nominal_sops=10.0, performed_sops=5.0).sparsity == 0.5
+
+
+# ---------------------------------------------------------------------------
 # array-native NoC replay agrees with the interpretive replay
 # ---------------------------------------------------------------------------
 
@@ -413,6 +474,70 @@ def test_flow_table_matches_replay_flows():
             np.testing.assert_allclose(energy, ref.energy_pj, rtol=1e-12)
             np.testing.assert_allclose(cycles, ref.cycles, rtol=1e-12)
             assert int(table.dst_fanout.sum()) * n_spikes == ref.spikes_delivered
+
+
+def test_replay_flows_exact_matches_replay_flows():
+    """Per-flow exact replay (the engines' path) == the interpretive
+    `replay_flows` on identical per-flow spike counts, including the
+    router-load vector that feeds the contention model."""
+    from repro.core import energy as E
+    from repro.core import noc as NOC
+
+    rng = np.random.default_rng(9)
+    rt = NOC.RoutingTable(NOC.fullerene_adjacency())
+    flows = NOC.uniform_random_flows(rng, 30, bcast_frac=0.3)
+    routes = [NOC.compile_flow(rt, src, dsts) for src, dsts, _ in flows]
+    counts = rng.integers(0, 12, size=len(routes))
+    params = NOC.RouterParams()
+    for interconnect in (None, E.InterconnectEnergyModel.from_router(params)):
+        table = NOC.compile_flow_table(routes, params,
+                                       interconnect=interconnect)
+        np.testing.assert_array_equal(
+            table.src_core, [r.src for r in routes])
+        ref = NOC.replay_flows(
+            [(r, int(c)) for r, c in zip(routes, counts)], params,
+            interconnect=interconnect)
+        hops, energy, load = NOC.replay_flows_exact(table, counts)
+        assert hops == ref.total_hops
+        np.testing.assert_allclose(energy, ref.energy_pj, rtol=1e-12)
+        np.testing.assert_array_equal(load, ref.router_load)
+        # batched leading axes broadcast through
+        h2, e2, l2 = NOC.replay_flows_exact(
+            table, np.stack([counts, 2 * counts]))
+        assert h2.shape == (2,) and l2.shape == (2, NOC.N_NODES)
+        np.testing.assert_allclose(h2[0], hops)
+        np.testing.assert_allclose(e2[1], 2 * energy, rtol=1e-12)
+
+
+def test_contention_cycles_model():
+    """Zero spikes cost zero; light load approaches pure serialization;
+    the term grows superlinearly with the bottleneck load."""
+    from repro.core import noc as NOC
+
+    p = NOC.RouterParams()
+    assert float(NOC.contention_cycles(0.0, 100.0, p)) == 0.0
+    light = float(NOC.contention_cycles(1.0, 1e6, p))
+    np.testing.assert_allclose(light, 1.0 / p.peak_throughput, rtol=1e-3)
+    c1 = float(NOC.contention_cycles(100.0, 50.0, p))
+    c2 = float(NOC.contention_cycles(200.0, 50.0, p))
+    assert c2 > 2 * c1                       # superlinear in load
+    arr = NOC.contention_cycles(np.array([[0.0, 10.0], [20.0, 40.0]]),
+                                np.full((2, 2), 64.0), p)
+    assert arr.shape == (2, 2) and arr[0, 0] == 0.0
+    assert np.all(np.diff(arr.ravel()) > 0)
+
+
+def test_fullerene_saturates_after_mesh():
+    """Acceptance: the fullerene fabric sustains a higher injection rate
+    before bottleneck-router saturation than the 4x8 mesh (and the mesh
+    beats the tree)."""
+    from repro.core import noc as NOC
+
+    full = NOC.saturation_injection_rate(NOC.fullerene_adjacency(),
+                                         NOC.core_ids())
+    mesh = NOC.saturation_injection_rate(NOC.mesh_2d(4, 8), np.arange(32))
+    tree = NOC.saturation_injection_rate(NOC.tree(32, 2), np.arange(32))
+    assert full > mesh > tree
 
 
 # ---------------------------------------------------------------------------
@@ -444,3 +569,32 @@ def test_snn_server_batches_requests(engine):
 
     with pytest.raises(ValueError):
         SnnServer(ChipSimulator(w, engine="reference"), batch_slots=2)
+
+
+def test_snn_server_partial_group_no_padded_telemetry():
+    """A partial group (fewer requests than batch_slots) pads the batch
+    with all-zero trains; the padded slots' telemetry must never reach a
+    real request, and the queue must drain per group in one pass."""
+    from repro.serve.snn_server import SnnRequest, SnnServer
+
+    rng = np.random.default_rng(3)
+    sizes = (24, 40, 10)
+    w = make_weights(rng, sizes)
+    sim = ChipSimulator(w, engine="compiled", mapping_strategy="greedy")
+    srv = SnnServer(sim, batch_slots=4)
+    events = [np.asarray(rng.random((7, 24)) < 0.4, np.float32)
+              for _ in range(5)]                      # group of 4 + 1 partial
+    for uid, ev in enumerate(events):
+        srv.submit(SnnRequest(uid=uid, events=ev))
+    done = srv.run()
+    assert len(done) == 5 and srv.queue == []
+    # what a padded (all-zero) slot would report
+    _, [pad_rep] = sim.run_batch(jnp.zeros((1, 7, 24), jnp.float32))
+    for r in done:
+        counts, rep = sim.run(jnp.asarray(r.events))  # ground truth per uid
+        np.testing.assert_allclose(r.energy_pj, rep.energy_pj, rtol=1e-12)
+        np.testing.assert_allclose(r.pj_per_sop, rep.pj_per_sop, rtol=1e-12)
+        assert r.prediction == int(np.argmax(np.asarray(counts)))
+        # real requests fire spikes here; a padded-slot leak would hand
+        # them the zero-input report instead
+        assert r.energy_pj != pad_rep.energy_pj

@@ -36,6 +36,29 @@ def test_zero_skip_never_loses(s):
         core.pj_per_sop(s, partial_update=False) + 1e-12
 
 
+def test_stage_cycles_are_integer_counts():
+    """The docstring's contract: ceil(nnz * n_post / 4) synapse cycles
+    and integer update cycles, in BOTH the scalar and the array path
+    (they must agree exactly — the engines' 1e-6 differential contract
+    rides on it)."""
+    cm = CycleModel(CoreGeometry())
+    load, syn, upd = cm.stage_cycles(100, 7, nnz=3.0, touched=2.5)
+    assert load == -(-100 // 16)
+    assert syn == -(-3 * 7 // 4) == 6          # ceil(21/4), not 5.25
+    assert upd == 3                            # ceil(2.5)
+    l2, s2, u2 = cm.stage_cycles_array(
+        100, jnp.asarray([7.0]), jnp.asarray(3.0), jnp.asarray([2.5]))
+    assert (int(l2), float(s2[0]), float(u2[0])) == (load, syn, upd)
+    # baseline scheme: every synapse, every neuron
+    _, syn_b, upd_b = cm.stage_cycles(100, 7, 3.0, 2.5,
+                                      zero_skip=False, partial_update=False)
+    assert syn_b == -(-100 * 7 // 4) and upd_b == 7
+    _, s2b, u2b = cm.stage_cycles_array(
+        100, jnp.asarray([7.0]), jnp.asarray(3.0), jnp.asarray([2.5]),
+        zero_skip=False, partial_update=False)
+    assert (float(s2b[0]), float(u2b[0])) == (syn_b, upd_b)
+
+
 @settings(max_examples=20, deadline=None)
 @given(
     n_pre=st.integers(16, 4096),
