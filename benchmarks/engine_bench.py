@@ -24,6 +24,11 @@ import time
 import jax.numpy as jnp
 import numpy as np
 
+try:
+    from benchmarks.timing import measure
+except ImportError:          # script mode: python benchmarks/engine_bench.py
+    from timing import measure
+
 NMNIST_LAYERS = (2312, 512, 10)      # 34x34x2 events -> hidden -> classes
 INPUT_DENSITY = 0.10                 # NMNIST-like event sparsity regime
 SWEEP = (                            # (batch, timesteps, input density)
@@ -60,19 +65,18 @@ def make_trains(batch: int, timesteps: int, density: float, seed: int = 0):
         jnp.float32)
 
 
-def _time_batch(sim, trains, iters: int = 3):
-    """(first call incl. compile, best steady-state call) in seconds."""
-    t0 = time.perf_counter()
-    counts, _ = sim.run_batch(trains)
-    counts.block_until_ready()
-    first = time.perf_counter() - t0
-    best = float("inf")
-    for _ in range(iters):
-        t0 = time.perf_counter()
+def _time_batch(sim, trains, reps: int = 5):
+    """Stabilized timing (warmup + median-of-reps, see benchmarks.timing)
+    plus the last run's (counts, reports)."""
+    state = {}
+
+    def run():
         counts, reports = sim.run_batch(trains)
         counts.block_until_ready()
-        best = min(best, time.perf_counter() - t0)
-    return first, best, counts, reports
+        state["counts"], state["reports"] = counts, reports
+
+    timing = measure(run, warmup=1, reps=reps)
+    return timing, state["counts"], state["reports"]
 
 
 def hbm_bytes_per_step_compiled(sim, batch: int) -> int:
@@ -89,9 +93,12 @@ def main(emit, batch: int = 32, timesteps: int = 20, sweep: bool = True) -> dict
     ref, comp, fused = build_sims()
     trains = make_trains(batch, timesteps, INPUT_DENSITY)
 
-    comp_first, comp_s, counts_c, reports_c = _time_batch(comp, trains)
-    fused_first, fused_s, counts_f, reports_f = _time_batch(fused, trains)
+    comp_t, counts_c, reports_c = _time_batch(comp, trains)
+    fused_t, counts_f, reports_f = _time_batch(fused, trains)
+    comp_first, comp_s = comp_t.first_s, comp_t.median_s
+    fused_first, fused_s = fused_t.first_s, fused_t.median_s
 
+    # the interpretive reference is too slow to repeat: one timed call
     t0 = time.perf_counter()
     counts_r, reports_r = ref.run_batch(trains)
     reference_s = time.perf_counter() - t0
@@ -132,13 +139,16 @@ def main(emit, batch: int = 32, timesteps: int = 20, sweep: bool = True) -> dict
         "timesteps": timesteps,
         "reference_s": round(reference_s, 4),
         "compiled_s": round(comp_s, 4),
+        "compiled_spread": round(comp_t.spread, 3),
         "compile_and_first_s": round(comp_first, 4),
+        "timing_reps": len(comp_t.times_s),
         "speedup": round(speedup, 2),
         "samples_per_s_compiled": round(batch / max(comp_s, 1e-9), 1),
         "samples_per_s_reference": round(batch / max(reference_s, 1e-9), 1),
         "pj_per_sop": round(reports_c[0].pj_per_sop, 4),
         # fused engine (PR 4)
         "fused_s": round(fused_s, 4),
+        "fused_spread": round(fused_t.spread, 3),
         "fused_compile_and_first_s": round(fused_first, 4),
         "samples_per_s_fused": round(batch / max(fused_s, 1e-9), 1),
         "fused_speedup": round(fused_speedup, 2),
@@ -157,8 +167,9 @@ def main(emit, batch: int = 32, timesteps: int = 20, sweep: bool = True) -> dict
         rows = []
         for b, t, dens in SWEEP:
             tr = make_trains(b, t, dens, seed=b + t)
-            _, cs, cc, _ = _time_batch(comp, tr)
-            _, fs, cf, frep = _time_batch(fused, tr)
+            ct, cc, _ = _time_batch(comp, tr, reps=3)
+            ft_, cf, frep = _time_batch(fused, tr, reps=3)
+            cs, fs = ct.median_s, ft_.median_s
             assert np.array_equal(np.asarray(cc), np.asarray(cf)) or \
                 jax.default_backend() != "cpu"
             rows.append({

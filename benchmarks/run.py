@@ -20,7 +20,36 @@ import sys
 TRAJECTORY_SCHEMA_VERSION = 1
 
 SECTIONS = ("fig3", "fig5", "noc", "compiler", "engine", "deploy", "fig6",
-            "table1", "kernels", "roofline")
+            "table1", "kernels", "roofline", "telemetry")
+
+
+def lane() -> str:
+    """Which execution lane produced this trajectory.  Timing metrics are
+    only comparable within a lane: Pallas interpret-mode on CPU and real
+    device execution differ by orders of magnitude, so bench_compare
+    refuses to diff across lanes (see scripts/bench_compare.py)."""
+    from repro.kernels.ops import interpret_default
+
+    return "interpret" if interpret_default() else "device"
+
+
+def provenance() -> dict:
+    """Host/runtime fingerprint recorded next to the trajectory so a
+    regression report can be read against *where* it was measured."""
+    import platform
+
+    import jax
+
+    return {
+        "platform": platform.platform(),
+        "machine": platform.machine(),
+        "python": platform.python_version(),
+        "jax_version": jax.__version__,
+        "backend": jax.default_backend(),
+        "device_kind": jax.devices()[0].device_kind,
+        "n_devices": len(jax.devices()),
+        "cpu_count": os.cpu_count(),
+    }
 
 
 def trajectory(results: dict) -> dict:
@@ -30,6 +59,9 @@ def trajectory(results: dict) -> dict:
     bench_compare treats a missing/None gated metric as a failure.
     """
     eng = results.get("engine") or {}
+    tel = results.get("telemetry") or {}
+    tel_cap = tel.get("capture") or {}
+    tel_srv = tel.get("serve") or {}
     comp = results.get("compiler") or {}
     t1 = results.get("table1") or {}
     dep = results.get("deploy") or {}
@@ -80,8 +112,16 @@ def trajectory(results: dict) -> dict:
         "deploy.claim_reg_beats_baseline": (
             None if "claim_reg_beats_baseline" not in dep
             else float(bool(dep["claim_reg_beats_baseline"]))),
+        # telemetry subsystem (PR 6): trace capture must stay bounded;
+        # serve latency quantiles are informational (ungated) but their
+        # presence is what the CI telemetry-smoke job checks
+        "telemetry.capture_overhead_x": tel_cap.get("capture_overhead_x"),
+        "serve.request_latency_p50_ms": tel_srv.get("p50_ms"),
+        "serve.request_latency_p99_ms": tel_srv.get("p99_ms"),
     }
-    return {"schema_version": TRAJECTORY_SCHEMA_VERSION, "metrics": metrics}
+    return {"schema_version": TRAJECTORY_SCHEMA_VERSION,
+            "lane": lane(), "provenance": provenance(),
+            "metrics": metrics}
 
 
 def main(argv=None) -> None:
@@ -106,7 +146,7 @@ def main(argv=None) -> None:
     from benchmarks import (compiler_bench, contention_bench, deploy_bench,
                             engine_bench, fig3_core_efficiency, fig5_noc,
                             fig6_riscv_power, kernel_bench, roofline,
-                            table1_chip)
+                            table1_chip, telemetry_bench)
 
     results = {}
     print("name,us_per_call,derived")
@@ -135,6 +175,8 @@ def main(argv=None) -> None:
     if "roofline" in only:
         dr = os.environ.get("REPRO_DRYRUN_JSON", "dryrun_results.json")
         results["roofline"] = roofline.main(emit, dr)
+    if "telemetry" in only:
+        results["telemetry"] = telemetry_bench.main(emit)
 
     out = os.path.join(os.path.dirname(__file__), "results.json")
     with open(out, "w") as f:

@@ -1,0 +1,149 @@
+"""Telemetry capture-cost benchmark + serving metrics smoke.
+
+Two claims from DESIGN.md §8 are asserted here (and gated in the bench
+trajectory):
+
+  * **bounded capture**: running the compiled engine with
+    `TraceConfig(enabled=True)` — extra scan outputs for the per-core
+    fired/touched counters and skip words, plus the host-side
+    `build_trace` reconstruction — costs at most `MAX_OVERHEAD_X` (2.0x)
+    of the untraced wall time on the reference workload;
+  * **serving observability**: a sustained-load `SnnServer` run leaves a
+    populated metrics registry whose text exposition carries p50/p95/p99
+    latency quantiles — the scrape surface the CI telemetry-smoke job
+    greps.
+
+Run:  PYTHONPATH=src python benchmarks/telemetry_bench.py [--out t.json]
+"""
+from __future__ import annotations
+
+import argparse
+import json
+
+import jax.numpy as jnp
+import numpy as np
+
+try:
+    from benchmarks.timing import measure
+except ImportError:        # script mode: python benchmarks/telemetry_bench.py
+    from timing import measure
+
+LAYERS = (256, 128, 10)
+BATCH, TIMESTEPS, DENSITY = 8, 16, 0.10
+MAX_OVERHEAD_X = 2.0       # gated: telemetry.capture_overhead_x
+
+
+def _build(engine: str, traced: bool, mapping=None, seed: int = 0):
+    from repro.core.quant import CodebookConfig
+    from repro.core.soc import ChipSimulator
+    from repro.telemetry import TraceConfig
+
+    rng = np.random.default_rng(seed)
+    weights = [jnp.asarray(rng.normal(0, 0.4, (LAYERS[i], LAYERS[i + 1])),
+                           jnp.float32) for i in range(len(LAYERS) - 1)]
+    return ChipSimulator(weights, engine=engine, mapping=mapping,
+                         quant_cfg=CodebookConfig(n_levels=16, bit_width=8),
+                         trace=TraceConfig(enabled=traced))
+
+
+def _timed(sim, trains, reps: int = 5):
+    def run():
+        counts, _ = sim.run_batch(trains)
+        counts.block_until_ready()
+        # a traced run is only "done" once the host-side trace exists
+        sim.last_trace()
+
+    return measure(run, warmup=1, reps=reps)
+
+
+def capture_overhead(emit) -> dict:
+    plain = _build("compiled", traced=False)
+    traced = _build("compiled", traced=True, mapping=plain.mapping)
+    rng = np.random.default_rng(7)
+    trains = jnp.asarray(
+        rng.random((BATCH, TIMESTEPS, LAYERS[0])) < DENSITY, jnp.float32)
+
+    t_plain = _timed(plain, trains)
+    t_traced = _timed(traced, trains)
+    overhead = t_traced.median_s / max(t_plain.median_s, 1e-9)
+    assert overhead <= MAX_OVERHEAD_X, (
+        f"trace capture must stay bounded: {overhead:.2f}x > "
+        f"{MAX_OVERHEAD_X}x (untraced {t_plain.median_s:.4f}s, "
+        f"traced {t_traced.median_s:.4f}s)")
+
+    trace = traced.last_trace()
+    emit("telemetry_capture_traced", t_traced.median_s * 1e6,
+         {"overhead_x": round(overhead, 3)})
+    return {
+        "layer_sizes": list(LAYERS),
+        "batch": BATCH, "timesteps": TIMESTEPS,
+        "untraced_s": round(t_plain.median_s, 4),
+        "untraced_spread": round(t_plain.spread, 3),
+        "traced_s": round(t_traced.median_s, 4),
+        "traced_spread": round(t_traced.spread, 3),
+        "capture_overhead_x": round(overhead, 3),
+        "max_overhead_x": MAX_OVERHEAD_X,
+        "trace_slices": trace.n_slices,
+        "trace_bytes": int(sum(
+            a.nbytes for a in (trace.fired, trace.touched, trace.cycles,
+                               trace.router_load, trace.noc_pj))),
+    }
+
+
+def serve_smoke(emit, n_requests: int = 24) -> dict:
+    from repro.serve.snn_server import SnnRequest, SnnServer
+
+    sim = _build("compiled", traced=False, seed=1)
+    srv = SnnServer(sim, batch_slots=8)
+    rng = np.random.default_rng(11)
+    served = 0
+    for wave in range(3):
+        for uid in range(n_requests // 3):
+            ev = (rng.random((TIMESTEPS, LAYERS[0])) < DENSITY
+                  ).astype(np.float32)
+            srv.submit(SnnRequest(uid=wave * 100 + uid, events=ev))
+        served += len(srv.run())
+    assert served == n_requests
+
+    lat = srv.metrics.histogram("snn_request_latency_ms", "")
+    p50, p99 = lat.percentile(0.5), lat.percentile(0.99)
+    expo = srv.metrics.expose()
+    assert 'snn_request_latency_ms{quantile="0.5"}' in expo
+    assert 'snn_request_latency_ms{quantile="0.99"}' in expo
+    emit("serve_request_latency_p50", p50 * 1e3, {"p99_ms": round(p99, 3)})
+    return {
+        "requests": served,
+        "p50_ms": round(p50, 3),
+        "p95_ms": round(lat.percentile(0.95), 3),
+        "p99_ms": round(p99, 3),
+        "queue_wait_p50_ms": round(
+            srv.metrics.histogram("snn_request_queue_wait_ms", "")
+            .percentile(0.5), 3),
+        "exposition_lines": len(expo.splitlines()),
+    }
+
+
+def main(emit) -> dict:
+    return {"capture": capture_overhead(emit), "serve": serve_smoke(emit)}
+
+
+if __name__ == "__main__":
+    import os
+    import sys
+
+    sys.path.insert(0, os.path.join(os.path.dirname(
+        os.path.dirname(os.path.abspath(__file__))), "src"))
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out", default=None,
+                    help="write the result table to this JSON file")
+    args = ap.parse_args()
+
+    def emit(name, us, derived):
+        print(f"{name},{us:.1f},{json.dumps(derived)}")
+
+    table = main(emit)
+    print(json.dumps(table, indent=1))
+    if args.out:
+        with open(args.out, "w") as f:
+            json.dump(table, f, indent=1)
+        print(f"# -> {args.out}", file=sys.stderr)

@@ -1,0 +1,56 @@
+"""Stabilized wall-clock measurement for the benchmark suite.
+
+Single-shot `time.perf_counter()` deltas on a shared CI runner routinely
+swing 2-3x between runs (frequency scaling, noisy neighbours, XLA
+autotuning on the first call).  Every benchmark that feeds a gated
+timing metric therefore measures through `measure()`:
+
+  * `warmup` untimed calls absorb compilation and cache-warming;
+  * `reps` timed calls, of which the **median** is the headline number —
+    robust to a single descheduled outlier where min is optimistic and
+    mean is contaminated;
+  * the relative `spread` ((max - min) / median) is recorded alongside
+    so a regression report can be read against how noisy the host was.
+
+scripts/bench_compare.py's timing threshold is derived from the spread
+this helper typically leaves behind (see METRICS there).
+"""
+from __future__ import annotations
+
+import dataclasses
+import statistics
+import time
+
+
+@dataclasses.dataclass(frozen=True)
+class TimingResult:
+    first_s: float          # first (untimed-warmup-excluded) call: compile+run
+    median_s: float         # median of the steady-state reps
+    best_s: float           # min of the steady-state reps
+    spread: float           # (max - min) / median over the steady-state reps
+    times_s: tuple          # the raw steady-state samples
+
+
+def measure(fn, warmup: int = 1, reps: int = 5) -> TimingResult:
+    """Time `fn()` with warmup + median-of-reps.  `fn` must block until
+    its work is done (call `.block_until_ready()` inside for jax)."""
+    if warmup < 1 or reps < 1:
+        raise ValueError("measure() needs warmup >= 1 and reps >= 1")
+    t0 = time.perf_counter()
+    fn()
+    first = time.perf_counter() - t0
+    for _ in range(warmup - 1):
+        fn()
+    times = []
+    for _ in range(reps):
+        t0 = time.perf_counter()
+        fn()
+        times.append(time.perf_counter() - t0)
+    med = statistics.median(times)
+    return TimingResult(
+        first_s=first,
+        median_s=med,
+        best_s=min(times),
+        spread=(max(times) - min(times)) / max(med, 1e-12),
+        times_s=tuple(times),
+    )

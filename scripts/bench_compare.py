@@ -18,6 +18,15 @@ comparable across hosts, plus accuracies tracked for visibility.
 
 A gated metric that is missing or null in the candidate fails the run:
 the trajectory schema is append-only.
+
+Trajectories additionally carry a top-level ``lane`` ("interpret" when
+the Pallas kernels run in interpret mode on CPU, "device" on a real
+accelerator).  Timing metrics are meaningless across lanes — interpret
+mode is orders of magnitude slower — so comparing documents from
+different lanes is refused unless --allow-cross-lane is passed (which
+then gates only the deterministic metrics).  Baselines written before
+the lane field existed are treated as "interpret" (every committed
+baseline so far was produced on the CPU interpret lane).
 """
 from __future__ import annotations
 
@@ -64,7 +73,20 @@ METRICS: dict[str, tuple[str, bool, str]] = {
     # 1.0 while the regularized run beats baseline pJ/SOP at equal
     # accuracy; 0.0 is a -100% change, so any threshold gates it
     "deploy.claim_reg_beats_baseline": ("higher", True, "det"),
+    # telemetry (PR 6): capture cost is a same-host traced/untraced wall
+    # ratio — machine-normalized like engine.speedup, gated on the timing
+    # threshold (telemetry_bench additionally hard-asserts <= 2.0x).
+    # Serve latency quantiles are absolute host wall-clock: never gated.
+    "telemetry.capture_overhead_x": ("lower", True, "timing"),
+    "serve.request_latency_p50_ms": ("lower", False, "timing"),
+    "serve.request_latency_p99_ms": ("lower", False, "timing"),
 }
+
+
+def lane_of(doc: dict) -> str:
+    """Trajectory lane; pre-PR-6 baselines (no lane field) were all
+    produced in CPU interpret mode."""
+    return doc.get("lane", "interpret")
 
 
 def load(path: str) -> dict:
@@ -77,16 +99,28 @@ def load(path: str) -> dict:
 
 
 def compare(base: dict, cand: dict, threshold: float,
-            timing_threshold: float = 0.6) -> int:
+            timing_threshold: float = 0.75,
+            allow_cross_lane: bool = False) -> int:
     if base["schema_version"] != cand["schema_version"]:
         print(f"FAIL schema_version {base['schema_version']} -> "
               f"{cand['schema_version']}")
+        return 1
+    cross_lane = lane_of(base) != lane_of(cand)
+    if cross_lane and not allow_cross_lane:
+        print(f"FAIL lane mismatch: baseline is '{lane_of(base)}', "
+              f"candidate is '{lane_of(cand)}' — timing metrics are not "
+              f"comparable across lanes.  Re-run the baseline on this "
+              f"lane, or pass --allow-cross-lane to gate only the "
+              f"deterministic metrics.")
         return 1
     bm, cm = base["metrics"], cand["metrics"]
     failures = 0
     rows = []
     for name, (direction, gated, kind) in METRICS.items():
         b, c = bm.get(name), cm.get(name)
+        if cross_lane and kind == "timing":
+            rows.append((name, b, c, "", "cross-lane (not compared)"))
+            continue
         if c is None:
             status = "MISSING" if gated else "missing"
             if gated:
@@ -143,12 +177,25 @@ def main(argv=None) -> int:
     ap.add_argument("candidate", help="freshly generated trajectory JSON")
     ap.add_argument("--threshold", type=float, default=0.20,
                     help="relative regression that fails CI (default 0.20)")
-    ap.add_argument("--timing-threshold", type=float, default=0.60,
+    # Re-derived for the stabilized timing protocol (PR 6): benchmarks
+    # now report median-of-5 after warmup, with the observed per-host
+    # spread recorded in the table (compiled_spread/fused_spread,
+    # typically 0.1-0.5 on shared CI runners).  A gated metric is a
+    # RATIO of two such medians measured on *different* hosts (baseline
+    # laptop vs CI), so worst-case swing compounds both spreads plus the
+    # core-count shift of the ratio itself; historical baselines moved up
+    # to ~55% host-to-host.  0.75 keeps headroom over that noise floor
+    # while a genuine engine regression (which tanks the ratio several-
+    # fold, i.e. > -80%) still trips the gate.
+    ap.add_argument("--timing-threshold", type=float, default=0.75,
                     help="wider bound for wall-clock-derived metrics, which "
-                         "shift with the host (default 0.60)")
+                         "shift with the host (default 0.75)")
+    ap.add_argument("--allow-cross-lane", action="store_true",
+                    help="permit comparing interpret-lane vs device-lane "
+                         "trajectories; timing metrics are then skipped")
     args = ap.parse_args(argv)
     return compare(load(args.baseline), load(args.candidate), args.threshold,
-                   args.timing_threshold)
+                   args.timing_threshold, args.allow_cross_lane)
 
 
 if __name__ == "__main__":

@@ -266,11 +266,17 @@ class _EngineBase:
     """
 
     def __init__(self, sim: "ChipSimulator", shard: bool = True):
+        from repro.telemetry.trace import TraceConfig
+
         self.sim = sim
         self.tables = lower_tables(sim)
         self.shard = shard
         self.last_run_sharded = False
         self._exec: dict[bool, object] = {}
+        # capture config is fixed at construction (the simulator builds
+        # each engine once); trace-off lowers the exact PR-5 scan outputs
+        self.trace = getattr(sim, "trace", None) or TraceConfig()
+        self.last_trace = None       # ChipTrace of the latest traced run
 
     # -- trace construction (subclass hooks) --------------------------------
 
@@ -356,6 +362,25 @@ class _EngineBase:
         wall = (core_wall + contention).sum(axis=1)
         noc_contention = contention.sum(axis=1)
 
+        if self.trace.enabled:
+            # every derived series (cycles, router load, contention) is
+            # recomputed host-side by build_trace from these integer
+            # counters — one implementation for all three engines
+            from repro.telemetry.trace import build_trace
+
+            L = len(tbl.layers)
+            self.last_trace = build_trace(
+                sim,
+                np.concatenate([np.asarray(ys[f"fired_core_{li}"],
+                                           np.float64)
+                                for li in range(L)], axis=-1),
+                np.concatenate([np.asarray(ys[f"touched_core_{li}"],
+                                           np.float64)
+                                for li in range(L)], axis=-1),
+                nnz,
+                (np.asarray(ys["skip_words"], np.float64)
+                 if self.trace.skip_words and "skip_words" in ys else None))
+
         priced = E.price_batched(
             sim.core_model, sim.riscv,
             nominal_sops=np.full(B, nominal), performed_sops=performed,
@@ -416,16 +441,24 @@ class CompiledEngine(_EngineBase):
             for lt in tbl.layers
         ]
         has_flow = [ft is not None for ft in tbl.flows]
+        traced = self.trace.enabled
+        trace_skips = traced and self.trace.skip_words
 
         def step(states, spikes_t):
             spikes = spikes_t
             wall = jnp.zeros((n_active,), jnp.float32)
-            nnzs, toucheds, fireds = [], [], []
+            nnzs, toucheds, fireds, skips = [], [], [], []
             fired_cores = {}
             new_states = []
             for li, w in enumerate(weights):
                 lt, slices, core_idx, onehot = layer_consts[li]
                 nnz = jnp.sum(spikes != 0).astype(jnp.float32)
+                if trace_skips:
+                    # ZSPE skip telemetry on the layer's input spikes —
+                    # packs exactly like the fused engine's native
+                    # empty-word counter, so the two agree bit-for-bit
+                    skips.append(Z.empty_spike_words(
+                        Z.pack_spike_words(spikes)).astype(jnp.float32))
                 current = spikes @ w
                 st, out, touched = lif_step(
                     states[li], current, lif,
@@ -442,10 +475,12 @@ class CompiledEngine(_EngineBase):
                 wall = wall + jax.ops.segment_sum(
                     core_cyc, core_idx, num_segments=n_active)
                 fired = jnp.sum(out).astype(jnp.float32)
-                if has_flow[li]:
+                if has_flow[li] or traced:
                     # per-source-core fired counts, row-aligned with the
                     # layer's FlowTable; priced exactly on the host
                     fired_cores[f"fired_core_{li}"] = out @ onehot
+                if traced:
+                    fired_cores[f"touched_core_{li}"] = core_touched
                 nnzs.append(nnz)
                 toucheds.append(tsum)
                 fireds.append(fired)
@@ -458,6 +493,8 @@ class CompiledEngine(_EngineBase):
                 "out": spikes,
                 **fired_cores,
             }
+            if trace_skips:
+                ys["skip_words"] = jnp.stack(skips)
             return tuple(new_states), ys
 
         def one_sample(train):
@@ -534,6 +571,7 @@ class FusedEngine(_EngineBase):
             for lt in tbl.layers
         ]
         has_flow = [ft is not None for ft in tbl.flows]
+        traced = self.trace.enabled
         lif_kw = dict(threshold=float(lif.threshold), leak=float(lif.leak),
                       reset=float(lif.reset),
                       partial_update=bool(lif.partial_update))
@@ -580,8 +618,10 @@ class FusedEngine(_EngineBase):
                 wall = wall + jax.vmap(
                     lambda c: jax.ops.segment_sum(
                         c, core_idx, num_segments=n_active))(core_cyc)
-                if has_flow[li]:
+                if has_flow[li] or traced:
                     fired_cores[f"fired_core_{li}"] = out @ onehot
+                if traced:
+                    fired_cores[f"touched_core_{li}"] = core_touched
                 nnzs.append(nnz)
                 toucheds.append(tsum)
                 fireds.append(fired)

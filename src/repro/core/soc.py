@@ -302,9 +302,11 @@ class ChipSimulator:
         engine: str = "compiled",
         register_tables: Sequence[RegisterTable] | None = None,
         lif=None,
+        trace=None,                            # telemetry.TraceConfig
     ):
         from repro.core.neuron import LIFParams  # local import to avoid cycle
         from repro.core import quant as Q
+        from repro.telemetry.trace import TraceConfig
 
         weights = list(weights)
         n_quant = sum(isinstance(w, Q.QuantizedTensor) for w in weights)
@@ -398,6 +400,10 @@ class ChipSimulator:
             raise ValueError(f"engine must be 'compiled', 'fused' or "
                              f"'reference', got {engine!r}")
         self.engine = engine
+        # opt-in per-timestep capture (repro.telemetry): threaded through
+        # every engine; trace-off lowers zero extra scan outputs
+        self.trace = trace or TraceConfig()
+        self._last_trace = None  # reference-engine ChipTrace
         self._compiled = None    # CompiledEngine, built lazily
         self._fused = None       # FusedEngine, built lazily
 
@@ -424,6 +430,15 @@ class ChipSimulator:
             return self.compiled_engine()
         raise ValueError("the reference engine is interpretive — no "
                          "array lowering to return")
+
+    def last_trace(self):
+        """The ChipTrace captured by the most recent run (None when the
+        simulator was built without `trace=TraceConfig(enabled=True)` or
+        has not run yet).  Schema-identical across all three engines."""
+        if self.engine in ("compiled", "fused"):
+            eng = self._fused if self.engine == "fused" else self._compiled
+            return eng.last_trace if eng is not None else None
+        return self._last_trace
 
     def _build_register_tables(self) -> list[RegisterTable]:
         """One programmed RegisterTable per core assignment.  With quantized
@@ -466,11 +481,16 @@ class ChipSimulator:
         single XLA program; the reference engine loops samples."""
         if self.engine in ("compiled", "fused"):
             return self.array_engine().run_batch(spike_trains)
-        outs, reports = [], []
+        outs, reports, traces = [], [], []
         for b in range(int(spike_trains.shape[0])):
             counts, rep = self.run_reference(spike_trains[b])
             outs.append(counts)
             reports.append(rep)
+            if self._last_trace is not None:
+                traces.append(self._last_trace)
+        if traces:
+            from repro.telemetry.trace import ChipTrace
+            self._last_trace = ChipTrace.concat(traces)
         return jnp.stack(outs), reports
 
     def run_reference(self, spike_train: jax.Array
@@ -483,15 +503,34 @@ class ChipSimulator:
         out_counts = jnp.zeros((int(self.weights[-1].shape[1]),), jnp.float32)
         acc = StepStats()
         wall = 0.0
+        traced = self.trace.enabled
+        trace_skips = traced and self.trace.skip_words
+        # raw trace counters (same four tensors the array engines emit);
+        # every derived series comes from telemetry.build_trace
+        rec_fired: list[list[float]] = []
+        rec_touched: list[list[float]] = []
+        rec_nnz: list[list[float]] = []
+        rec_skip: list[list[float]] = []
 
         for t in range(T):
             spikes = spike_train[t].astype(jnp.float32)
             per_core_cycles: dict[int, float] = {}
             step_load = np.zeros(self.adj.shape[0], np.float64)
+            if traced:
+                rec_fired.append([])
+                rec_touched.append([])
+                rec_nnz.append([])
+                rec_skip.append([])
             for li, w in enumerate(self.weights):
                 n_pre, n_post = int(w.shape[0]), int(w.shape[1])
                 nnz = float(jnp.sum(spikes != 0))
                 acc.spikes_in += nnz
+                if traced:
+                    rec_nnz[-1].append(nnz)
+                    if trace_skips:
+                        from repro.core import zspe as Z
+                        rec_skip[-1].append(float(Z.empty_spike_words(
+                            Z.pack_spike_words(spikes))))
                 current = spikes @ w
                 st, out, touched = lif_step(
                     states[li], current, self.lif,
@@ -512,6 +551,10 @@ class ChipSimulator:
                         n_pre, a.n_neurons, nnz, core_touched,
                         self.zero_skip, self.partial_update)
                     per_core_cycles[a.core_id] = per_core_cycles.get(a.core_id, 0.0) + cyc
+                    if traced:
+                        rec_touched[-1].append(core_touched)
+                        rec_fired[-1].append(
+                            float(out_np[a.neuron_lo:a.neuron_hi].sum()))
                 # NoC: the spikes each source core fired travel its own
                 # precompiled flow (replay, no BFS here) — source-exact,
                 # so where a spike fires from changes what it costs
@@ -538,6 +581,15 @@ class ChipSimulator:
             acc.noc_contention_cycles += cont
             wall += core_wall + cont
 
+        if traced:
+            from repro.telemetry.trace import build_trace
+            self._last_trace = build_trace(
+                self,
+                np.asarray(rec_fired, np.float64)[None],      # (1, T, S)
+                np.asarray(rec_touched, np.float64)[None],
+                np.asarray(rec_nnz, np.float64)[None],
+                (np.asarray(rec_skip, np.float64)[None]
+                 if trace_skips else None))
         return out_counts, self._report(T, acc, wall)
 
     def _report(self, steps: int, acc: StepStats, wall: float) -> ChipReport:

@@ -155,6 +155,23 @@ def deploy(cfg: SNNConfig, data, dcfg: DeployConfig | None = None,
     log(f"== chip: acc {chip['accuracy']:.4f}, {chip['pj_per_sop']:.3f} "
         f"pJ/SOP, sparsity {chip['sparsity']:.3f} ==")
 
+    # ---- chip-side profile (telemetry) -------------------------------
+    # re-run a small slice of the eval set traced so the report embeds
+    # the per-layer/per-core hotspot attribution (DESIGN.md §8); the
+    # traced sim shares the mapping + register tables, so the profile is
+    # of exactly the deployed configuration
+    from repro.telemetry import TraceConfig, profile, profile_summary
+
+    prof_batch = eval_sp[:min(16, int(eval_sp.shape[0]))]
+    prof_sim = ChipSimulator(pq.weights, freq_hz=dcfg.chip_freq_hz,
+                             mapping=mapping, register_tables=pq.tables,
+                             lif=cfg.lif, engine=engine,
+                             trace=TraceConfig(enabled=True))
+    prof_sim.run_batch(prof_batch)
+    chip_profile = profile_summary(
+        profile(prof_sim.last_trace(), core_model=prof_sim.core_model,
+                riscv=prof_sim.riscv))
+
     gates = dcfg.gates.check(acc_train, chip["accuracy"], chip["pj_per_sop"])
     return DeployReport(
         layer_sizes=list(cfg.layer_sizes), timesteps=cfg.timesteps,
@@ -174,4 +191,5 @@ def deploy(cfg: SNNConfig, data, dcfg: DeployConfig | None = None,
         noc_energy_pj=chip["noc_energy_pj"], noc_hops=chip["noc_hops"],
         n_cores=len(mapping.active_core_ids()),
         n_register_tables=pq.n_tables,
-        compile_summary=compiled.summary(), gates=gates)
+        compile_summary=compiled.summary(), gates=gates,
+        chip_profile=chip_profile)

@@ -84,6 +84,12 @@ class DeployReport:
     # gates
     gates: dict
 
+    # chip-side profile of the deployed network (telemetry.profile_summary
+    # over a traced eval batch): per-layer/per-core energy+cycle hotspots
+    # embedded so the artifact answers "where do the pJ go" by itself.
+    # Optional + last so pre-PR-6 call sites and serialized reports load.
+    chip_profile: dict | None = None
+
     @property
     def passed(self) -> bool:
         return bool(self.gates.get("passed", False))

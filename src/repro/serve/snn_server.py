@@ -10,19 +10,25 @@ all-zero spike trains so every group hits the same compiled (mapping, T,
 batch) executable — no retrace per request count, which is what keeps
 tail latency flat under load.
 
-Each finished request carries its prediction plus the chip-model energy
-telemetry for that sample (pJ, pJ/SOP), so a deployment can meter the
-simulated edge-energy cost of its traffic.
+Each finished request carries its prediction, the chip-model energy
+telemetry for that sample (pJ, pJ/SOP), and monotonic
+enqueue/dequeue/complete timestamps.  The server maintains a
+`telemetry.MetricsRegistry` (per-request latency/queue-wait histograms
+with p50/p95/p99, queue-depth gauge, energy histograms) whose
+`metrics.expose()` text dump is the scrape surface the CI sustained-load
+smoke gates on.
 """
 from __future__ import annotations
 
 import dataclasses
+import time
 from collections import defaultdict
 
 import jax.numpy as jnp
 import numpy as np
 
 from repro.core.soc import ChipSimulator
+from repro.telemetry.metrics import MetricsRegistry
 
 
 @dataclasses.dataclass
@@ -33,18 +39,42 @@ class SnnRequest:
     spike_counts: np.ndarray | None = None
     energy_pj: float = 0.0
     pj_per_sop: float = 0.0
+    # monotonic lifecycle timestamps (time.monotonic seconds):
+    # t_enqueue <= t_dequeue <= t_complete once served
+    t_enqueue: float | None = None
+    t_dequeue: float | None = None
+    t_complete: float | None = None
 
 
 class SnnServer:
     """Fixed-slot batching over one compiled chip executable per (T, B)."""
 
-    def __init__(self, sim: ChipSimulator, batch_slots: int = 8):
+    def __init__(self, sim: ChipSimulator, batch_slots: int = 8,
+                 registry: MetricsRegistry | None = None):
         if sim.engine not in ("compiled", "fused"):
             raise ValueError("SnnServer requires an array-engine simulator "
                              "(engine='compiled' or 'fused')")
         self.sim = sim
         self.slots = batch_slots
         self.queue: list[SnnRequest] = []
+        self.metrics = registry if registry is not None else MetricsRegistry()
+        m = self.metrics
+        self._m_requests = m.counter(
+            "snn_requests_total", "requests accepted by submit()")
+        self._m_served = m.counter(
+            "snn_requests_served_total", "requests completed by run()")
+        self._m_queue = m.gauge(
+            "snn_queue_depth", "requests currently queued")
+        self._m_latency = m.histogram(
+            "snn_request_latency_ms", "submit -> complete wall time")
+        self._m_wait = m.histogram(
+            "snn_request_queue_wait_ms", "submit -> group dispatch wait")
+        self._m_occupancy = m.histogram(
+            "snn_batch_occupancy", "real requests per served slot group")
+        self._m_pj = m.histogram(
+            "snn_request_energy_pj", "chip-model energy per request")
+        self._m_pj_sop = m.histogram(
+            "snn_request_pj_per_sop", "chip-model pJ/SOP per request")
 
     def submit(self, req: SnnRequest) -> None:
         n_in = int(self.sim.weights[0].shape[0])
@@ -52,20 +82,34 @@ class SnnServer:
             raise ValueError(
                 f"request {req.uid}: events must be (T, {n_in}), "
                 f"got {tuple(req.events.shape)}")
+        req.t_enqueue = time.monotonic()
         self.queue.append(req)
+        self._m_requests.inc()
+        self._m_queue.set(len(self.queue))
 
     def _serve_group(self, group: list[SnnRequest]) -> None:
+        t_dequeue = time.monotonic()
+        for r in group:
+            r.t_dequeue = t_dequeue
         T, n_in = group[0].events.shape
         batch = np.zeros((self.slots, T, n_in), np.float32)
         for i, r in enumerate(group):
             batch[i] = r.events
         counts, reports = self.sim.run_batch(jnp.asarray(batch))
         counts = np.asarray(counts)
+        t_complete = time.monotonic()
+        self._m_occupancy.observe(len(group))
         for i, r in enumerate(group):
             r.spike_counts = counts[i]
             r.prediction = int(counts[i].argmax())
             r.energy_pj = reports[i].energy_pj
             r.pj_per_sop = reports[i].pj_per_sop
+            r.t_complete = t_complete
+            self._m_served.inc()
+            self._m_latency.observe((t_complete - r.t_enqueue) * 1e3)
+            self._m_wait.observe((r.t_dequeue - r.t_enqueue) * 1e3)
+            self._m_pj.observe(r.energy_pj)
+            self._m_pj_sop.observe(r.pj_per_sop)
 
     def run(self) -> list[SnnRequest]:
         """Drain the queue.  Requests are grouped by T (each distinct train
@@ -84,5 +128,6 @@ class SnnServer:
                 self._serve_group(group)
                 served = {id(r) for r in group}
                 self.queue = [r for r in self.queue if id(r) not in served]
+                self._m_queue.set(len(self.queue))
                 done.extend(group)
         return done

@@ -1,0 +1,26 @@
+"""Chip-level telemetry: opt-in engine tracing, hierarchical energy/cycle
+attribution, Perfetto timeline export, and the serving metrics registry.
+
+    from repro.telemetry import TraceConfig
+    sim = ChipSimulator(weights, trace=TraceConfig(enabled=True))
+    sim.run_batch(trains)
+    trace = sim.last_trace()                 # ChipTrace, schema-identical
+                                             # across all three engines
+    prof = aggregate.profile(trace)          # core/router/domain/chip
+    perfetto.export_perfetto(trace, "trace.json")
+
+See DESIGN.md §8 for the counter schema and capture cost model.
+"""
+from repro.telemetry.aggregate import (format_profile, profile,
+                                       profile_summary)
+from repro.telemetry.metrics import (Counter, Gauge, Histogram,
+                                     MetricsRegistry)
+from repro.telemetry.perfetto import export_perfetto, to_perfetto
+from repro.telemetry.trace import ChipTrace, TraceConfig, build_trace
+
+__all__ = [
+    "ChipTrace", "TraceConfig", "build_trace",
+    "profile", "profile_summary", "format_profile",
+    "to_perfetto", "export_perfetto",
+    "Counter", "Gauge", "Histogram", "MetricsRegistry",
+]

@@ -1,0 +1,152 @@
+"""Lightweight serving metrics: counters, gauges, histograms with
+p50/p95/p99, and a registry with a Prometheus-style text exposition.
+
+No external client library (the container pins its dependency set), so
+this is the minimal self-contained subset the serve tier needs:
+
+    reg = MetricsRegistry()
+    lat = reg.histogram("snn_request_latency_ms", "end-to-end latency")
+    lat.observe(1.7)
+    print(reg.expose())          # text format, scrape-friendly
+
+Histograms keep a bounded sample window (`max_samples`, default 8192,
+oldest evicted first) and compute nearest-rank percentiles over it —
+exact for the serving smokes this instruments, bounded-memory under
+sustained load.  Everything is process-local and synchronous, matching
+the single-threaded `SnnServer.run` drain loop.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from collections import deque
+
+
+def _fmt(v: float) -> str:
+    return f"{v:.6g}"
+
+
+@dataclasses.dataclass
+class Counter:
+    name: str
+    help: str = ""
+    value: float = 0.0
+
+    def inc(self, n: float = 1.0) -> None:
+        if n < 0:
+            raise ValueError(f"{self.name}: counters only go up (inc {n})")
+        self.value += n
+
+    def expose(self) -> list[str]:
+        return [f"# HELP {self.name} {self.help}",
+                f"# TYPE {self.name} counter",
+                f"{self.name} {_fmt(self.value)}"]
+
+
+@dataclasses.dataclass
+class Gauge:
+    name: str
+    help: str = ""
+    value: float = 0.0
+
+    def set(self, v: float) -> None:
+        self.value = float(v)
+
+    def inc(self, n: float = 1.0) -> None:
+        self.value += n
+
+    def dec(self, n: float = 1.0) -> None:
+        self.value -= n
+
+    def expose(self) -> list[str]:
+        return [f"# HELP {self.name} {self.help}",
+                f"# TYPE {self.name} gauge",
+                f"{self.name} {_fmt(self.value)}"]
+
+
+class Histogram:
+    """Sample-window histogram exposed as a summary (quantiles + sum/count)."""
+
+    QUANTILES = (0.5, 0.95, 0.99)
+
+    def __init__(self, name: str, help: str = "", max_samples: int = 8192):
+        self.name = name
+        self.help = help
+        self.samples: deque[float] = deque(maxlen=max_samples)
+        self.count = 0
+        self.sum = 0.0
+
+    def observe(self, v: float) -> None:
+        v = float(v)
+        self.samples.append(v)
+        self.count += 1
+        self.sum += v
+
+    def percentile(self, q: float) -> float | None:
+        """Nearest-rank percentile over the retained window; None if empty."""
+        if not self.samples:
+            return None
+        s = sorted(self.samples)
+        rank = math.ceil(q * len(s))               # nearest-rank definition
+        return s[min(len(s) - 1, max(0, rank - 1))]
+
+    def expose(self) -> list[str]:
+        lines = [f"# HELP {self.name} {self.help}",
+                 f"# TYPE {self.name} summary"]
+        for q in self.QUANTILES:
+            p = self.percentile(q)
+            if p is not None:
+                lines.append(f'{self.name}{{quantile="{q}"}} {_fmt(p)}')
+        lines += [f"{self.name}_sum {_fmt(self.sum)}",
+                  f"{self.name}_count {self.count}"]
+        return lines
+
+
+class MetricsRegistry:
+    """Name -> metric map with get-or-create accessors and text dump."""
+
+    def __init__(self):
+        self._metrics: dict[str, object] = {}
+
+    def _get(self, name: str, cls, *args, **kw):
+        m = self._metrics.get(name)
+        if m is None:
+            m = cls(name, *args, **kw)
+            self._metrics[name] = m
+        elif not isinstance(m, cls):
+            raise TypeError(f"metric {name!r} already registered as "
+                            f"{type(m).__name__}, not {cls.__name__}")
+        return m
+
+    def counter(self, name: str, help: str = "") -> Counter:
+        return self._get(name, Counter, help)
+
+    def gauge(self, name: str, help: str = "") -> Gauge:
+        return self._get(name, Gauge, help)
+
+    def histogram(self, name: str, help: str = "",
+                  max_samples: int = 8192) -> Histogram:
+        return self._get(name, Histogram, help, max_samples)
+
+    def get(self, name: str):
+        return self._metrics.get(name)
+
+    def expose(self) -> str:
+        """Prometheus-style text exposition of every registered metric."""
+        lines: list[str] = []
+        for name in sorted(self._metrics):
+            lines.extend(self._metrics[name].expose())
+        return "\n".join(lines) + ("\n" if lines else "")
+
+    def to_dict(self) -> dict:
+        out: dict[str, object] = {}
+        for name, m in self._metrics.items():
+            if isinstance(m, Histogram):
+                out[name] = {
+                    "count": m.count, "sum": m.sum,
+                    **{f"p{int(q * 100)}": m.percentile(q)
+                       for q in m.QUANTILES},
+                }
+            else:
+                out[name] = m.value
+        return out

@@ -1,0 +1,217 @@
+"""Telemetry subsystem tests (DESIGN.md §8).
+
+The trace counters are a *differential surface* like the spike counts:
+every engine fills the same `ChipTrace` schema, so reference vs compiled
+must agree to 1e-6 and fused vs compiled bit-exactly on the witness net.
+Capture must also be zero-cost when disabled — the compiled scan lowers
+the same number of outputs as before the telemetry PR — and the Perfetto
+export must be valid JSON with per-track monotonic timestamps.
+"""
+import json
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.probes import source_exact_probe
+from repro.core.soc import ChipSimulator
+from repro.telemetry import (ChipTrace, MetricsRegistry, TraceConfig,
+                             profile, to_perfetto)
+
+ARRAY_FIELDS = ("fired", "touched", "nnz", "skip_words", "cycles",
+                "core_cycles", "core_wall", "router_load",
+                "contention_cycles", "noc_hops", "noc_pj")
+
+
+def witness_trains(n_in, batch=2, steps=6, density=0.25, seed=3):
+    rng = np.random.default_rng(seed)
+    return jnp.asarray(rng.random((batch, steps, n_in)) < density,
+                       jnp.float32)
+
+
+@pytest.fixture(scope="module")
+def probe_traces():
+    """One traced run of the witness net per engine, shared mapping."""
+    sims = {}
+    ref, _, _ = source_exact_probe(engine="reference",
+                                   trace=TraceConfig(enabled=True))
+    sims["reference"] = ref
+    for engine in ("compiled", "fused"):
+        sim, _, _ = source_exact_probe(engine=engine,
+                                       trace=TraceConfig(enabled=True))
+        sims[engine] = sim
+    trains = witness_trains(int(ref.weights[0].shape[0]))
+    out = {}
+    for name, sim in sims.items():
+        counts, reports = sim.run_batch(trains)
+        out[name] = (sim, sim.last_trace(), np.asarray(counts), reports)
+        assert isinstance(out[name][1], ChipTrace)
+    return out
+
+
+def test_counter_parity_reference_vs_compiled(probe_traces):
+    _, t_ref, counts_ref, _ = probe_traces["reference"]
+    _, t_comp, counts_comp, _ = probe_traces["compiled"]
+    np.testing.assert_array_equal(counts_ref, counts_comp)
+    for f in ARRAY_FIELDS:
+        a, b = getattr(t_ref, f), getattr(t_comp, f)
+        assert (a is None) == (b is None), f
+        if a is not None:
+            np.testing.assert_allclose(a, b, rtol=1e-6, atol=1e-9,
+                                       err_msg=f"trace field {f}")
+
+
+def test_counter_parity_fused_vs_compiled_exact(probe_traces):
+    _, t_fused, counts_fused, _ = probe_traces["fused"]
+    _, t_comp, counts_comp, _ = probe_traces["compiled"]
+    np.testing.assert_array_equal(counts_fused, counts_comp)
+    for f in ARRAY_FIELDS:
+        a, b = getattr(t_fused, f), getattr(t_comp, f)
+        assert (a is None) == (b is None), f
+        if a is not None:
+            np.testing.assert_array_equal(a, b, err_msg=f"trace field {f}")
+
+
+def test_trace_wall_matches_reports(probe_traces):
+    for name, (sim, trace, _, reports) in probe_traces.items():
+        walls = trace.wall_cycles()
+        for b, rep in enumerate(reports):
+            assert walls[b] == pytest.approx(rep.wall_cycles, rel=1e-9), name
+
+
+def test_profile_attribution_sums_match_reports(probe_traces):
+    sim, trace, _, reports = probe_traces["compiled"]
+    prof = profile(trace, core_model=sim.core_model, riscv=sim.riscv)
+    chip = prof["chip"]
+    assert chip["core_pj"] == pytest.approx(
+        sum(r.core_energy_pj for r in reports), rel=1e-9)
+    assert chip["noc_pj"] == pytest.approx(
+        sum(r.noc_energy_pj for r in reports), rel=1e-9)
+    assert chip["riscv_pj"] == pytest.approx(
+        sum(r.riscv_energy_pj for r in reports), rel=1e-9)
+    assert chip["total_pj"] == pytest.approx(
+        sum(r.energy_pj for r in reports), rel=1e-9)
+    # per-layer rows partition the core energy exactly
+    assert sum(l["core_pj"] for l in prof["layers"]) == pytest.approx(
+        chip["core_pj"], rel=1e-9)
+
+
+def test_trace_off_no_extra_scan_outputs():
+    """Disabled capture is free: the compiled scan lowers exactly the
+    PR-5 output set — {nnz, touched, fired, wall, out} + one fired_core
+    per routed flow — with no counter outputs added."""
+    sim, _, _ = source_exact_probe(engine="compiled")
+    eng = sim.compiled_engine()
+    n_flows = sum(ft is not None for ft in eng.tables.flows)
+    n_in = int(sim.weights[0].shape[0])
+    x = jnp.zeros((2, 3, n_in), jnp.float32)
+    untraced_out = len(jax.make_jaxpr(eng._build_run())(x).out_avals)
+    assert untraced_out == 5 + n_flows
+
+    t_sim, _, _ = source_exact_probe(engine="compiled",
+                                     trace=TraceConfig(enabled=True))
+    t_eng = t_sim.compiled_engine()
+    traced_out = len(jax.make_jaxpr(t_eng._build_run())(x).out_avals)
+    L = len(eng.tables.layers)
+    # traced adds: fired_core for every non-flow layer, touched_core for
+    # every layer, and the stacked skip_words tensor
+    assert traced_out == untraced_out + (L - n_flows) + L + 1
+
+
+def test_untraced_last_trace_is_none():
+    for engine in ("reference", "compiled", "fused"):
+        sim, _, _ = source_exact_probe(engine=engine)
+        n_in = int(sim.weights[0].shape[0])
+        sim.run_batch(witness_trains(n_in, batch=1, steps=2))
+        assert sim.last_trace() is None, engine
+
+
+def test_perfetto_round_trip_and_monotonic(probe_traces):
+    _, trace, _, _ = probe_traces["compiled"]
+    doc = json.loads(json.dumps(to_perfetto(trace)))
+    events = doc["traceEvents"]
+    assert events, "empty perfetto export"
+    by_track = {}
+    for ev in events:
+        assert ev["ph"] in ("X", "M", "C")
+        if ev["ph"] == "M":
+            continue
+        assert ev["ts"] >= 0
+        by_track.setdefault((ev["pid"], ev["tid"]), []).append(ev)
+    for track, evs in by_track.items():
+        last = -1.0
+        for ev in evs:        # emission order must be monotonic per track
+            assert ev["ts"] >= last - 1e-9, (track, ev)
+            last = ev["ts"]
+            if ev["ph"] == "X":
+                assert ev["dur"] >= 0
+    # every active core surfaced as a named thread
+    names = {ev["args"]["name"] for ev in events
+             if ev["ph"] == "M" and ev["name"] == "thread_name"}
+    assert any(n.startswith("core") for n in names)
+
+
+def test_metrics_registry_percentiles_and_exposition():
+    reg = MetricsRegistry()
+    h = reg.histogram("lat_ms", "latency")
+    for v in range(1, 101):
+        h.observe(float(v))
+    assert h.percentile(0.5) == 50.0      # nearest-rank on 1..100
+    assert h.percentile(0.95) == 95.0
+    assert h.percentile(0.99) == 99.0
+    c = reg.counter("reqs", "requests")
+    c.inc(3)
+    with pytest.raises(ValueError):
+        c.inc(-1)
+    g = reg.gauge("depth", "queue depth")
+    g.set(7)
+    with pytest.raises(TypeError):
+        reg.counter("lat_ms", "wrong type")
+    text = reg.expose()
+    assert 'lat_ms{quantile="0.5"} 50' in text
+    assert "lat_ms_count 100" in text
+    assert "reqs 3" in text
+    assert "depth 7" in text
+    # get-or-create returns the same instance
+    assert reg.histogram("lat_ms", "latency") is h
+
+
+def test_server_timestamps_and_latency_quantiles():
+    from repro.serve.snn_server import SnnRequest, SnnServer
+
+    rng = np.random.default_rng(0)
+    w = [jnp.asarray(rng.normal(0, 0.4, (32, 16)), jnp.float32),
+         jnp.asarray(rng.normal(0, 0.4, (16, 10)), jnp.float32)]
+    srv = SnnServer(ChipSimulator(w, engine="compiled"), batch_slots=4)
+    for uid in range(5):
+        ev = (rng.random((4, 32)) < 0.2).astype(np.float32)
+        srv.submit(SnnRequest(uid=uid, events=ev))
+    done = srv.run()
+    assert len(done) == 5 and not srv.queue
+    for r in done:
+        assert r.t_enqueue is not None
+        assert r.t_enqueue <= r.t_dequeue <= r.t_complete
+    expo = srv.metrics.expose()
+    assert 'snn_request_latency_ms{quantile="0.5"}' in expo
+    assert 'snn_request_latency_ms{quantile="0.99"}' in expo
+    assert "snn_requests_total 5" in expo
+    assert "snn_queue_depth 0" in expo
+
+
+def test_trace_concat_batches_match_single_runs():
+    sim, _, _ = source_exact_probe(engine="compiled",
+                                   trace=TraceConfig(enabled=True))
+    n_in = int(sim.weights[0].shape[0])
+    trains = witness_trains(n_in, batch=3, steps=4, seed=11)
+    sim.run_batch(trains)
+    full = sim.last_trace()
+    per_sample = []
+    for b in range(3):
+        sim.run_batch(trains[b:b + 1])
+        per_sample.append(sim.last_trace())
+    stitched = ChipTrace.concat(per_sample)
+    for f in ARRAY_FIELDS:
+        a, b_ = getattr(full, f), getattr(stitched, f)
+        if a is not None:
+            np.testing.assert_array_equal(a, b_, err_msg=f)
