@@ -20,7 +20,7 @@ import sys
 TRAJECTORY_SCHEMA_VERSION = 1
 
 SECTIONS = ("fig3", "fig5", "noc", "compiler", "engine", "deploy", "fig6",
-            "table1", "kernels", "roofline", "telemetry")
+            "table1", "kernels", "roofline", "telemetry", "serve")
 
 
 def lane() -> str:
@@ -62,6 +62,7 @@ def trajectory(results: dict) -> dict:
     tel = results.get("telemetry") or {}
     tel_cap = tel.get("capture") or {}
     tel_srv = tel.get("serve") or {}
+    srv_sweep = (results.get("serve") or {}).get("sweep") or {}
     comp = results.get("compiler") or {}
     t1 = results.get("table1") or {}
     dep = results.get("deploy") or {}
@@ -118,6 +119,18 @@ def trajectory(results: dict) -> dict:
         "telemetry.capture_overhead_x": tel_cap.get("capture_overhead_x"),
         "serve.request_latency_p50_ms": tel_srv.get("p50_ms"),
         "serve.request_latency_p99_ms": tel_srv.get("p99_ms"),
+        # serving tier (PR 7): sustained-load sweep of the continuous-
+        # batching server.  Throughput/p99 are host wall-clock (timing
+        # threshold); shed_rate is recorded at the deep-overload point
+        # (3x capacity) where bounded admission makes it structurally
+        # nonzero — a zero here would mean shed accounting broke.  The
+        # saturation ratio vs the drain-loop baseline is same-host
+        # normalized like engine.speedup.
+        "serve.throughput_eps": srv_sweep.get("throughput_eps"),
+        "serve.p99_ms": srv_sweep.get("p99_ms_low_rate"),
+        "serve.shed_rate": srv_sweep.get("shed_rate_overload"),
+        "serve.saturation_ratio_vs_drain":
+            srv_sweep.get("saturation_ratio_vs_drain"),
     }
     return {"schema_version": TRAJECTORY_SCHEMA_VERSION,
             "lane": lane(), "provenance": provenance(),
@@ -146,7 +159,7 @@ def main(argv=None) -> None:
     from benchmarks import (compiler_bench, contention_bench, deploy_bench,
                             engine_bench, fig3_core_efficiency, fig5_noc,
                             fig6_riscv_power, kernel_bench, roofline,
-                            table1_chip, telemetry_bench)
+                            serve_bench, table1_chip, telemetry_bench)
 
     results = {}
     print("name,us_per_call,derived")
@@ -177,6 +190,8 @@ def main(argv=None) -> None:
         results["roofline"] = roofline.main(emit, dr)
     if "telemetry" in only:
         results["telemetry"] = telemetry_bench.main(emit)
+    if "serve" in only:
+        results["serve"] = serve_bench.main(emit)
 
     out = os.path.join(os.path.dirname(__file__), "results.json")
     with open(out, "w") as f:

@@ -58,7 +58,10 @@ def main():
 
     w = [jnp.asarray(rng.normal(0, 0.4, (288, 256)), jnp.float32),
          jnp.asarray(rng.normal(0, 0.4, (256, 10)), jnp.float32)]
-    sim = ChipSimulator(w, freq_hz=100e6, engine="compiled")
+    # greedy mapping packs the net onto a minimal contiguous core slice,
+    # leaving free cores for the second tenant below
+    sim = ChipSimulator(w, freq_hz=100e6, engine="compiled",
+                        mapping_strategy="greedy")
     snn = SnnServer(sim, batch_slots=8)
     for uid in range(12):
         snn.submit(SnnRequest(
@@ -70,7 +73,34 @@ def main():
     print(f"snn serving: {len(served)} event requests in {dt*1e3:.0f} ms "
           f"({len(served)/max(dt, 1e-9):.0f} req/s incl. compile), "
           f"{pj/len(served)/1e3:.1f} nJ/request, "
-          f"pJ/SOP {served[0].pj_per_sop:.3f}")
+          f"pJ/SOP {served[0].pj_per_sop:.3f}, "
+          f"host DMA {served[0].dma_pj/1e3:.1f} nJ/request")
+
+    # -- multi-model tenancy: a second net on a disjoint core slice --
+    from repro.core import noc as NOC
+    from repro.core.soc import remap_mapping_cores
+
+    w2 = [jnp.asarray(rng.normal(0, 0.4, (288, 128)), jnp.float32),
+          jnp.asarray(rng.normal(0, 0.4, (128, 10)), jnp.float32)]
+    tiny = ChipSimulator(w2, engine="compiled", mapping_strategy="greedy")
+    free = [int(c) for c in NOC.core_ids()
+            if int(c) not in snn.tenants["default"].core_ids]
+    need = len(tiny.mapping.active_core_ids())
+    aux = ChipSimulator(w2, engine="compiled",
+                        mapping=remap_mapping_cores(tiny.mapping,
+                                                    free[:need]))
+    snn.add_model("aux", aux)
+    for uid in range(8):
+        snn.submit(SnnRequest(
+            uid=100 + uid, model="aux", deadline_ms=500.0,
+            events=(rng.random((16, 288)) < 0.1).astype(np.float32)))
+    snn.run()
+    host = snn.host_summary()
+    print(f"tenancy: aux model on cores "
+          f"{sorted(snn.tenants['aux'].core_ids)}, "
+          f"{host['model_swaps']:.0f} table-load DMAs "
+          f"({host['swap_pj']/1e3:.1f} nJ reconfiguration)")
+    print(snn.metrics.expose().splitlines()[0])
 
 
 if __name__ == "__main__":

@@ -172,6 +172,35 @@ def deploy(cfg: SNNConfig, data, dcfg: DeployConfig | None = None,
         profile(prof_sim.last_trace(), core_model=prof_sim.core_model,
                 riscv=prof_sim.riscv))
 
+    # ---- serving-SLO smoke (serve tier) ------------------------------
+    # push a slice of the eval set through the continuous-batching server
+    # so the artifact records what the deployed net looks like *as a
+    # service*: latency quantiles, throughput, host-DMA cost per request
+    from repro.serve import SERVED, SnnRequest, SnnServer
+
+    n_smoke = min(16, int(eval_sp.shape[0]))
+    srv = SnnServer(sim, batch_slots=min(8, n_smoke))
+    for i in range(n_smoke):
+        srv.submit(SnnRequest(uid=i, events=np.asarray(eval_sp[i])))
+    smoke_done = srv.run()
+    lat = srv.metrics.get("snn_request_latency_ms")
+    wall_s = max(r.t_complete for r in smoke_done) - min(
+        r.t_enqueue for r in smoke_done)
+    serving_slo = {
+        "requests": n_smoke,
+        "served": int(sum(r.status == SERVED for r in smoke_done)),
+        "shed": int(srv.metrics.get("snn_requests_shed_total").value),
+        "latency_p50_ms": lat.percentile(0.5),
+        "latency_p99_ms": lat.percentile(0.99),
+        "throughput_rps": n_smoke / max(wall_s, 1e-9),
+        "dma_pj_per_request": float(np.mean(
+            [r.dma_pj for r in smoke_done])),
+        "model_swap_pj": srv.host_summary()["swap_pj"],
+    }
+    log(f"== serve smoke: p50 {serving_slo['latency_p50_ms']:.2f} ms, "
+        f"p99 {serving_slo['latency_p99_ms']:.2f} ms, "
+        f"{serving_slo['throughput_rps']:.1f} req/s ==")
+
     gates = dcfg.gates.check(acc_train, chip["accuracy"], chip["pj_per_sop"])
     return DeployReport(
         layer_sizes=list(cfg.layer_sizes), timesteps=cfg.timesteps,
@@ -192,4 +221,4 @@ def deploy(cfg: SNNConfig, data, dcfg: DeployConfig | None = None,
         n_cores=len(mapping.active_core_ids()),
         n_register_tables=pq.n_tables,
         compile_summary=compiled.summary(), gates=gates,
-        chip_profile=chip_profile)
+        chip_profile=chip_profile, serving_slo=serving_slo)

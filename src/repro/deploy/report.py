@@ -90,6 +90,11 @@ class DeployReport:
     # Optional + last so pre-PR-6 call sites and serialized reports load.
     chip_profile: dict | None = None
 
+    # serving-SLO smoke (PR-7): the deployed net pushed through the
+    # continuous-batching SnnServer — latency p50/p99, throughput,
+    # host-DMA cost per request.  Optional + trailing, same reasoning.
+    serving_slo: dict | None = None
+
     @property
     def passed(self) -> bool:
         return bool(self.gates.get("passed", False))
@@ -120,4 +125,11 @@ class DeployReport:
             f"{self.n_cores} cores  {self.n_register_tables} register tables",
             f"overall    {'PASS' if self.passed else 'FAIL'}",
         ]
+        if self.serving_slo:
+            s = self.serving_slo
+            lines.insert(-1, (
+                f"serving    p50 {s['latency_p50_ms']:.2f} ms  p99 "
+                f"{s['latency_p99_ms']:.2f} ms  "
+                f"{s['throughput_rps']:.1f} req/s  dma "
+                f"{s['dma_pj_per_request']:.0f} pJ/req"))
         return "\n".join(lines)

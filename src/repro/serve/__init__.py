@@ -1,0 +1,8 @@
+"""SNN event-stream serving tier: admission control, continuous
+batching, multi-model tenancy, DMA-modeled host dispatch."""
+from repro.serve.admission import (CREATED, DEADLINE_EXCEEDED, QUEUED,
+                                   SERVED, SHED, SnnRequest)
+from repro.serve.snn_server import SnnServer, Tenant
+
+__all__ = ["SnnRequest", "SnnServer", "Tenant", "CREATED", "QUEUED",
+           "SERVED", "SHED", "DEADLINE_EXCEEDED"]

@@ -1,68 +1,101 @@
-"""Batched SNN event-stream serving on the compiled chip engine.
+"""Continuous-batching SNN event-stream serving on the batched chip
+engines, with deadlines, bounded admission, multi-model tenancy, and a
+DMA-modeled host↔chip interface.
 
-The neuromorphic analogue of serve/server.py's LM loop: event-camera
-requests arrive, are grouped into fixed-size batch slots, and each group
-runs as ONE XLA program through `ChipSimulator.run_batch` — the compiled
-scan/vmap engine or the fused Pallas-kernel engine (`engine="fused"`);
-either engine shards slots across available devices when the batch
-divides the device count.  Short groups are padded with
-all-zero spike trains so every group hits the same compiled (mapping, T,
-batch) executable — no retrace per request count, which is what keeps
-tail latency flat under load.
+The PR-6 server was a drain loop: `run()` grouped the queued requests by
+T and blocked until the whole queue was flushed — no admission control,
+no deadlines, one model per server.  This tier serves instead:
 
-Each finished request carries its prediction, the chip-model energy
-telemetry for that sample (pJ, pJ/SOP), and monotonic
-enqueue/dequeue/complete timestamps.  The server maintains a
-`telemetry.MetricsRegistry` (per-request latency/queue-wait histograms
-with p50/p95/p99, queue-depth gauge, energy histograms) whose
-`metrics.expose()` text dump is the scrape surface the CI sustained-load
-smoke gates on.
+* **continuous in-flight batching** — `step()` forms ONE slot group as
+  soon as slots free up (bucket by (model, T): each triple is its own
+  compiled executable; oldest-deadline-first within the bucket) and
+  serves it; a request arriving while a group is in flight joins the
+  *next* group rather than waiting for a full drain.  `run()` is just
+  `step()` until idle, so the drain API still works.
+* **admission control** — the queue is depth-bounded; at capacity
+  `submit` completes the request with an explicit `shed` status (never a
+  silent drop).  Requests may carry a `deadline_ms`; expired requests
+  are completed `deadline_exceeded` at dispatch time, before they waste
+  an executable launch.
+* **multi-model tenancy** — `add_model()` registers more compiled
+  networks.  Tenants whose mappings occupy disjoint core sets (see
+  `core.soc.remap_mapping_cores`) are co-resident on the one simulated
+  chip; tenants that contend for cores evict each other, and every
+  residency change is priced as a reconfiguration DMA of the incoming
+  model's register tables (`core.soc.HostDmaModel.table_load` —
+  register-table bytes × per-word DMA energy/cycles, SpikeHard's
+  packetized host-interface model).
+* **DMA-modeled dispatch** — every served request is charged the host
+  interface: bitpacked spike-train upload + OBUF readback
+  (`SnnRequest.dma_pj`, kept separate from the on-chip `energy_pj`).
+
+Failure is transactional per group: if the engine raises, the group's
+`t_dequeue` stamps are cleared, no metrics are recorded for it, the
+requests stay queued, and the exception propagates.
+
+Metrics: the server maintains a `telemetry.MetricsRegistry` with global
+series (latency/queue-wait/occupancy histograms, queue-depth gauge,
+request/shed/deadline counters) plus per-tenant labelled series
+(`snn_request_latency_ms{tenant="..."}` etc.) — the scrape surface the
+CI serve-smoke job gates on.
 """
 from __future__ import annotations
 
-import dataclasses
 import time
-from collections import defaultdict
 
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core.soc import ChipSimulator
+from repro.core.soc import ChipSimulator, HostDmaModel
+from repro.serve import admission as ADM
+from repro.serve.admission import (DEADLINE_EXCEEDED, QUEUED, SERVED, SHED,
+                                   SnnRequest)
 from repro.telemetry.metrics import MetricsRegistry
 
-
-@dataclasses.dataclass
-class SnnRequest:
-    uid: int
-    events: np.ndarray                  # (T, n_in) binary spike train
-    prediction: int | None = None
-    spike_counts: np.ndarray | None = None
-    energy_pj: float = 0.0
-    pj_per_sop: float = 0.0
-    # monotonic lifecycle timestamps (time.monotonic seconds):
-    # t_enqueue <= t_dequeue <= t_complete once served
-    t_enqueue: float | None = None
-    t_dequeue: float | None = None
-    t_complete: float | None = None
+__all__ = ["SnnRequest", "SnnServer", "Tenant"]
 
 
-class SnnServer:
-    """Fixed-slot batching over one compiled chip executable per (T, B)."""
+class Tenant:
+    """One registered model: a compiled simulator plus residency state."""
 
-    def __init__(self, sim: ChipSimulator, batch_slots: int = 8,
-                 registry: MetricsRegistry | None = None):
+    def __init__(self, name: str, sim: ChipSimulator):
         if sim.engine not in ("compiled", "fused"):
             raise ValueError("SnnServer requires an array-engine simulator "
                              "(engine='compiled' or 'fused')")
+        self.name = name
         self.sim = sim
+        self.n_in = int(sim.weights[0].shape[0])
+        self.n_out = int(sim.weights[-1].shape[1])
+        self.core_ids = frozenset(sim.mapping.active_core_ids())
+        self.resident = False
+
+
+class SnnServer:
+    """Deadline-aware continuous batching over per-(model, T) executables."""
+
+    def __init__(self, sim: ChipSimulator, batch_slots: int = 8,
+                 registry: MetricsRegistry | None = None,
+                 max_queue_depth: int | None = 256,
+                 dma: HostDmaModel | None = None,
+                 clock=time.monotonic):
         self.slots = batch_slots
+        self.max_queue_depth = max_queue_depth
+        self.dma = dma if dma is not None else HostDmaModel()
+        self.clock = clock
         self.queue: list[SnnRequest] = []
+        self.tenants: dict[str, Tenant] = {}
         self.metrics = registry if registry is not None else MetricsRegistry()
         m = self.metrics
         self._m_requests = m.counter(
             "snn_requests_total", "requests accepted by submit()")
         self._m_served = m.counter(
-            "snn_requests_served_total", "requests completed by run()")
+            "snn_requests_served_total", "requests completed by dispatch")
+        self._m_shed = m.counter(
+            "snn_requests_shed_total",
+            "requests rejected at admission (queue at capacity)")
+        self._m_deadline = m.counter(
+            "snn_requests_deadline_exceeded_total",
+            "requests expired before launch")
         self._m_queue = m.gauge(
             "snn_queue_depth", "requests currently queued")
         self._m_latency = m.histogram(
@@ -75,59 +108,198 @@ class SnnServer:
             "snn_request_energy_pj", "chip-model energy per request")
         self._m_pj_sop = m.histogram(
             "snn_request_pj_per_sop", "chip-model pJ/SOP per request")
+        self._m_dma_pj = m.counter(
+            "snn_dma_pj_total",
+            "host-interface DMA energy (spike upload + output read)")
+        self._m_swaps = m.counter(
+            "snn_model_swaps_total",
+            "model residency loads (reconfiguration DMAs)")
+        self._m_swap_pj = m.counter(
+            "snn_model_swap_pj_total",
+            "reconfiguration DMA energy (register-table loads)")
+        self._m_swap_cycles = m.counter(
+            "snn_model_swap_cycles_total",
+            "reconfiguration DMA cycles (register-table loads)")
+        self._per_tenant: dict[str, dict] = {}
+        if sim is not None:
+            self.add_model("default", sim)
 
-    def submit(self, req: SnnRequest) -> None:
-        n_in = int(self.sim.weights[0].shape[0])
-        if req.events.ndim != 2 or int(req.events.shape[1]) != n_in:
-            raise ValueError(
-                f"request {req.uid}: events must be (T, {n_in}), "
-                f"got {tuple(req.events.shape)}")
-        req.t_enqueue = time.monotonic()
-        self.queue.append(req)
+    # -- tenancy ------------------------------------------------------------
+
+    def add_model(self, name: str, sim: ChipSimulator) -> Tenant:
+        """Register a compiled network under `name`.  Tenants with
+        disjoint core sets co-reside; overlapping tenants swap."""
+        if name in self.tenants:
+            raise ValueError(f"model {name!r} already registered")
+        t = Tenant(name, sim)
+        self.tenants[name] = t
+        m, lbl = self.metrics, {"tenant": name}
+        self._per_tenant[name] = {
+            "requests": m.counter("snn_requests_total",
+                                  "requests accepted by submit()", lbl),
+            "served": m.counter("snn_requests_served_total",
+                                "requests completed by dispatch", lbl),
+            "shed": m.counter("snn_requests_shed_total",
+                              "requests rejected at admission", lbl),
+            "deadline": m.counter("snn_requests_deadline_exceeded_total",
+                                  "requests expired before launch", lbl),
+            "latency": m.histogram("snn_request_latency_ms",
+                                   "submit -> complete wall time",
+                                   labels=lbl),
+            "pj_sop": m.histogram("snn_request_pj_per_sop",
+                                  "chip-model pJ/SOP per request",
+                                  labels=lbl),
+            "swap_pj": m.counter("snn_model_swap_pj_total",
+                                 "reconfiguration DMA energy", lbl),
+        }
+        return t
+
+    @property
+    def sim(self) -> ChipSimulator:
+        """The default tenant's simulator (single-model compatibility)."""
+        return self.tenants["default"].sim
+
+    def _ensure_resident(self, tenant: Tenant) -> None:
+        """Make `tenant` resident, evicting core-set conflicts; every
+        load is priced as a reconfiguration DMA of its register tables."""
+        if tenant.resident:
+            return
+        for other in self.tenants.values():
+            if other.resident and other.core_ids & tenant.core_ids:
+                other.resident = False
+        pj, cycles = self.dma.table_load(tenant.sim.register_tables)
+        tenant.resident = True
+        self._m_swaps.inc()
+        self._m_swap_pj.inc(pj)
+        self._m_swap_cycles.inc(cycles)
+        self._per_tenant[tenant.name]["swap_pj"].inc(pj)
+
+    # -- admission ----------------------------------------------------------
+
+    def submit(self, req: SnnRequest) -> SnnRequest:
+        """Admit (or shed) a request; returns it with its status set."""
+        tenant = self.tenants.get(req.model)
+        if tenant is None:
+            raise ValueError(f"request {req.uid}: unknown model "
+                             f"{req.model!r} (registered: "
+                             f"{sorted(self.tenants)})")
+        req.events = ADM.validate_events(req.events, tenant.n_in, req.uid)
+        now = self.clock()
+        req.t_enqueue = now
+        if req.deadline_ms is not None:
+            req.deadline = now + float(req.deadline_ms) * 1e-3
         self._m_requests.inc()
+        self._per_tenant[req.model]["requests"].inc()
+        if (self.max_queue_depth is not None
+                and len(self.queue) >= self.max_queue_depth):
+            # bounded-depth backpressure: explicit shed result, never a
+            # silent drop — the caller gets the request back, completed
+            req.status = SHED
+            req.t_complete = now
+            self._m_shed.inc()
+            self._per_tenant[req.model]["shed"].inc()
+            return req
+        req.status = QUEUED
+        self.queue.append(req)
         self._m_queue.set(len(self.queue))
+        return req
 
-    def _serve_group(self, group: list[SnnRequest]) -> None:
-        t_dequeue = time.monotonic()
+    # -- dispatch -----------------------------------------------------------
+
+    def _expire(self, now: float) -> list[SnnRequest]:
+        """Complete overdue requests with `deadline_exceeded` — before
+        group formation, so they never cost an executable launch."""
+        dead = ADM.expired(self.queue, now)
+        if not dead:
+            return []
+        gone = {id(r) for r in dead}
+        self.queue = [r for r in self.queue if id(r) not in gone]
+        self._m_queue.set(len(self.queue))
+        for r in dead:
+            r.status = DEADLINE_EXCEEDED
+            r.t_complete = now
+            self._m_deadline.inc()
+            self._per_tenant[r.model]["deadline"].inc()
+        return dead
+
+    def _serve_group(self, tenant: Tenant,
+                     group: list[SnnRequest]) -> None:
+        """Run one slot group through the tenant's engine.  Transactional:
+        metrics and result stamps land only after the engine returns; on
+        failure the dequeue stamps are cleared and the exception
+        propagates (the caller has not removed the group from the queue
+        yet, so nothing is lost and the depth gauge stays exact)."""
+        t_dequeue = self.clock()
         for r in group:
             r.t_dequeue = t_dequeue
-        T, n_in = group[0].events.shape
-        batch = np.zeros((self.slots, T, n_in), np.float32)
-        for i, r in enumerate(group):
-            batch[i] = r.events
-        counts, reports = self.sim.run_batch(jnp.asarray(batch))
-        counts = np.asarray(counts)
-        t_complete = time.monotonic()
+        try:
+            T = group[0].timesteps
+            batch = np.zeros((self.slots, T, tenant.n_in), np.float32)
+            for i, r in enumerate(group):
+                batch[i] = r.events
+            counts, reports = tenant.sim.run_batch(jnp.asarray(batch))
+            counts = np.asarray(counts)
+        except Exception:
+            for r in group:
+                r.t_dequeue = None
+            raise
+        t_complete = self.clock()
+        up_pj, _ = self.dma.spike_upload(T, tenant.n_in)
+        out_pj, _ = self.dma.output_read(tenant.n_out)
         self._m_occupancy.observe(len(group))
+        per = self._per_tenant[tenant.name]
         for i, r in enumerate(group):
             r.spike_counts = counts[i]
             r.prediction = int(counts[i].argmax())
             r.energy_pj = reports[i].energy_pj
             r.pj_per_sop = reports[i].pj_per_sop
+            r.dma_pj = up_pj + out_pj
             r.t_complete = t_complete
+            r.status = SERVED
+            self._m_dma_pj.inc(r.dma_pj)
             self._m_served.inc()
+            per["served"].inc()
             self._m_latency.observe((t_complete - r.t_enqueue) * 1e3)
+            per["latency"].observe((t_complete - r.t_enqueue) * 1e3)
             self._m_wait.observe((r.t_dequeue - r.t_enqueue) * 1e3)
             self._m_pj.observe(r.energy_pj)
             self._m_pj_sop.observe(r.pj_per_sop)
+            per["pj_sop"].observe(r.pj_per_sop)
+
+    def step(self) -> list[SnnRequest]:
+        """One dispatch round: expire overdue requests, then form and
+        serve at most ONE slot group.  Returns every request completed
+        this round (served + expired).  New submissions between steps
+        join the next group — this is the continuous-batching loop."""
+        now = self.clock()
+        done = self._expire(now)
+        group = ADM.form_group(self.queue, self.slots, now)
+        if not group:
+            return done
+        tenant = self.tenants[group[0].model]
+        self._ensure_resident(tenant)
+        self._serve_group(tenant, group)        # raises transactionally
+        served = {id(r) for r in group}
+        self.queue = [r for r in self.queue if id(r) not in served]
+        self._m_queue.set(len(self.queue))
+        return done + group
 
     def run(self) -> list[SnnRequest]:
-        """Drain the queue.  Requests are grouped by T (each distinct train
-        length is its own executable) and served in slot-sized batches.
-        Requests leave the queue only once their group is served — one
-        rebuild pass per served group (not O(group x queue) `.remove`
-        scans) — so a failing group leaves everything not yet served
-        still queued."""
-        by_len: dict[int, list[SnnRequest]] = defaultdict(list)
-        for r in self.queue:
-            by_len[int(r.events.shape[0])].append(r)
+        """Drain: `step()` until the queue is idle.  Kept for the batch
+        API; sustained-load callers drive `step()` themselves and keep
+        submitting between rounds."""
         done: list[SnnRequest] = []
-        for _T, reqs in sorted(by_len.items()):
-            for i in range(0, len(reqs), self.slots):
-                group = reqs[i:i + self.slots]
-                self._serve_group(group)
-                served = {id(r) for r in group}
-                self.queue = [r for r in self.queue if id(r) not in served]
-                self._m_queue.set(len(self.queue))
-                done.extend(group)
+        while self.queue:
+            done.extend(self.step())
         return done
+
+    # -- host-interface accounting ------------------------------------------
+
+    def host_summary(self) -> dict:
+        """DMA/reconfiguration totals the dispatch loop accumulated."""
+        return {
+            "dma_pj": self._m_dma_pj.value,
+            "model_swaps": self._m_swaps.value,
+            "swap_pj": self._m_swap_pj.value,
+            "swap_cycles": self._m_swap_cycles.value,
+        }

@@ -107,6 +107,12 @@ def test_deploy_end_to_end_tiny(tmp_path):
     assert doc["gates"]["accuracy_parity_ok"] is True
     assert doc["pj_per_sop"] == rep.pj_per_sop
     assert "PASS" in rep.summary() or "FAIL" in rep.summary()
+    # serving-SLO smoke: the deployed net ran through the serve tier
+    slo = doc["serving_slo"]
+    assert slo["served"] == slo["requests"] and slo["shed"] == 0
+    assert slo["latency_p99_ms"] >= slo["latency_p50_ms"] > 0
+    assert slo["dma_pj_per_request"] > 0
+    assert "serving" in rep.summary()
 
 
 def test_deploy_skips_training_when_params_given():

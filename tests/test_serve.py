@@ -1,0 +1,302 @@
+"""Serving-tier contract tests: admission validation, deadline/shed
+semantics, transactional dispatch, multi-tenant isolation, and
+continuous-batching liveness.
+
+These pin the PR-7 serve semantics:
+* submit validates T >= 1 and binary events (regression: pre-PR code
+  accepted T=0 trains that crashed inside the engine scan);
+* a failed engine launch leaves the server state untouched (regression:
+  pre-PR `run` kept stale `t_dequeue` stamps and pre-recorded metrics);
+* deadlines expire *before* launch, bounded queues shed explicitly;
+* tenants on disjoint core sets are bit-identical to single-tenant
+  serving, and residency swaps are priced as register-table DMAs.
+"""
+import numpy as np
+import pytest
+
+from repro.core import noc as NOC
+from repro.core.soc import (ChipSimulator, HostDmaModel,
+                            register_table_bytes, remap_mapping_cores)
+from repro.serve import (DEADLINE_EXCEEDED, QUEUED, SERVED, SHED,
+                         SnnRequest, SnnServer)
+from repro.serve.admission import form_group, validate_events
+
+
+class FakeClock:
+    """Injectable monotonic clock for deterministic deadline tests."""
+
+    def __init__(self, t: float = 0.0):
+        self.t = float(t)
+
+    def advance(self, dt: float) -> None:
+        self.t += float(dt)
+
+    def __call__(self) -> float:
+        return self.t
+
+
+def _net(seed=0, n_in=8, n_hidden=16, n_out=4):
+    rng = np.random.default_rng(seed)
+    return [rng.normal(0, 0.5, (n_in, n_hidden)).astype(np.float32),
+            rng.normal(0, 0.5, (n_hidden, n_out)).astype(np.float32)]
+
+
+def _events(rng, T=6, n_in=8, p=0.3):
+    return (rng.random((T, n_in)) < p).astype(np.float32)
+
+
+# ---------------------------------------------------------------------------
+# satellite S1: submit-time validation
+
+
+def test_submit_rejects_zero_timestep_train():
+    srv = SnnServer(ChipSimulator(_net(), engine="compiled"), batch_slots=2)
+    with pytest.raises(ValueError, match="T >= 1"):
+        srv.submit(SnnRequest(uid=0, events=np.zeros((0, 8), np.float32)))
+    assert srv.queue == []
+
+
+def test_submit_rejects_non_binary_events():
+    srv = SnnServer(ChipSimulator(_net(), engine="compiled"), batch_slots=2)
+    ev = np.zeros((4, 8), np.float32)
+    ev[1, 3] = 0.7
+    with pytest.raises(ValueError, match="binary"):
+        srv.submit(SnnRequest(uid=0, events=ev))
+    assert srv.queue == []
+
+
+def test_submit_rejects_wrong_width_and_unknown_model():
+    srv = SnnServer(ChipSimulator(_net(), engine="compiled"), batch_slots=2)
+    with pytest.raises(ValueError, match=r"\(T, 8\)"):
+        srv.submit(SnnRequest(uid=0, events=np.zeros((4, 9), np.float32)))
+    with pytest.raises(ValueError, match="unknown model"):
+        srv.submit(SnnRequest(uid=1, events=np.zeros((4, 8), np.float32),
+                              model="nope"))
+
+
+def test_validate_events_casts_to_f32_binary():
+    ev = validate_events(np.ones((3, 8), np.int64), 8, uid=7)
+    assert ev.dtype == np.float32 and ev.shape == (3, 8)
+
+
+# ---------------------------------------------------------------------------
+# satellite S2: transactional dispatch under engine faults
+
+
+def test_engine_fault_leaves_server_state_untouched():
+    clock = FakeClock()
+    srv = SnnServer(ChipSimulator(_net(), engine="compiled"),
+                    batch_slots=4, clock=clock)
+    rng = np.random.default_rng(1)
+    reqs = [srv.submit(SnnRequest(uid=i, events=_events(rng)))
+            for i in range(3)]
+
+    real_run_batch = srv.sim.run_batch
+
+    def boom(batch):
+        raise RuntimeError("injected engine fault")
+
+    srv.tenants["default"].sim.run_batch = boom
+    with pytest.raises(RuntimeError, match="injected engine fault"):
+        srv.step()
+
+    # transactional: nothing served, no stale stamps, gauge exact,
+    # no metrics recorded for the failed group
+    assert [r.status for r in reqs] == [QUEUED] * 3
+    assert all(r.t_dequeue is None for r in reqs)
+    assert len(srv.queue) == 3
+    assert srv.metrics.get("snn_queue_depth").value == 3
+    assert srv.metrics.get("snn_batch_occupancy").count == 0
+    assert srv.metrics.get("snn_requests_served_total").value == 0
+
+    # recovery: restore the engine and the same queue drains cleanly
+    srv.tenants["default"].sim.run_batch = real_run_batch
+    done = srv.run()
+    assert [r.status for r in done] == [SERVED] * 3
+    assert srv.metrics.get("snn_batch_occupancy").count == 1
+
+
+# ---------------------------------------------------------------------------
+# deadline / shed semantics
+
+
+def test_expired_request_completes_without_engine_launch():
+    clock = FakeClock()
+    srv = SnnServer(ChipSimulator(_net(), engine="compiled"),
+                    batch_slots=4, clock=clock)
+    rng = np.random.default_rng(2)
+    r = srv.submit(SnnRequest(uid=0, events=_events(rng), deadline_ms=10.0))
+    assert r.status == QUEUED and r.deadline == pytest.approx(0.010)
+
+    clock.advance(0.050)                       # blow the deadline
+    srv.tenants["default"].sim.run_batch = lambda b: (_ for _ in ()).throw(
+        AssertionError("expired request must not reach the engine"))
+    done = srv.step()
+
+    assert [x.status for x in done] == [DEADLINE_EXCEEDED]
+    assert r.prediction is None and r.t_complete == clock.t
+    assert srv.queue == []
+    assert srv.metrics.get("snn_queue_depth").value == 0
+    assert srv.metrics.get("snn_requests_deadline_exceeded_total").value == 1
+
+
+def test_bounded_queue_sheds_explicitly_with_exact_gauge():
+    srv = SnnServer(ChipSimulator(_net(), engine="compiled"),
+                    batch_slots=2, max_queue_depth=2, clock=FakeClock())
+    rng = np.random.default_rng(3)
+    a = srv.submit(SnnRequest(uid=0, events=_events(rng)))
+    b = srv.submit(SnnRequest(uid=1, events=_events(rng)))
+    c = srv.submit(SnnRequest(uid=2, events=_events(rng)))
+
+    assert a.status == QUEUED and b.status == QUEUED
+    assert c.status == SHED and c.t_complete is not None
+    assert len(srv.queue) == 2                  # shed never entered the queue
+    assert srv.metrics.get("snn_queue_depth").value == 2
+    assert srv.metrics.get("snn_requests_shed_total").value == 1
+    assert srv.metrics.get(
+        "snn_requests_shed_total", {"tenant": "default"}).value == 1
+
+    done = srv.run()                            # shed request never served
+    assert {r.uid for r in done} == {0, 1}
+
+
+def test_group_formation_is_oldest_deadline_first():
+    clock = FakeClock()
+    srv = SnnServer(ChipSimulator(_net(), engine="compiled"),
+                    batch_slots=2, clock=clock)
+    rng = np.random.default_rng(4)
+    loose = srv.submit(SnnRequest(uid=0, events=_events(rng),
+                                  deadline_ms=500.0))
+    clock.advance(0.001)
+    tight = srv.submit(SnnRequest(uid=1, events=_events(rng),
+                                  deadline_ms=50.0))
+    clock.advance(0.001)
+    nodl = srv.submit(SnnRequest(uid=2, events=_events(rng)))
+
+    group = form_group(srv.queue, slots=2, now=clock.t)
+    assert [r.uid for r in group] == [1, 0]     # tight deadline leads
+    assert nodl.uid not in [r.uid for r in group]
+
+
+# ---------------------------------------------------------------------------
+# continuous-batching liveness
+
+
+def test_late_request_joins_next_group_not_full_drain():
+    srv = SnnServer(ChipSimulator(_net(), engine="compiled"),
+                    batch_slots=4, clock=FakeClock())
+    rng = np.random.default_rng(5)
+    for i in range(6):
+        srv.submit(SnnRequest(uid=i, events=_events(rng)))
+
+    first = srv.step()                          # one slot group, not a drain
+    assert len(first) == 4 and len(srv.queue) == 2
+
+    late = srv.submit(SnnRequest(uid=99, events=_events(rng)))
+    second = srv.step()
+    assert late in second                       # joined the very next group
+    assert {r.uid for r in second} == {4, 5, 99}
+    assert late.t_dequeue == second[0].t_dequeue
+    assert srv.queue == []
+
+
+# ---------------------------------------------------------------------------
+# multi-model tenancy
+
+
+def test_multi_tenant_disjoint_cores_bit_identical_to_single_tenant():
+    wa, wb = _net(seed=10), _net(seed=11, n_in=8, n_hidden=12, n_out=4)
+    # greedy packs contiguously (minimal cores), leaving room for tenant b
+    sim_a = ChipSimulator(wa, engine="compiled", mapping_strategy="greedy")
+    base_b = ChipSimulator(wb, engine="compiled", mapping_strategy="greedy")
+    used_a = set(sim_a.mapping.active_core_ids())
+    pool = [int(c) for c in NOC.core_ids() if int(c) not in used_a]
+    mapping_b = remap_mapping_cores(
+        base_b.mapping, pool[-len(base_b.mapping.active_core_ids()):])
+    sim_b = ChipSimulator(wb, engine="compiled", mapping=mapping_b)
+
+    rng = np.random.default_rng(6)
+    trains = [_events(rng) for _ in range(6)]
+
+    multi = SnnServer(sim_a, batch_slots=4, clock=FakeClock())
+    tb = multi.add_model("b", sim_b)
+    assert not (multi.tenants["default"].core_ids & tb.core_ids)
+    for i, ev in enumerate(trains):
+        multi.submit(SnnRequest(uid=i, events=ev,
+                                model="b" if i % 2 else "default"))
+    served = {r.uid: r for r in multi.run()}
+
+    solo_a = SnnServer(ChipSimulator(wa, engine="compiled", mapping=sim_a.mapping),
+                       batch_slots=4, clock=FakeClock())
+    solo_b = SnnServer(ChipSimulator(wb, engine="compiled", mapping=mapping_b),
+                       batch_slots=4, clock=FakeClock())
+    for i, ev in enumerate(trains):
+        (solo_b if i % 2 else solo_a).submit(SnnRequest(uid=i, events=ev))
+    solo = {r.uid: r for r in solo_a.run() + solo_b.run()}
+
+    for uid in served:
+        assert served[uid].prediction == solo[uid].prediction
+        np.testing.assert_array_equal(served[uid].spike_counts,
+                                      solo[uid].spike_counts)
+
+    # disjoint tenants co-reside: each loaded once, never evicted
+    hs = multi.host_summary()
+    assert hs["model_swaps"] == 2 and hs["swap_pj"] > 0
+
+
+def test_overlapping_tenants_swap_and_cost_is_register_table_dma():
+    wa, wb = _net(seed=20), _net(seed=21)
+    sim_a = ChipSimulator(wa, engine="compiled")
+    # same default mapping strategy -> overlapping core sets
+    sim_b = ChipSimulator(wb, engine="compiled", mapping=sim_a.mapping)
+    dma = HostDmaModel()
+    srv = SnnServer(sim_a, batch_slots=2, dma=dma, clock=FakeClock())
+    srv.add_model("b", sim_b)
+    assert srv.tenants["default"].core_ids & srv.tenants["b"].core_ids
+
+    rng = np.random.default_rng(7)
+    # a, b, a: serving order forces default -> b -> default reloads
+    for i, model in enumerate(["default", "b", "default"]):
+        srv.submit(SnnRequest(uid=i, events=_events(rng), model=model))
+        srv.step()
+
+    hs = srv.host_summary()
+    assert hs["model_swaps"] == 3
+    pj_a, _ = dma.table_load(sim_a.register_tables)
+    pj_b, _ = dma.table_load(sim_b.register_tables)
+    assert hs["swap_pj"] == pytest.approx(2 * pj_a + pj_b)
+    assert srv.metrics.get("snn_model_swap_pj_total",
+                           {"tenant": "b"}).value == pytest.approx(pj_b)
+
+
+def test_served_requests_carry_dma_cost_separate_from_chip_energy():
+    sim = ChipSimulator(_net(), engine="compiled")
+    srv = SnnServer(sim, batch_slots=2, clock=FakeClock())
+    rng = np.random.default_rng(8)
+    r = srv.submit(SnnRequest(uid=0, events=_events(rng)))
+    srv.run()
+
+    up_pj, up_cyc = srv.dma.spike_upload(r.timesteps, 8)
+    out_pj, _ = srv.dma.output_read(4)
+    assert r.dma_pj == pytest.approx(up_pj + out_pj)
+    assert up_pj > 0 and up_cyc > 0
+    # chip-model energy stays the engines' accounting, DMA is additive
+    counts, reports = sim.run_batch(
+        np.stack([r.events, np.zeros_like(r.events)])[:, :, :])
+    assert r.energy_pj == pytest.approx(reports[0].energy_pj, rel=1e-12)
+
+
+def test_host_dma_model_packetization():
+    dma = HostDmaModel(word_bits=32, words_per_packet=4, header_words=1,
+                       setup_cycles=10.0, cycles_per_word=2.0,
+                       pj_per_word=1.0)
+    assert dma.transfer(0) == (0.0, 0.0)
+    pj, cyc = dma.transfer(5)                   # 2 packets, 5+2 wire words
+    assert pj == pytest.approx(7.0)
+    assert cyc == pytest.approx(10.0 + 2.0 * 7)
+    # spike upload bitpacks 16 axon bits per chip halfword, 2 per DMA word
+    pj1, _ = dma.spike_upload(timesteps=4, n_in=16)
+    pj2, _ = dma.spike_upload(timesteps=4, n_in=64)
+    assert pj2 > pj1
+    assert register_table_bytes(
+        ChipSimulator(_net(), engine="compiled").register_tables[0]) > 0

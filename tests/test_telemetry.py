@@ -215,3 +215,62 @@ def test_trace_concat_batches_match_single_runs():
         a, b_ = getattr(full, f), getattr(stitched, f)
         if a is not None:
             np.testing.assert_array_equal(a, b_, err_msg=f)
+
+
+def test_histogram_max_samples_conflict_raises():
+    # regression: get-or-create used to silently keep the first window,
+    # silently changing what a caller's quantiles meant
+    reg = MetricsRegistry()
+    reg.histogram("lat_ms", "latency", max_samples=128)
+    with pytest.raises(ValueError, match="max_samples=128"):
+        reg.histogram("lat_ms", "latency", max_samples=64)
+    # same window is a plain get
+    assert reg.histogram("lat_ms", max_samples=128).max_samples == 128
+
+
+def test_help_lines_escape_backslash_and_newline():
+    # regression: raw backslashes/newlines in HELP break text-format parsers
+    reg = MetricsRegistry()
+    reg.counter("weird_total", "path C:\\tmp\nsecond line")
+    expo = reg.expose()
+    assert "# HELP weird_total path C:\\\\tmp\\nsecond line" in expo
+    assert "\nsecond line" not in expo.replace("\\nsecond", "")
+
+
+def test_fmt_emits_valid_inf_nan_exposition():
+    # regression: _fmt emitted python 'inf'/'nan', invalid in the format
+    reg = MetricsRegistry()
+    reg.gauge("pos", "x").set(float("inf"))
+    reg.gauge("neg", "x").set(float("-inf"))
+    reg.gauge("nan", "x").set(float("nan"))
+    expo = reg.expose()
+    lines = expo.splitlines()
+    assert "pos +Inf" in lines and "neg -Inf" in lines and "nan NaN" in lines
+    assert not any(l.endswith(("inf", "nan", "-inf")) for l in lines)
+
+
+def test_labelled_series_share_one_family_header():
+    reg = MetricsRegistry()
+    reg.counter("snn_requests_total", "reqs").inc(5)
+    reg.counter("snn_requests_total", "reqs", {"tenant": "a"}).inc(2)
+    reg.counter("snn_requests_total", "reqs", {"tenant": "b"}).inc(3)
+    expo = reg.expose()
+    assert expo.count("# HELP snn_requests_total") == 1
+    assert expo.count("# TYPE snn_requests_total") == 1
+    assert 'snn_requests_total{tenant="a"} 2' in expo
+    assert 'snn_requests_total{tenant="b"} 3' in expo
+    assert "snn_requests_total 5" in expo
+    # the family pins the type across label sets
+    with pytest.raises(TypeError, match="already registered"):
+        reg.gauge("snn_requests_total", "reqs", {"tenant": "c"})
+
+
+def test_histogram_quantiles_window_scoped_sum_lifetime():
+    reg = MetricsRegistry()
+    h = reg.histogram("w_ms", "windowed", max_samples=4)
+    for v in [100.0, 100.0, 100.0, 100.0, 1.0, 1.0, 1.0, 1.0]:
+        h.observe(v)
+    # window holds only the last 4 observations -> p99 reflects them
+    assert h.percentile(0.99) == 1.0
+    # sum/count are lifetime totals across all 8
+    assert h.count == 8 and h.sum == pytest.approx(404.0)
