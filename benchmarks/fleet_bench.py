@@ -1,0 +1,304 @@
+"""Fleet-scale benchmark — hierarchical multi-chip compilation plus the
+cores-axis sharded engine, at (tiny) CI scale or (full) ~100x the sizes
+the other benches run.
+
+Four studies:
+
+  1. Compile-time scaling: hierarchical (per-domain anneal, per-domain
+     33-node congestion tables) vs the flat global-table pipeline as the
+     network grows, with the congestion term ON.  The flat path needs the
+     global (n, n, n) `path_load_table` and re-evaluates an O(flows * n)
+     congestion objective per anneal move, so past `FLAT_NODE_BUDGET`
+     fabric nodes it is *skipped* (logged, not silently dropped) — which
+     is the point: the hierarchical compiler is the only one still
+     standing at fleet scale.
+  2. Incremental recompile: a single-layer spike-rate edit recompiled
+     against the cached per-domain placements vs a from-scratch compile.
+  3. Fullerene-vs-mesh saturation at board scale (PR-5 contention model,
+     equal *node* count like contention_bench, uniform traffic): the
+     mesh's saturation onset falls as ~n^-1/2 while the fullerene board's
+     is asymptotically flat — the fully-connected level-2 tier bounds the
+     route length — so the board overtakes the mesh at the ~40-chip mark.
+  4. Sharded-engine equivalence: the board-scale net run cores-sharded
+     (one XLA program across all host devices) vs the unsharded compiled
+     engine — spikes must be bit-identical, reports within 1e-6.
+
+Standalone usage (the fleet-scale-smoke CI lane):
+
+    XLA_FLAGS=--xla_force_host_platform_device_count=4 \
+        python benchmarks/fleet_bench.py --tiny --out fleet_bench.json
+
+writes a bench-trajectory JSON gated by scripts/bench_compare.py
+--metrics-prefix fleet. against the latest committed BENCH_pr*.json.
+"""
+from __future__ import annotations
+
+import time
+
+import numpy as np
+
+# the flat pipeline's congestion machinery is cubic in fabric nodes (the
+# (n, n, n) path-load table plus O(flows * n) objective re-evaluation per
+# anneal move); past this node count it is skipped, with a log note
+FLAT_NODE_BUDGET = 250
+
+TINY = dict(
+    sizes=[64] + [96] * 20 + [16], neurons_per_core=8, max_domains=16,
+    anneal_iters=12000, scaling_iters=300, depths=(3, 6, 12),
+    edit_layer=12, sat_domains=(1, 2, 4, 8), batch=4, timesteps=6,
+)
+FULL = dict(
+    sizes=[512] + [1024] * 100 + [10], neurons_per_core=512, max_domains=24,
+    anneal_iters=4000, scaling_iters=2000, depths=(12, 25, 50, 100, 200),
+    edit_layer=60, sat_domains=(1, 4, 12, 24, 48), batch=2, timesteps=4,
+)
+
+
+def _scaled_sizes(cfg: dict, depth: int) -> list[int]:
+    sizes = cfg["sizes"]
+    return [sizes[0]] + [sizes[1]] * depth + [sizes[-1]]
+
+
+def compile_scaling_rows(cfg: dict, log=print) -> list[dict]:
+    """Hierarchical vs flat compile seconds as network depth grows, with
+    the congestion term on (the flat path's O(n^3) table is the cost
+    being killed)."""
+    from repro import compiler as COMP
+    from repro.compiler import partition as P
+    from repro.compiler import scaleup as SU
+    from repro.compiler.ir import from_layer_sizes
+
+    rows = []
+    for depth in cfg["depths"]:
+        sizes = _scaled_sizes(cfg, depth)
+        spec = COMP.ChipSpec(neurons_per_core=cfg["neurons_per_core"],
+                             max_domains=cfg["max_domains"])
+        net = from_layer_sizes(sizes)
+        groups = P.partition(net, spec)
+        su = SU.plan(groups, spec)
+        n_nodes = su.adjacency.shape[0]
+        kw = dict(seed=0, anneal_iters=cfg["scaling_iters"],
+                  congestion_weight=0.3)
+
+        t0 = time.perf_counter()
+        hier = COMP.compile_network(sizes, spec, **kw)
+        hier_s = time.perf_counter() - t0
+
+        row = {"depth": depth, "groups": len(groups),
+               "domains": hier.n_domains_used, "fabric_nodes": n_nodes,
+               "hier_s": round(hier_s, 3), "hier_cost": round(hier.cost, 2),
+               "flat_s": None, "flat_cost": None}
+        if n_nodes <= FLAT_NODE_BUDGET:
+            t0 = time.perf_counter()
+            flat = COMP.compile_network(sizes, spec, hierarchical=False,
+                                        **kw)
+            row["flat_s"] = round(time.perf_counter() - t0, 3)
+            row["flat_cost"] = round(flat.cost, 2)
+        else:
+            log(f"# fleet: flat pipeline skipped at depth={depth} — "
+                f"{n_nodes} fabric nodes, global congestion table would be "
+                f"{n_nodes ** 3 * 4 / 2 ** 20:.0f} MiB rebuilt per compile")
+        rows.append(row)
+    return rows
+
+
+def recompile_study(cfg: dict) -> dict:
+    """Single-layer spike-rate edit: cached-recompile vs from-scratch."""
+    from repro import compiler as COMP
+    from repro.compiler.ir import from_layer_sizes
+
+    sizes = cfg["sizes"]
+    spec = COMP.ChipSpec(neurons_per_core=cfg["neurons_per_core"],
+                         max_domains=cfg["max_domains"])
+    kw = dict(seed=0, anneal_iters=cfg["anneal_iters"])
+    prev = COMP.compile_network(from_layer_sizes(sizes), spec, **kw)
+
+    rates = list(from_layer_sizes(sizes).spike_rates)
+    rates[cfg["edit_layer"]] *= 1.6
+    edited = from_layer_sizes(sizes, spike_rates=rates)
+
+    t0 = time.perf_counter()
+    fresh = COMP.compile_network(edited, spec, **kw)
+    full_s = time.perf_counter() - t0
+    # the recompile is short, so time it as a best-of-3 — min over repeats
+    # is the standard scheduler-noise filter for sub-second measurements
+    inc_s = float("inf")
+    for _ in range(3):
+        t0 = time.perf_counter()
+        inc = COMP.recompile(edited, prev, changed_layers=[cfg["edit_layer"]])
+        inc_s = min(inc_s, time.perf_counter() - t0)
+
+    identical = (inc.placement.assignment == fresh.placement.assignment
+                 and inc.cost == fresh.cost)
+    return {
+        "domains": inc.recompile_stats["domains"],
+        "reused": inc.recompile_stats["reused"],
+        "full_s": round(full_s, 3), "recompile_s": round(inc_s, 3),
+        "speedup": round(full_s / max(inc_s, 1e-9), 2),
+        "bit_identical": bool(identical),
+    }
+
+
+def _mesh_saturation(n_nodes: int) -> float:
+    """Equal-node 2-D mesh, every node an endpoint (the contention_bench
+    convention scaled up)."""
+    from repro.core import noc as NOC
+
+    cols = int(np.ceil(np.sqrt(n_nodes)))
+    rows = int(np.ceil(n_nodes / cols))
+    return NOC.saturation_injection_rate(NOC.mesh_2d(rows, cols),
+                                         np.arange(rows * cols))
+
+
+def saturation_study(board_domains: int, sweep: tuple) -> dict:
+    """Uniform-traffic saturation onset, fullerene board vs equal-node
+    mesh, swept over board sizes (always including the bench board)."""
+    from repro.core import noc as NOC
+
+    rows = []
+    for D in sorted(set(sweep) | {board_domains}):
+        if D == 1:
+            adj, eps = NOC.fullerene_adjacency(), NOC.core_ids()
+        else:
+            adj = NOC.multi_domain_adjacency(D)
+            eps = NOC.multi_domain_core_ids(D)
+        ful = NOC.saturation_injection_rate(adj, eps)
+        mesh = _mesh_saturation(adj.shape[0])
+        rows.append({"domains": D, "nodes": int(adj.shape[0]),
+                     "fullerene_sat": round(ful, 5),
+                     "mesh_sat": round(mesh, 5),
+                     "ratio": round(ful / mesh, 3)})
+    board = next(r for r in rows if r["domains"] == board_domains)
+    return {"sweep": rows, "board_domains": board_domains,
+            "ratio": board["ratio"]}
+
+
+def sharded_equiv_study(cfg: dict, cn, log=print) -> dict:
+    """Run the board cores-sharded vs unsharded; bit-identical or bust."""
+    import jax
+
+    from repro.core.soc import ChipSimulator
+
+    sizes = cfg["sizes"]
+    rng = np.random.default_rng(0)
+    weights = [np.asarray(rng.normal(0, 1.2 / np.sqrt(a), (a, b)),
+                          np.float32)
+               for a, b in zip(sizes[:-1], sizes[1:])]
+    mapping = cn.to_soc_mapping()
+    comp = ChipSimulator(weights, mapping=mapping, engine="compiled")
+    shrd = ChipSimulator(weights, mapping=mapping, engine="sharded")
+    eng = shrd.array_engine()
+    trains = np.asarray(rng.random((cfg["batch"], cfg["timesteps"],
+                                    sizes[0])) < 0.2, np.float32)
+
+    t0 = time.perf_counter()
+    yc = comp.array_engine().run_raw(trains)
+    jax.block_until_ready(yc)
+    comp_s = time.perf_counter() - t0
+    t0 = time.perf_counter()
+    ys = eng.run_raw(trains)
+    jax.block_until_ready(ys)
+    shard_s = time.perf_counter() - t0
+
+    bit_identical = set(yc) == set(ys) and all(
+        np.array_equal(np.asarray(yc[k]), np.asarray(ys[k])) for k in yc)
+    _, reps_c = comp.run_batch(trains)
+    _, reps_s = shrd.run_batch(trains)
+    rel = max(abs(a.energy_pj - b.energy_pj) / max(abs(a.energy_pj), 1.0)
+              for a, b in zip(reps_c, reps_s))
+    ok = bit_identical and rel <= 1e-6
+    if not ok:
+        log(f"# fleet: SHARDED ENGINE DIVERGED bit_identical="
+            f"{bit_identical} report_rel={rel}")
+    return {
+        "devices": len(jax.devices()), "n_shards": eng.n_shards,
+        "n_domains": eng.n_domains, "ran_sharded": eng.last_run_sharded,
+        "bit_identical": bool(bit_identical),
+        "report_rel_err": float(rel),
+        "equiv": float(ok),
+        "compiled_run_s": round(comp_s, 3),
+        "sharded_run_s": round(shard_s, 3),
+    }
+
+
+def main(emit, tiny: bool = True, log=print) -> dict:
+    from repro import compiler as COMP
+    from repro.compiler.ir import from_layer_sizes
+
+    cfg = TINY if tiny else FULL
+    t0 = time.perf_counter()
+    scaling = compile_scaling_rows(cfg, log=log)
+
+    spec = COMP.ChipSpec(neurons_per_core=cfg["neurons_per_core"],
+                         max_domains=cfg["max_domains"])
+    tc = time.perf_counter()
+    cn = COMP.compile_network(from_layer_sizes(cfg["sizes"]), spec, seed=0,
+                              anneal_iters=cfg["anneal_iters"])
+    compile_s = time.perf_counter() - tc
+    recomp = recompile_study(cfg)
+    sat = saturation_study(cn.n_domains_used, cfg["sat_domains"])
+    equiv = sharded_equiv_study(cfg, cn, log=log)
+    us = (time.perf_counter() - t0) * 1e6
+
+    results = {
+        "mode": "tiny" if tiny else "full",
+        "groups": len(cn.groups), "domains": cn.n_domains_used,
+        "compile_s": round(compile_s, 3),
+        "scaling": scaling, "recompile": recomp,
+        "saturation": sat, "sharded": equiv,
+    }
+    emit("fleet_bench", us, {
+        "domains": cn.n_domains_used,
+        "compile_s": results["compile_s"],
+        "recompile_speedup": recomp["speedup"],
+        "saturation_ratio": sat["ratio"],
+        "sharded_equiv": equiv["equiv"],
+    })
+    return results
+
+
+def metrics(results: dict | None) -> dict:
+    """The schema-stable fleet.* slice of the bench trajectory."""
+    r = results or {}
+    recomp = r.get("recompile") or {}
+    sat = r.get("saturation") or {}
+    sharded = r.get("sharded") or {}
+    return {
+        "fleet.compile_s": r.get("compile_s"),
+        "fleet.recompile_speedup": recomp.get("speedup"),
+        "fleet.saturation_ratio": sat.get("ratio"),
+        "fleet.sharded_equiv": sharded.get("equiv"),
+        "fleet.domains": r.get("domains"),
+        "fleet.recompile_reused": recomp.get("reused"),
+    }
+
+
+if __name__ == "__main__":
+    import argparse
+    import json
+    import os
+    import sys
+
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--tiny", action="store_true",
+                    help="CI scale (the fleet-scale-smoke lane)")
+    ap.add_argument("--out", default=None,
+                    help="write a fleet.* bench-trajectory JSON here")
+    args = ap.parse_args()
+
+    root = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+    sys.path.insert(0, os.path.join(root, "src"))
+    sys.path.insert(0, root)
+
+    out = main(lambda n, us, c: print(f"{n}: {json.dumps(c, default=str)}"),
+               tiny=args.tiny)
+    print(json.dumps(out, indent=1, default=str))
+    if args.out:
+        from benchmarks import run as RUN
+
+        traj = {"schema_version": RUN.TRAJECTORY_SCHEMA_VERSION,
+                "lane": RUN.lane(), "provenance": RUN.provenance(),
+                "metrics": metrics(out)}
+        with open(args.out, "w") as f:
+            json.dump(traj, f, indent=1, sort_keys=True)
+        print(f"# fleet trajectory -> {args.out}", file=sys.stderr)

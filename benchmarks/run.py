@@ -20,7 +20,7 @@ import sys
 TRAJECTORY_SCHEMA_VERSION = 1
 
 SECTIONS = ("fig3", "fig5", "noc", "compiler", "engine", "deploy", "fig6",
-            "table1", "kernels", "roofline", "telemetry", "serve")
+            "table1", "kernels", "roofline", "telemetry", "serve", "fleet")
 
 
 def lane() -> str:
@@ -132,6 +132,14 @@ def trajectory(results: dict) -> dict:
         "serve.saturation_ratio_vs_drain":
             srv_sweep.get("saturation_ratio_vs_drain"),
     }
+    # hierarchical compiler + cores-axis sharded engine (PR 8): compile
+    # seconds at the fleet board scale, single-layer recompile speedup
+    # against the cached per-domain placements, fullerene-vs-mesh
+    # saturation at equal node count, and the sharded-engine equivalence
+    # claim (1.0 == spikes bit-identical AND reports within 1e-6)
+    from benchmarks import fleet_bench
+
+    metrics.update(fleet_bench.metrics(results.get("fleet")))
     return {"schema_version": TRAJECTORY_SCHEMA_VERSION,
             "lane": lane(), "provenance": provenance(),
             "metrics": metrics}
@@ -158,8 +166,9 @@ def main(argv=None) -> None:
     sys.path.insert(0, root)                    # `python benchmarks/run.py`
     from benchmarks import (compiler_bench, contention_bench, deploy_bench,
                             engine_bench, fig3_core_efficiency, fig5_noc,
-                            fig6_riscv_power, kernel_bench, roofline,
-                            serve_bench, table1_chip, telemetry_bench)
+                            fig6_riscv_power, fleet_bench, kernel_bench,
+                            roofline, serve_bench, table1_chip,
+                            telemetry_bench)
 
     results = {}
     print("name,us_per_call,derived")
@@ -192,6 +201,10 @@ def main(argv=None) -> None:
         results["telemetry"] = telemetry_bench.main(emit)
     if "serve" in only:
         results["serve"] = serve_bench.main(emit)
+    if "fleet" in only:
+        # always the tiny (CI-scale) configuration so trajectories stay
+        # comparable across hosts; the full board is a standalone run
+        results["fleet"] = fleet_bench.main(emit, tiny=True)
 
     out = os.path.join(os.path.dirname(__file__), "results.json")
     with open(out, "w") as f:

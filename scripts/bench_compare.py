@@ -3,6 +3,9 @@
 against the committed baseline and fail on regressions.
 
     python scripts/bench_compare.py BENCH_pr3.json BENCH_new.json
+    python scripts/bench_compare.py --baseline-latest BENCH_new.json
+    python scripts/bench_compare.py --baseline-latest --metrics-prefix \
+        fleet. fleet_bench.json
 
 Gated metrics (fail CI when they regress by more than --threshold,
 default 20%):
@@ -91,7 +94,41 @@ METRICS: dict[str, tuple[str, bool, str]] = {
     "serve.p99_ms": ("lower", True, "timing"),
     "serve.shed_rate": ("lower", True, "timing"),
     "serve.saturation_ratio_vs_drain": ("higher", True, "timing"),
+    # fleet lane (PR 8): hierarchical compile seconds and the recompile
+    # speedup are host wall-clock (timing threshold; the speedup is a
+    # same-host ratio like engine.speedup).  The fullerene-board vs
+    # equal-node-mesh saturation ratio is a deterministic model output.
+    # sharded_equiv is a claim flag: 1.0 while the cores-sharded engine
+    # is bit-identical to the unsharded one with reports within 1e-6 —
+    # 0.0 is a -100% change, so any threshold gates it.
+    "fleet.compile_s": ("lower", True, "timing"),
+    "fleet.recompile_speedup": ("higher", True, "timing"),
+    "fleet.saturation_ratio": ("higher", True, "det"),
+    "fleet.sharded_equiv": ("higher", True, "det"),
+    "fleet.domains": ("higher", False, "det"),
+    "fleet.recompile_reused": ("higher", False, "det"),
 }
+
+
+def latest_baseline(search_dir: str = ".") -> str:
+    """Path of the newest committed BENCH_pr<N>.json by PR number.
+
+    CI uses this instead of hardcoding a baseline filename, so landing a
+    PR that commits BENCH_pr<N+1>.json automatically rolls the gate
+    forward without editing the workflow."""
+    import glob
+    import os
+    import re
+
+    best = None
+    for path in glob.glob(os.path.join(search_dir, "BENCH_pr*.json")):
+        m = re.fullmatch(r"BENCH_pr(\d+)\.json", os.path.basename(path))
+        if m and (best is None or int(m.group(1)) > best[0]):
+            best = (int(m.group(1)), path)
+    if best is None:
+        raise SystemExit(f"no BENCH_pr<N>.json baseline found in "
+                         f"{os.path.abspath(search_dir)}")
+    return best[1]
 
 
 def lane_of(doc: dict) -> str:
@@ -111,7 +148,14 @@ def load(path: str) -> dict:
 
 def compare(base: dict, cand: dict, threshold: float,
             timing_threshold: float = 0.75,
-            allow_cross_lane: bool = False) -> int:
+            allow_cross_lane: bool = False,
+            metrics_prefix: str | None = None) -> int:
+    """Diff candidate against baseline; returns the process exit code.
+
+    With `metrics_prefix`, only metrics whose name starts with the prefix
+    are compared (gates, untracked listing and DROPPED detection alike) —
+    the fleet-scale-smoke lane gates a fleet.*-only trajectory from
+    fleet_bench.py against the full committed baseline this way."""
     if base["schema_version"] != cand["schema_version"]:
         print(f"FAIL schema_version {base['schema_version']} -> "
               f"{cand['schema_version']}")
@@ -125,9 +169,19 @@ def compare(base: dict, cand: dict, threshold: float,
               f"deterministic metrics.")
         return 1
     bm, cm = base["metrics"], cand["metrics"]
+    tracked = METRICS
+    if metrics_prefix is not None:
+        tracked = {k: v for k, v in METRICS.items()
+                   if k.startswith(metrics_prefix)}
+        if not tracked:
+            print(f"FAIL no tracked metric matches prefix "
+                  f"{metrics_prefix!r}")
+            return 1
+        bm = {k: v for k, v in bm.items() if k.startswith(metrics_prefix)}
+        cm = {k: v for k, v in cm.items() if k.startswith(metrics_prefix)}
     failures = 0
     rows = []
-    for name, (direction, gated, kind) in METRICS.items():
+    for name, (direction, gated, kind) in tracked.items():
         b, c = bm.get(name), cm.get(name)
         if cross_lane and kind == "timing":
             rows.append((name, b, c, "", "cross-lane (not compared)"))
@@ -164,7 +218,7 @@ def compare(base: dict, cand: dict, threshold: float,
         else:
             status = "ok" if gated else "info"
         rows.append((name, b, c, f"{change:+.1%}", status))
-    for name in sorted(set(cm) - set(METRICS)):
+    for name in sorted(set(cm) - set(tracked)):
         rows.append((name, bm.get(name), cm.get(name), "", "untracked"))
     for name in sorted(set(bm) - set(cm)):
         failures += 1
@@ -184,8 +238,15 @@ def compare(base: dict, cand: dict, threshold: float,
 
 def main(argv=None) -> int:
     ap = argparse.ArgumentParser()
-    ap.add_argument("baseline", help="committed BENCH_*.json")
+    ap.add_argument("baseline", nargs="?", default=None,
+                    help="committed BENCH_*.json (or use --baseline-latest)")
     ap.add_argument("candidate", help="freshly generated trajectory JSON")
+    ap.add_argument("--baseline-latest", action="store_true",
+                    help="auto-discover the newest committed "
+                         "BENCH_pr<N>.json instead of naming the baseline")
+    ap.add_argument("--metrics-prefix", default=None,
+                    help="compare only metrics whose name starts with this "
+                         "prefix (e.g. 'fleet.')")
     ap.add_argument("--threshold", type=float, default=0.20,
                     help="relative regression that fails CI (default 0.20)")
     # Re-derived for the stabilized timing protocol (PR 6): benchmarks
@@ -205,8 +266,17 @@ def main(argv=None) -> int:
                     help="permit comparing interpret-lane vs device-lane "
                          "trajectories; timing metrics are then skipped")
     args = ap.parse_args(argv)
+    if args.baseline_latest:
+        if args.baseline is not None:
+            ap.error("give either a baseline path or --baseline-latest, "
+                     "not both")
+        args.baseline = latest_baseline()
+        print(f"# baseline: {args.baseline}")
+    elif args.baseline is None:
+        ap.error("a baseline path (or --baseline-latest) is required")
     return compare(load(args.baseline), load(args.candidate), args.threshold,
-                   args.timing_threshold, args.allow_cross_lane)
+                   args.timing_threshold, args.allow_cross_lane,
+                   metrics_prefix=args.metrics_prefix)
 
 
 if __name__ == "__main__":

@@ -28,17 +28,23 @@ from repro.compiler.ir import (ChipSpec, LayerSpec, NetworkGraph,
                                estimate_spike_rates, from_conv_config,
                                from_layer_sizes, from_snn_config,
                                from_weights, measure_spike_rates)
-from repro.compiler.partition import CoreGroup, group_traffic
-from repro.compiler.place import Placement
-from repro.compiler.route import RoutedNetwork, RouterTables, verify_roundtrip
+from repro.compiler.partition import (CoreGroup, DomainPlan, assign_domains,
+                                      group_traffic)
+from repro.compiler.place import (DomainPlacement, Placement,
+                                  derive_domain_seed)
+from repro.compiler.route import (RoutedNetwork, RouterTables,
+                                  route_hierarchical, verify_roundtrip)
 from repro.compiler.scaleup import ScaleUpPlan
 
 __all__ = [
-    "ChipSpec", "CompiledNetwork", "CoreGroup", "LayerSpec", "NetworkGraph",
+    "ChipSpec", "CompiledNetwork", "CoreGroup", "DomainPlacement",
+    "DomainPlan", "LayerSpec", "NetworkGraph",
     "Placement", "RoutedNetwork", "RouterTables", "ScaleUpPlan",
-    "compile_network", "estimate_spike_rates", "from_conv_config",
+    "assign_domains", "compile_network", "derive_domain_seed",
+    "estimate_spike_rates", "from_conv_config",
     "from_layer_sizes", "from_snn_config", "from_weights",
-    "measure_spike_rates", "verify_roundtrip",
+    "measure_spike_rates", "recompile", "route_hierarchical",
+    "verify_roundtrip",
 ]
 
 
@@ -53,6 +59,12 @@ class CompiledNetwork:
     plan: ScaleUpPlan
     routed: RoutedNetwork
     baseline_cost: float          # contiguous-greedy placement, same metric
+    # hierarchical-compile artifacts (None/empty on the flat path)
+    domain_plan: DomainPlan | None = None
+    domain_placements: dict[int, DomainPlacement] | None = None
+    hierarchical: bool = False
+    options: dict = dataclasses.field(default_factory=dict)
+    recompile_stats: dict | None = None
 
     @property
     def cost(self) -> float:
@@ -145,6 +157,9 @@ def compile_network(net: Any, chip: ChipSpec | None = None, *,
                     strategy: str = "anneal", seed: int = 0,
                     anneal_iters: int = 4000, spread: bool = True,
                     congestion_weight: float = 0.0,
+                    hierarchical: bool | None = None,
+                    _cache: dict | None = None,
+                    _stats: dict | None = None,
                     verify: bool = False) -> CompiledNetwork:
     """Run the full partition -> place -> route -> scale-up pipeline.
 
@@ -155,26 +170,99 @@ def compile_network(net: Any, chip: ChipSpec | None = None, *,
     (what the engines charge as `noc_contention_cycles`) to the anneal
     objective — trade hops for a flatter router-load profile; the
     resulting `Placement.congestion` records the bottleneck either way.
+
+    `hierarchical` selects partition-then-place per level-1 domain: a
+    chip/domain grouping pass fixes which domain every group lives in,
+    each domain anneals independently on a shared 33-node local table
+    (per-domain derived RNG seeds), and routes are composed from local
+    paths plus the direct level-2 edge.  Default (None) auto-enables it
+    for multi-domain anneal compiles; pass False to force the flat
+    global-table path.  Same cost metric, same FlowRoutes — only the
+    compile-time scaling changes.
     """
     spec = chip or ChipSpec()
     graph = _as_network(net)
+    options = dict(strategy=strategy, seed=seed, anneal_iters=anneal_iters,
+                   spread=spread, congestion_weight=congestion_weight,
+                   hierarchical=hierarchical)
 
     groups = P.partition(graph, spec, spread=spread)
     flows = group_traffic(graph, groups)
     su = SU.plan(groups, spec)
-    dist = PL.weighted_distances(su.adjacency, su.level2_nodes,
-                                 spec.interconnect.level2_premium())
-    placement = PL.place(groups, flows, dist, su.core_slots, spec,
-                         su.n_domains, strategy=strategy, seed=seed,
-                         anneal_iters=anneal_iters, adjacency=su.adjacency,
-                         congestion_weight=congestion_weight)
-    baseline = PL.placement_cost(
-        PL.contiguous_place(groups, su.core_slots), flows, dist)
-    routed = R.route(groups, placement.assignment, su.adjacency,
-                     su.level2_nodes)
+    hier = (su.multi_domain and strategy == "anneal"
+            if hierarchical is None else bool(hierarchical))
+    if hier and not su.multi_domain:
+        hier = False                      # one domain: flat IS the local solve
+    if hier and strategy != "anneal":
+        raise ValueError(
+            f"hierarchical compilation refines per-domain anneals; "
+            f"strategy {strategy!r} has no hierarchical form")
+
+    if hier:
+        l2w = spec.interconnect.level2_premium()
+        dplan = P.assign_domains(groups, flows, spec, su.n_domains)
+        placement, dplacements = PL.place_hierarchical(
+            groups, flows, dplan, spec, strategy=strategy, seed=seed,
+            anneal_iters=anneal_iters, congestion_weight=congestion_weight,
+            cache=_cache, stats=_stats)
+        _, local_dist, _ = PL._local_tables(l2w, False)
+        baseline = PL.hierarchical_cost(
+            PL.contiguous_place(groups, su.core_slots), flows,
+            local_dist, l2w)
+        routed = R.route_hierarchical(groups, placement.assignment,
+                                      su.adjacency, su.level2_nodes)
+    else:
+        dplan, dplacements = None, None
+        dist = PL.weighted_distances(su.adjacency, su.level2_nodes,
+                                     spec.interconnect.level2_premium())
+        placement = PL.place(groups, flows, dist, su.core_slots, spec,
+                             su.n_domains, strategy=strategy, seed=seed,
+                             anneal_iters=anneal_iters,
+                             adjacency=su.adjacency,
+                             congestion_weight=congestion_weight)
+        baseline = PL.placement_cost(
+            PL.contiguous_place(groups, su.core_slots), flows, dist)
+        routed = R.route(groups, placement.assignment, su.adjacency,
+                         su.level2_nodes)
     compiled = CompiledNetwork(net=graph, spec=spec, groups=groups,
                                placement=placement, plan=su, routed=routed,
-                               baseline_cost=baseline)
+                               baseline_cost=baseline, domain_plan=dplan,
+                               domain_placements=dplacements,
+                               hierarchical=hier, options=options)
     if verify:
         verify_roundtrip(routed)
+    return compiled
+
+
+def recompile(net: Any, prev: CompiledNetwork,
+              changed_layers: Any = None, **overrides) -> CompiledNetwork:
+    """Incrementally recompile an edited network against a previous
+    hierarchical compile.
+
+    Runs the full pipeline (so the result is bit-identical to a fresh
+    `compile_network` of the edited network — correctness never depends
+    on the edit description), but seeds the per-domain placement cache
+    with `prev`'s solved subproblems: any domain whose content hash is
+    unchanged reuses its `DomainPlacement` by object identity and skips
+    its anneal, which is where nearly all compile time goes.
+
+    `changed_layers` is an optional hint (iterable of layer indices)
+    recorded in `recompile_stats` for telemetry; keyword overrides
+    replace individual compile options from the previous run.
+    """
+    opts = dict(prev.options or {})
+    opts.pop("hierarchical", None)
+    opts.update(overrides)
+    hier = opts.pop("hierarchical", prev.hierarchical or None)
+    cache = {dp.cache_key: dp
+             for dp in (prev.domain_placements or {}).values()}
+    stats: dict = {}
+    compiled = compile_network(
+        net, prev.spec, hierarchical=hier,
+        _cache=cache or None, _stats=stats, **opts)
+    stats.setdefault("domains", compiled.plan.n_domains)
+    stats.setdefault("reused", 0)
+    stats["changed_layers"] = (sorted(int(li) for li in changed_layers)
+                               if changed_layers is not None else None)
+    compiled.recompile_stats = stats
     return compiled

@@ -86,6 +86,109 @@ def partition(net: NetworkGraph, spec: ChipSpec,
     return groups
 
 
+@dataclasses.dataclass(frozen=True)
+class DomainPlan:
+    """Chip/domain grouping: which level-1 domain each core group lives in.
+
+    This is the hierarchy's top cut (Davies-style partition-then-place):
+    once the domain of every group is fixed, per-domain placement
+    subproblems are *independent* — on the fullerene graph every core sits
+    at the same weighted distance from its domain's level-2 router, so the
+    cross-domain distance between any two cores is a constant and the
+    global hop-weighted cost decomposes into per-domain local costs plus
+    ``cross_traffic`` times that constant.  ``flow_summary`` is the small
+    inter-domain matrix the scale-up/route stages consume instead of any
+    global O(n^3) table.
+    """
+
+    n_domains: int
+    domain_of: dict[int, int]          # gid -> domain index
+    cross_traffic: float               # spikes/step crossing a domain edge
+    flow_summary: tuple[tuple[float, ...], ...]   # (D, D) inter-domain rates
+
+    def gids_of(self, domain: int) -> list[int]:
+        return sorted(g for g, d in self.domain_of.items() if d == domain)
+
+    def split_flows(self, flows: list[tuple[int, int, float]]
+                    ) -> tuple[dict[int, list[tuple[int, int, float]]],
+                               list[tuple[int, int, float]]]:
+        """(per-domain intra flows, cross-domain flows)."""
+        intra: dict[int, list[tuple[int, int, float]]] = {
+            d: [] for d in range(self.n_domains)}
+        cross: list[tuple[int, int, float]] = []
+        for s, t, w in flows:
+            ds, dt = self.domain_of[s], self.domain_of[t]
+            if ds == dt:
+                intra[ds].append((s, t, w))
+            else:
+                cross.append((s, t, w))
+        return intra, cross
+
+
+def assign_domains(groups: list[CoreGroup],
+                   flows: list[tuple[int, int, float]],
+                   spec: ChipSpec,
+                   n_domains: int | None = None,
+                   refine_passes: int = 6) -> DomainPlan:
+    """Group core groups into level-1 domains, minimizing cross-domain
+    spike traffic under the per-domain core-count capacity.
+
+    Seed: contiguous fill in gid order (groups are emitted layer by layer,
+    and feed-forward traffic only couples consecutive layers, so
+    contiguity is already near-optimal).  Refinement: deterministic
+    first-improvement sweeps moving single groups into domains with free
+    slots whenever that strictly lowers cross-domain traffic.
+    """
+    if n_domains is None:
+        n_domains = spec.domains_needed(len(groups))
+    cap = spec.n_cores
+    if len(groups) > n_domains * cap:
+        raise ValueError(
+            f"{len(groups)} groups exceed {n_domains} domains x {cap} cores")
+    domain_of = {g.gid: min(i // cap, n_domains - 1)
+                 for i, g in enumerate(groups)}
+
+    # per-group traffic affinity toward each domain, kept incremental
+    touching: dict[int, list[tuple[int, float]]] = {g.gid: [] for g in groups}
+    for s, t, w in flows:
+        touching[s].append((t, w))
+        touching[t].append((s, w))
+    fill = [0] * n_domains
+    for d in domain_of.values():
+        fill[d] += 1
+
+    def affinity(gid: int, dom: int) -> float:
+        return sum(w for o, w in touching[gid] if domain_of[o] == dom)
+
+    for _ in range(max(refine_passes, 0)):
+        improved = False
+        for g in groups:
+            home = domain_of[g.gid]
+            aff_home = affinity(g.gid, home)
+            for dom in range(n_domains):
+                if dom == home or fill[dom] >= cap:
+                    continue
+                if affinity(g.gid, dom) > aff_home + 1e-12:
+                    fill[home] -= 1
+                    fill[dom] += 1
+                    domain_of[g.gid] = dom
+                    improved = True
+                    break
+        if not improved:
+            break
+
+    summary = [[0.0] * n_domains for _ in range(n_domains)]
+    cross = 0.0
+    for s, t, w in flows:
+        ds, dt = domain_of[s], domain_of[t]
+        summary[ds][dt] += w
+        if ds != dt:
+            cross += w
+    return DomainPlan(n_domains=n_domains, domain_of=dict(domain_of),
+                      cross_traffic=cross,
+                      flow_summary=tuple(tuple(r) for r in summary))
+
+
 def group_traffic(net: NetworkGraph, groups: list[CoreGroup]
                   ) -> list[tuple[int, int, float]]:
     """Inter-group spike flows: [(src_gid, dst_gid, spikes_per_timestep)].

@@ -82,14 +82,25 @@ class RouterTables:
 
 @dataclasses.dataclass
 class RoutedNetwork:
-    """The route stage's output, consumed by soc.ChipSimulator."""
+    """The route stage's output, consumed by soc.ChipSimulator.
+
+    `routing` is None for hierarchically routed networks — their paths
+    are composed from one shared 33-node local table, so the global BFS
+    table was never needed; `routing_table()` builds it on demand (only
+    verification wants it).
+    """
 
     adjacency: np.ndarray
-    routing: NOC.RoutingTable
+    routing: NOC.RoutingTable | None
     # src layer index -> one FlowRoute per source core of that layer
     layer_flows: dict[int, list[NOC.FlowRoute]]
     router_tables: RouterTables
     level2_nodes: frozenset[int]
+
+    def routing_table(self) -> NOC.RoutingTable:
+        if self.routing is None:
+            self.routing = NOC.RoutingTable(self.adjacency)
+        return self.routing
 
     def flows_of_layer(self, layer: int) -> list[NOC.FlowRoute]:
         return self.layer_flows.get(layer, [])
@@ -136,10 +147,94 @@ def _program_tables(tables: RouterTables, rt: NOC.RoutingTable,
             prev = u
 
 
+# ---------------------------------------------------------------------------
+# hierarchical routing: intra-domain and inter-chip level-2 flows separately
+# ---------------------------------------------------------------------------
+#
+# Domains are only connected through their level-2 routers, so a global
+# shortest path either stays inside one domain (it cannot leave and
+# re-enter without visiting that domain's level-2 node twice) or is
+# exactly  local(src -> L2_a) + (L2_a -> L2_b) + local(L2_b -> dst).
+# The global BFS next-hop rule (`np.nonzero` ascending-id tie-break)
+# never routes through a *foreign* level-2 node for either piece, so
+# paths composed from ONE shared 33-node local table are link-for-link
+# identical to the flat `RoutingTable` paths — `route_hierarchical`
+# emits the same FlowRoutes as `route` without the O(n^2) global BFS.
+
+def _composed_path(lrt: NOC.RoutingTable, src: int, dst: int) -> list[int]:
+    """Global path from local-table pieces (see module comment)."""
+    stride = NOC.DOMAIN_STRIDE
+    ds, dd = src // stride, dst // stride
+    if ds == dd:
+        return [ds * stride + n for n in lrt.path(src % stride, dst % stride)]
+    up = lrt.path(src % stride, NOC.N_NODES)
+    down = lrt.path(NOC.N_NODES, dst % stride)
+    return ([ds * stride + n for n in up]
+            + [dd * stride + n for n in down])
+
+
+def _compose_flow(lrt: NOC.RoutingTable, src: int, dsts: list[int],
+                  level2_nodes: frozenset[int]) -> NOC.FlowRoute:
+    """`noc.compile_flow` semantics over composed paths."""
+    if len(dsts) == 1:
+        p = _composed_path(lrt, src, int(dsts[0]))
+        links = tuple(zip(p[:-1], p[1:]))
+        mode = "p2p"
+    else:
+        link_set: set[tuple[int, int]] = set()
+        for d in dsts:
+            p = _composed_path(lrt, src, int(d))
+            link_set.update(zip(p[:-1], p[1:]))
+        links = tuple(sorted(link_set))
+        mode = "broadcast"
+    l2 = sum(1 for u, v in links if u in level2_nodes or v in level2_nodes)
+    return NOC.FlowRoute(src=src, dsts=tuple(int(d) for d in dsts),
+                         links=links, hops=len(links), l2_hops=l2, mode=mode)
+
+
+def route_hierarchical(groups: list[CoreGroup], assignment: dict[int, int],
+                       adj: np.ndarray, level2_nodes: frozenset[int]
+                       ) -> RoutedNetwork:
+    """Resolve every flow from one shared local routing table: local
+    paths for the intra-domain segments, the direct L2 -> L2 edge for the
+    inter-chip crossing.  Emits FlowRoutes and RouterTables identical to
+    the flat `route` (tests pin this down) at O(domain) instead of
+    O(fabric) table-build cost."""
+    lrt = NOC.RoutingTable(NOC.fullerene_adjacency(with_level2=True))
+    by_layer: dict[int, list[CoreGroup]] = {}
+    for g in groups:
+        by_layer.setdefault(g.layer, []).append(g)
+    tables = RouterTables(tables={})
+    layer_flows: dict[int, list[NOC.FlowRoute]] = {}
+
+    last = max(by_layer)
+    for layer, srcs in sorted(by_layer.items()):
+        if layer == last:
+            continue
+        dst_cores = sorted({assignment[g.gid] for g in by_layer[layer + 1]})
+        flows = []
+        for g in srcs:
+            src_core = assignment[g.gid]
+            flows.append(_compose_flow(lrt, src_core, dst_cores,
+                                       level2_nodes))
+            for dst in dst_cores:
+                if dst == src_core:
+                    continue
+                path = _composed_path(lrt, src_core, dst)
+                prev = src_core
+                for u, v in zip(path[:-1], path[1:]):
+                    tables.add(u, prev, dst, v)
+                    prev = u
+        layer_flows[layer] = flows
+    return RoutedNetwork(adjacency=adj, routing=None,
+                         layer_flows=layer_flows, router_tables=tables,
+                         level2_nodes=level2_nodes)
+
+
 def verify_roundtrip(routed: RoutedNetwork) -> None:
     """Every programmed (src, dst) pair must be deliverable by table-walk
     with exactly the BFS shortest-path hop count.  Raises on any miss."""
-    dist = routed.routing.dist
+    dist = routed.routing_table().dist
     for layer, flows in routed.layer_flows.items():
         for fr in flows:
             for dst in fr.dsts:

@@ -514,6 +514,231 @@ class CompiledEngine(_EngineBase):
         return jax.jit(fn)
 
 
+@dataclasses.dataclass(frozen=True)
+class ShardedLayer:
+    """One layer's cores-axis lowering: per-shard weight-column blocks.
+
+    `w` / `nzw` stack each shard's owned weight columns (gathered by
+    neuron ownership, zero-padded to the common width `width`), `onehot`
+    the matching rows of the layer's slice-onehot, and `pos` maps every
+    global neuron id to its lane in the all-gathered bit vector
+    (shard * 16*words + local index).  Every core's neuron slice lives
+    wholly inside one shard, so per-core counters are exact partial sums.
+    """
+
+    width: int                    # padded neurons per shard
+    words: int                    # uint16 spike words per shard
+    w: jax.Array                  # (S, n_pre, width) f32
+    nzw: jax.Array                # (S, n_pre, width) f32
+    onehot: jax.Array             # (S, width, A) f32
+    pos: jax.Array                # (n_post,) int32 gather into S*words*16 bits
+
+
+class ShardedEngine(_EngineBase):
+    """Cores-axis `shard_map` engine: a multi-chip board as ONE XLA
+    program across host devices.
+
+    Domains map contiguously onto `n_shards` mesh devices; each device
+    holds only its shard's weight columns (`spikes @ w_local` — column
+    blocks of a matmul are bit-exact on the CPU backend, so per-device
+    shards reproduce the unsharded engine's spikes bit-for-bit) and its
+    slice of the LIF state.  After each layer-step the shard packs its
+    output spikes into uint16 words (`zspe.pack_spike_words`) and
+    exchanges them with every other shard via `all_gather` over the
+    "cores" mesh axis — the domain-boundary spike traffic, 16 spikes per
+    word — then gathers the bits back into global neuron order for the
+    next layer's fan-in.  Counters (`nnz`, touched, per-core fired) are
+    exact integer partial sums combined with `psum`, so
+    `_EngineBase.run_batch` prices NoC/contention/energy through the
+    identical host-side f64 pipeline as the other engines (<= 1e-6 vs
+    the reference, like `CompiledEngine`).
+
+    Composes with batch sharding: with `nb * n_shards <= ndev` the mesh
+    is 2-D ("batch", "cores") and the batch splits across `nb` device
+    rows.  `n_shards` defaults to `min(n_devices, n_domains)`; a
+    single-domain mapping (or one device) degenerates to S=1, which
+    keeps the differential suite runnable anywhere.
+    """
+
+    def __init__(self, sim: "ChipSimulator", shard: bool = True,
+                 n_shards: int | None = None):
+        super().__init__(sim, shard=shard)
+        max_node = max(a.core_id for a in sim.mapping.assignments)
+        self.n_domains = (max_node // NOC.DOMAIN_STRIDE + 1
+                          if max_node >= NOC.N_NODES else 1)
+        ndev = len(jax.devices())
+        if n_shards is None:
+            n_shards = max(1, min(ndev, self.n_domains))
+        if not 1 <= n_shards <= ndev:
+            raise ValueError(f"n_shards={n_shards} needs 1..{ndev} devices")
+        if n_shards > self.n_domains:
+            raise ValueError(
+                f"n_shards={n_shards} exceeds the mapping's "
+                f"{self.n_domains} domain(s) — shards split on domain "
+                f"boundaries")
+        self.n_shards = n_shards
+        self.sharded_layers = self._lower_shards()
+
+    def _shard_of_core(self, core_id: int) -> int:
+        dom = (core_id // NOC.DOMAIN_STRIDE
+               if core_id >= NOC.N_NODES else 0)
+        return dom * self.n_shards // self.n_domains
+
+    def _lower_shards(self) -> tuple[ShardedLayer, ...]:
+        sim = self.sim
+        S = self.n_shards
+        out = []
+        for li, w in enumerate(sim.weights):
+            w = np.asarray(w, np.float32)
+            nzw = np.asarray(sim.nonzero_weights[li], np.float32)
+            lt = self.tables.layers[li]
+            n_pre, n_post = lt.n_pre, lt.n_post
+            owner = np.zeros(n_post, np.int32)
+            for a in sim.mapping.cores_of_layer(li + 1):
+                owner[a.neuron_lo:a.neuron_hi] = self._shard_of_core(
+                    a.core_id)
+            owned = [np.flatnonzero(owner == s) for s in range(S)]
+            width = max(int(o.size) for o in owned)
+            words = Z.spike_word_count(max(width, 1))
+            ws = np.zeros((S, n_pre, width), np.float32)
+            nzs = np.zeros((S, n_pre, width), np.float32)
+            oh = np.zeros((S, width, lt.slice_onehot.shape[1]), np.float32)
+            pos = np.zeros(n_post, np.int32)
+            for s, o in enumerate(owned):
+                ws[s, :, :o.size] = w[:, o]
+                nzs[s, :, :o.size] = nzw[:, o]
+                oh[s, :o.size] = lt.slice_onehot[o]
+                pos[o] = s * words * Z.SPIKE_WORD_BITS + np.arange(o.size)
+            out.append(ShardedLayer(
+                width=width, words=words, w=jnp.asarray(ws),
+                nzw=jnp.asarray(nzs), onehot=jnp.asarray(oh),
+                pos=jnp.asarray(pos)))
+        return tuple(out)
+
+    def _build_body(self):
+        """The per-device program: full-fan-in layer steps on local
+        weight-column shards, bitpacked spike exchange between layers."""
+        sim = self.sim
+        tbl = self.tables
+        S = self.n_shards
+        lif = sim.lif
+        cyc = sim.cycle_model
+        n_active = tbl.n_active_cores
+        layer_consts = [
+            (lt, jnp.asarray(lt.slice_sizes), jnp.asarray(lt.core_index))
+            for lt in tbl.layers
+        ]
+        has_flow = [ft is not None for ft in tbl.flows]
+        traced = self.trace.enabled
+        trace_skips = traced and self.trace.skip_words
+        shl = self.sharded_layers
+
+        def body(trains, *stacks):
+            # per-device views: each P("cores") operand arrives (1, ...)
+            local = [s[0] for s in stacks]
+            w_l = local[0::3]
+            nzw_l = local[1::3]
+            oh_l = local[2::3]
+
+            def step(states, spikes_t):
+                spikes = spikes_t                      # full (n_pre,) f32
+                wall = jnp.zeros((n_active,), jnp.float32)
+                nnzs, toucheds, fireds, skips = [], [], [], []
+                fired_cores = {}
+                new_states = []
+                for li, sl in enumerate(shl):
+                    lt, slices, core_idx = layer_consts[li]
+                    nnz = jnp.sum(spikes != 0).astype(jnp.float32)
+                    if trace_skips:
+                        skips.append(Z.empty_spike_words(
+                            Z.pack_spike_words(spikes))
+                            .astype(jnp.float32))
+                    current = spikes @ w_l[li]          # (width,) local
+                    st, out_l, touched_l = lif_step(
+                        states[li], current, lif,
+                        touched=touch_mask(spikes, nzw_l[li]))
+                    new_states.append(st)
+                    # exact integer partial sums; every core slice lives
+                    # in one shard, so psum reassembles the global counts
+                    tsum = jax.lax.psum(
+                        jnp.sum(touched_l).astype(jnp.float32), "cores")
+                    core_touched = jax.lax.psum(
+                        touched_l.astype(jnp.float32) @ oh_l[li], "cores")
+                    core_cyc = cyc.timestep_cycles_array(
+                        lt.n_pre, slices, nnz, core_touched,
+                        sim.zero_skip, sim.partial_update)
+                    wall = wall + jax.ops.segment_sum(
+                        core_cyc, core_idx, num_segments=n_active)
+                    if has_flow[li] or traced:
+                        fired_cores[f"fired_core_{li}"] = jax.lax.psum(
+                            out_l @ oh_l[li], "cores")
+                    if traced:
+                        fired_cores[f"touched_core_{li}"] = core_touched
+                    # domain-boundary exchange: 16 spikes per uint16 word
+                    packed = Z.pack_spike_words(out_l)   # (words,) uint16
+                    gathered = jax.lax.all_gather(packed, "cores",
+                                                  tiled=True)
+                    bits = Z.unpack_spike_words(
+                        gathered, S * sl.words * Z.SPIKE_WORD_BITS)
+                    spikes = bits[sl.pos]               # global order
+                    nnzs.append(nnz)
+                    toucheds.append(tsum)
+                    fireds.append(jnp.sum(spikes).astype(jnp.float32))
+                ys = {
+                    "nnz": jnp.stack(nnzs),
+                    "touched": jnp.stack(toucheds),
+                    "fired": jnp.stack(fireds),
+                    "wall": jnp.max(wall),
+                    "out": spikes,
+                    **fired_cores,
+                }
+                if trace_skips:
+                    ys["skip_words"] = jnp.stack(skips)
+                return tuple(new_states), ys
+
+            def one_sample(train):
+                states = tuple(init_state(sl.width) for sl in shl)
+                _, ys = jax.lax.scan(step, states, train)
+                return ys
+
+            return jax.vmap(one_sample)(trains)
+
+        return body
+
+    def _make_executable(self, nb: int):
+        try:
+            from jax import shard_map
+        except ImportError:
+            from jax.experimental.shard_map import shard_map
+        from jax.sharding import Mesh, PartitionSpec as P
+
+        S = self.n_shards
+        devices = np.array(jax.devices()[:nb * S]).reshape(nb, S)
+        mesh = Mesh(devices, ("batch", "cores"))
+        stacks = []
+        for sl in self.sharded_layers:
+            stacks.extend((sl.w, sl.nzw, sl.onehot))
+        body = self._build_body()
+        fn = shard_map(
+            body, mesh=mesh,
+            in_specs=(P("batch"),) + (P("cores"),) * len(stacks),
+            out_specs=P("batch"), check_rep=False)
+        jfn = jax.jit(fn)
+        return lambda trains: jfn(trains, *stacks)
+
+    def run_raw(self, spike_trains: jax.Array) -> dict:
+        trains = jnp.asarray(spike_trains, jnp.float32)
+        if trains.ndim != 3:
+            raise ValueError(f"expected (batch, T, n_in), got {trains.shape}")
+        nb_max = len(jax.devices()) // self.n_shards
+        nb = (nb_max if self.shard and nb_max > 1
+              and int(trains.shape[0]) % nb_max == 0 else 1)
+        if nb not in self._exec:
+            self._exec[nb] = self._make_executable(nb)
+        self.last_run_sharded = self.n_shards > 1 or nb > 1
+        return self._exec[nb](trains)
+
+
 class FusedEngine(_EngineBase):
     """The fused-kernel hot path: one Pallas kernel per layer-step.
 

@@ -390,6 +390,13 @@ class ChipSimulator:
       step in a single VMEM pass; batches shard over available devices
       via shard_map.  This is the throughput path; bit-identical to
       ``compiled`` under interpret mode.
+    * ``engine="sharded"`` — `repro.core.engine.ShardedEngine`: the
+      compiled program shard_mapped along the CORES axis as well — each
+      mesh device owns a contiguous run of level-1 domains (its weight
+      columns + LIF-state slice) and shards exchange bitpacked spike
+      words at domain boundaries each timestep, so a multi-chip board
+      runs as one XLA program.  Spikes are bit-identical to
+      ``compiled``; composes with batch sharding on a 2-D mesh.
     * ``engine="reference"`` — the original interpretive Python loop
       (one sample, one timestep, one layer at a time).  Kept as the
       differential-testing oracle; see tests/test_engine_equiv.py.
@@ -505,9 +512,9 @@ class ChipSimulator:
         # see the synapses the chip actually programs
         self.nonzero_weights = [(w != 0).astype(jnp.float32)
                                 for w in self.weights]
-        if engine not in ("compiled", "fused", "reference"):
-            raise ValueError(f"engine must be 'compiled', 'fused' or "
-                             f"'reference', got {engine!r}")
+        if engine not in ("compiled", "fused", "sharded", "reference"):
+            raise ValueError(f"engine must be 'compiled', 'fused', "
+                             f"'sharded' or 'reference', got {engine!r}")
         self.engine = engine
         # opt-in per-timestep capture (repro.telemetry): threaded through
         # every engine; trace-off lowers zero extra scan outputs
@@ -515,6 +522,7 @@ class ChipSimulator:
         self._last_trace = None  # reference-engine ChipTrace
         self._compiled = None    # CompiledEngine, built lazily
         self._fused = None       # FusedEngine, built lazily
+        self._sharded = None     # ShardedEngine, built lazily
 
     def compiled_engine(self):
         """The lazily-built batched XLA engine for this mapping."""
@@ -530,11 +538,24 @@ class ChipSimulator:
             self._fused = FusedEngine(self)
         return self._fused
 
+    def sharded_engine(self, n_shards: int | None = None):
+        """The lazily-built cores-axis shard_map engine for this mapping.
+
+        ``n_shards`` (first call only) overrides the default
+        min(devices, domains) split along the domain axis."""
+        if self._sharded is None:
+            from repro.core.engine import ShardedEngine
+            self._sharded = ShardedEngine(self, n_shards=n_shards)
+        return self._sharded
+
     def array_engine(self):
-        """The batched array engine selected at construction (compiled or
-        fused); raises for the reference engine, which has no lowering."""
+        """The batched array engine selected at construction (compiled,
+        fused or sharded); raises for the reference engine, which has no
+        lowering."""
         if self.engine == "fused":
             return self.fused_engine()
+        if self.engine == "sharded":
+            return self.sharded_engine()
         if self.engine == "compiled":
             return self.compiled_engine()
         raise ValueError("the reference engine is interpretive — no "
@@ -544,8 +565,9 @@ class ChipSimulator:
         """The ChipTrace captured by the most recent run (None when the
         simulator was built without `trace=TraceConfig(enabled=True)` or
         has not run yet).  Schema-identical across all three engines."""
-        if self.engine in ("compiled", "fused"):
-            eng = self._fused if self.engine == "fused" else self._compiled
+        if self.engine in ("compiled", "fused", "sharded"):
+            eng = {"fused": self._fused, "sharded": self._sharded,
+                   "compiled": self._compiled}[self.engine]
             return eng.last_trace if eng is not None else None
         return self._last_trace
 
@@ -579,7 +601,7 @@ class ChipSimulator:
         Dispatches to the engine selected at construction; all engines
         return identical spikes and matching accounting.
         """
-        if self.engine in ("compiled", "fused"):
+        if self.engine in ("compiled", "fused", "sharded"):
             return self.array_engine().run(spike_train)
         return self.run_reference(spike_train)
 
@@ -588,7 +610,7 @@ class ChipSimulator:
         """spike_trains: (B, T, n_in).  Returns ((B, n_out) counts, one
         ChipReport per sample).  The array engines run the batch as a
         single XLA program; the reference engine loops samples."""
-        if self.engine in ("compiled", "fused"):
+        if self.engine in ("compiled", "fused", "sharded"):
             return self.array_engine().run_batch(spike_trains)
         outs, reports, traces = [], [], []
         for b in range(int(spike_trains.shape[0])):

@@ -1,0 +1,186 @@
+"""Hierarchical multi-chip compiler tests (compiler/partition, place,
+route, recompile).
+
+The hierarchy rests on an exact decomposition: on the fullerene fabric
+every core sits at weighted distance (1 + l2w) from its domain's
+level-2 router, so the cross-domain core-to-core distance is the
+constant 2 + 3*l2w and the global hop-weighted cost splits into
+independent per-domain local costs plus cross_traffic times that
+constant.  These tests pin the exactness down — cost, routes, router
+tables and congestion must match the flat global-table pipeline — plus
+the incremental-recompile contract: bit-identical output, cached
+`DomainPlacement`s reused by object identity on untouched domains.
+"""
+import numpy as np
+import pytest
+
+from repro.compiler import (ChipSpec, assign_domains, compile_network,
+                            derive_domain_seed, from_layer_sizes,
+                            recompile, route_hierarchical)
+from repro.compiler import partition as P, place as PL, route as R
+from repro.compiler import scaleup as SU
+from repro.compiler.partition import group_traffic
+from repro.core import noc as NOC
+
+SIZES = [64, 120, 96, 56, 16]
+SPEC = ChipSpec(neurons_per_core=8, max_domains=4)
+
+
+def _pipeline(sizes=SIZES, spec=SPEC, rates=None):
+    net = from_layer_sizes(sizes, spike_rates=rates)
+    groups = P.partition(net, spec)
+    flows = group_traffic(net, groups)
+    su = SU.plan(groups, spec)
+    return net, groups, flows, su
+
+
+def test_assign_domains_capacity_and_determinism():
+    _, groups, flows, su = _pipeline()
+    a = assign_domains(groups, flows, SPEC, su.n_domains)
+    b = assign_domains(groups, flows, SPEC, su.n_domains)
+    assert a == b                               # frozen dataclass, by value
+    fill = [0] * a.n_domains
+    for d in a.domain_of.values():
+        fill[d] += 1
+    assert all(f <= SPEC.n_cores for f in fill)
+    assert set(a.domain_of) == {g.gid for g in groups}
+    # the flow summary's off-diagonal mass is exactly the cross traffic
+    off = sum(a.flow_summary[i][j] for i in range(a.n_domains)
+              for j in range(a.n_domains) if i != j)
+    assert off == pytest.approx(a.cross_traffic)
+
+
+def test_hierarchical_cost_equals_flat_cost():
+    """Per-domain local distances + the cross constant == the global
+    weighted-distance metric, for any assignment."""
+    _, groups, flows, su = _pipeline()
+    l2w = SPEC.interconnect.level2_premium()
+    dist = PL.weighted_distances(su.adjacency, su.level2_nodes, l2w)
+    _, local_dist, _ = PL._local_tables(l2w, False)
+    rng = np.random.default_rng(0)
+    slots = list(su.core_slots)
+    for _ in range(3):
+        perm = rng.permutation(len(slots))
+        asg = {g.gid: int(slots[perm[i]]) for i, g in enumerate(groups)}
+        flat = PL.placement_cost(asg, flows, dist)
+        hier = PL.hierarchical_cost(asg, flows, local_dist, l2w)
+        assert hier == pytest.approx(flat, rel=0, abs=1e-9)
+
+
+def test_route_hierarchical_identical_to_flat_route():
+    _, groups, flows, su = _pipeline()
+    dist = PL.weighted_distances(su.adjacency, su.level2_nodes,
+                                 SPEC.interconnect.level2_premium())
+    placement = PL.place(groups, flows, dist, su.core_slots, SPEC,
+                         su.n_domains, strategy="anneal", seed=7,
+                         anneal_iters=500, adjacency=su.adjacency)
+    flat = R.route(groups, placement.assignment, su.adjacency,
+                   su.level2_nodes)
+    hier = route_hierarchical(groups, placement.assignment, su.adjacency,
+                              su.level2_nodes)
+    assert set(flat.layer_flows) == set(hier.layer_flows)
+    for layer in flat.layer_flows:
+        assert flat.layer_flows[layer] == hier.layer_flows[layer]
+    assert flat.router_tables.tables == hier.router_tables.tables
+    assert hier.routing is None           # built lazily, only on demand
+    R.verify_roundtrip(hier)
+
+
+def test_hierarchical_congestion_matches_flat():
+    cn = compile_network(SIZES, SPEC, seed=5, congestion_weight=0.3)
+    assert cn.hierarchical
+    _, groups, flows, su = _pipeline()
+    adj = su.adjacency
+    flat_cong = PL.placed_congestion(cn.placement.assignment, flows, adj)
+    assert cn.placement.congestion == pytest.approx(flat_cong, abs=1e-9)
+
+
+def test_compile_network_hierarchical_flags_and_artifacts():
+    cn = compile_network(SIZES, SPEC, seed=3)
+    assert cn.hierarchical and cn.n_domains_used >= 2
+    assert cn.domain_plan is not None
+    assert set(cn.domain_placements) == set(range(cn.domain_plan.n_domains))
+    flat = compile_network(SIZES, SPEC, seed=3, hierarchical=False)
+    assert not flat.hierarchical and flat.domain_plan is None
+    # single-domain networks silently stay flat
+    small = compile_network([16, 24, 10], ChipSpec(), seed=3)
+    assert not small.hierarchical
+    with pytest.raises(ValueError):
+        compile_network(SIZES, SPEC, strategy="greedy", hierarchical=True)
+
+
+def test_derived_domain_seeds_stable_and_distinct():
+    seeds = [derive_domain_seed(42, d) for d in range(8)]
+    assert seeds == [derive_domain_seed(42, d) for d in range(8)]
+    assert len(set(seeds)) == len(seeds)
+    assert derive_domain_seed(43, 0) != seeds[0]
+    # reproducibility end-to-end: identical compiles byte-for-byte
+    a = compile_network(SIZES, SPEC, seed=11)
+    b = compile_network(SIZES, SPEC, seed=11)
+    assert a.placement.assignment == b.placement.assignment
+    assert a.cost == b.cost
+
+
+DEEP_SIZES = [32] + [48] * 10 + [16]   # 11 placed layers over 4 domains
+
+
+def _rate_edit(sizes, layer):
+    """A realistic single-layer edit: retraining shifts one layer's spike
+    rate, leaving sizes (and therefore partitioning) untouched."""
+    net = from_layer_sizes(sizes)
+    base = list(net.spike_rates)
+    edited = list(base)
+    edited[layer] = base[layer] * 1.7
+    return base, edited
+
+
+def test_recompile_bit_identical_and_reuses_untouched_domains():
+    base_rates, edited_rates = _rate_edit(DEEP_SIZES, layer=8)
+    prev = compile_network(
+        from_layer_sizes(DEEP_SIZES, spike_rates=base_rates), SPEC, seed=9,
+        anneal_iters=800)
+    assert prev.hierarchical
+    edited_net = from_layer_sizes(DEEP_SIZES, spike_rates=edited_rates)
+
+    fresh = compile_network(edited_net, SPEC, seed=9, anneal_iters=800)
+    inc = recompile(edited_net, prev, changed_layers=[8])
+
+    # bit-identical mapping + routes vs the from-scratch compile
+    assert inc.placement.assignment == fresh.placement.assignment
+    assert inc.cost == fresh.cost
+    assert inc.placement.congestion == fresh.placement.congestion
+    for layer in fresh.routed.layer_flows:
+        assert (inc.routed.layer_flows[layer]
+                == fresh.routed.layer_flows[layer])
+
+    st = inc.recompile_stats
+    assert st is not None and st["changed_layers"] == [8]
+    assert 0 < st["reused"] <= st["domains"]
+    # untouched domains reuse the PREVIOUS DomainPlacement objects
+    reused = [d for d, dp in inc.domain_placements.items()
+              if any(dp is p or dp.cache_key == p.cache_key
+                     for p in prev.domain_placements.values())]
+    assert len(reused) == st["reused"]
+
+
+def test_recompile_unchanged_network_reuses_every_domain():
+    prev = compile_network(SIZES, SPEC, seed=9)
+    inc = recompile(SIZES, prev)
+    assert inc.recompile_stats["reused"] == inc.domain_plan.n_domains
+    assert inc.placement.assignment == prev.placement.assignment
+    assert inc.cost == prev.cost
+
+
+def test_hierarchical_mapping_runs_in_simulator():
+    from repro.core.soc import ChipSimulator
+
+    rng = np.random.default_rng(0)
+    ws = [rng.normal(0, 0.5, (SIZES[i], SIZES[i + 1])).astype(np.float32)
+          for i in range(len(SIZES) - 1)]
+    cn = compile_network(ws, SPEC, seed=3, verify=True)
+    assert cn.hierarchical
+    sim = ChipSimulator(ws, mapping=cn.to_soc_mapping())
+    trains = (rng.random((2, 6, SIZES[0])) < 0.3).astype(np.float32)
+    counts, reports = sim.run_batch(trains)
+    assert counts.shape == (2, SIZES[-1])
+    assert all(r.energy_pj > 0 for r in reports)
