@@ -1,0 +1,319 @@
+"""Fault-tolerance benchmark — the PR-9 fault-injection subsystem end to
+end: survivability of the fullerene fabric under random kills, the
+fault-aware repair path of the compiler, differential engine parity
+under an active fault set, the zero-cost-off claim, and a graceful-
+degradation curve.
+
+Five studies:
+
+  1. Survivability: `faults.survivability_study` kills k random routers
+     (fullerene, L2 included) vs k random *nodes* (equal-node 4x8 mesh)
+     and measures the routable fraction over the ORIGINAL endpoint set —
+     a killed mesh node takes its compute with it, a killed fullerene
+     router never does, which is the decentralization dividend the gate
+     (`fault.survivability_ratio_vs_mesh` > 1) pins.
+  2. Repair: one router killed on a multi-domain board, then
+     `compiler.repair` against the cached per-domain placements vs a
+     from-scratch faulty compile.  A router kill leaves every domain's
+     membership intact, so the repair is pure re-route over reused
+     placements — `fault.repair_speedup` gates >= 2x.
+  3. Differential parity: reference oracle vs compiled vs fused under
+     one FaultConfig (dead core + failed router + hop-loss drops) —
+     spikes bit-identical, energy accounting within 1e-6, or the
+     `fault.differential_equiv` claim flag drops to 0.0 (a -100% change
+     any gate threshold catches).
+  4. Zero-cost-off: a null FaultConfig must produce the SAME jaxpr as no
+     fault argument at all (addresses normalized away) — the fault hooks
+     cost nothing when disabled (`fault.zero_cost_off`).
+  5. Degradation: the accuracy-vs-fault-rate curve on the deploy smoke
+     net — a small SNN trained on the synthetic event stream (the same
+     net tests/test_deploy.py deploys), then executed on the chip engine
+     under rising drop_p and a dead core.  Labeled accuracy plus
+     agreement with the fault-free chip; informational, not gated (it
+     tracks the workload, not a better/worse axis).
+
+Standalone usage (the fault-smoke CI lane):
+
+    python benchmarks/fault_bench.py --tiny --out fault_bench.json
+
+writes a bench-trajectory JSON gated by scripts/bench_compare.py
+--metrics-prefix fault. against the latest committed BENCH_pr*.json.
+"""
+from __future__ import annotations
+
+import re
+import time
+
+import numpy as np
+
+TINY = dict(
+    surv_kills=4, surv_trials=16, surv_seed=0,
+    repair_sizes=[64] + [96] * 8 + [16], neurons_per_core=8,
+    max_domains=8, anneal_iters=4000, kill_router=3,
+    diff_sizes=[64, 96, 96, 16], batch=4, timesteps=6,
+    drop_sweep=(0.0, 0.05, 0.1, 0.2), degrade_batch=32,
+    deploy_hidden=64, deploy_steps=12,
+)
+FULL = dict(
+    surv_kills=6, surv_trials=64, surv_seed=0,
+    repair_sizes=[256] + [256] * 24 + [64], neurons_per_core=32,
+    max_domains=16, anneal_iters=12000, kill_router=3,
+    diff_sizes=[128, 256, 256, 32], batch=8, timesteps=12,
+    drop_sweep=(0.0, 0.02, 0.05, 0.1, 0.2, 0.4), degrade_batch=128,
+    deploy_hidden=64, deploy_steps=60,
+)
+
+
+def survivability(cfg: dict) -> dict:
+    """Study 1: random-kill routability, fullerene vs equal-node mesh."""
+    from repro.faults import survivability_study
+
+    return survivability_study(k=cfg["surv_kills"], trials=cfg["surv_trials"],
+                               seed=cfg["surv_seed"])
+
+
+def repair_study(cfg: dict, log=print) -> dict:
+    """Study 2: one-router-kill repair vs from-scratch faulty compile."""
+    from repro import compiler as COMP
+    from repro.compiler.ir import from_layer_sizes
+    from repro.faults import FaultConfig
+
+    sizes = cfg["repair_sizes"]
+    spec = COMP.ChipSpec(neurons_per_core=cfg["neurons_per_core"],
+                         max_domains=cfg["max_domains"])
+    net = from_layer_sizes(sizes)
+    kw = dict(seed=0, anneal_iters=cfg["anneal_iters"])
+    prev = COMP.compile_network(net, spec, **kw)
+    faults = FaultConfig(failed_routers=(cfg["kill_router"],))
+
+    t0 = time.perf_counter()
+    fresh = COMP.compile_network(net, spec,
+                                 faults=faults.with_rerouted(), **kw)
+    fresh_s = time.perf_counter() - t0
+    # sub-second re-route: best-of-3 is the scheduler-noise filter the
+    # other benches use for short timings
+    repair_s = float("inf")
+    rep = None
+    for _ in range(3):
+        t0 = time.perf_counter()
+        rep = COMP.repair(net, prev, faults)
+        repair_s = min(repair_s, time.perf_counter() - t0)
+
+    identical = (rep.placement.assignment == fresh.placement.assignment
+                 and rep.cost == fresh.cost)
+    killed = int(cfg["kill_router"])
+    routed_nodes = {int(n) for fl in rep.routed.layer_flows.values()
+                    for f in fl for uv in f.links for n in uv}
+    if killed in routed_nodes:
+        log(f"# fault: REPAIR ROUTED THROUGH DEAD ROUTER {killed}")
+    return {
+        "killed_router": killed,
+        "domains": rep.recompile_stats["domains"],
+        "reused": rep.recompile_stats["reused"],
+        "fresh_s": round(fresh_s, 3), "repair_s": round(repair_s, 3),
+        "speedup": round(fresh_s / max(repair_s, 1e-9), 2),
+        "bit_identical_to_fresh": bool(identical),
+        "dead_router_in_routes": bool(killed in routed_nodes),
+    }
+
+
+def _mk_sims(sizes, faults, engines):
+    from repro.core.soc import ChipSimulator
+
+    rng = np.random.default_rng(0)
+    weights = [np.asarray(rng.normal(0, 1.2 / np.sqrt(a), (a, b)),
+                          np.float32)
+               for a, b in zip(sizes[:-1], sizes[1:])]
+    return {e: ChipSimulator([w.copy() for w in weights], engine=e,
+                             faults=faults)
+            for e in engines}
+
+
+def differential_study(cfg: dict, log=print) -> dict:
+    """Study 3: identical FaultConfig => bit-identical spikes across the
+    reference oracle and both array engines, accounting within 1e-6."""
+    from repro.faults import FaultConfig
+
+    sizes = cfg["diff_sizes"]
+    faults = FaultConfig(dead_cores=(14,), failed_routers=(3,),
+                         drop_p=0.15, seed=7)
+    sims = _mk_sims(sizes, faults, ("reference", "compiled", "fused"))
+    rng = np.random.default_rng(1)
+    trains = np.asarray(rng.random((cfg["batch"], cfg["timesteps"],
+                                    sizes[0])) < 0.25, np.float32)
+
+    counts, reports = {}, {}
+    for name, sim in sims.items():
+        c, r = sim.run_batch(trains)
+        counts[name], reports[name] = np.asarray(c), r
+    bit_identical = (np.array_equal(counts["reference"], counts["compiled"])
+                     and np.array_equal(counts["reference"],
+                                        counts["fused"]))
+    rel = max(abs(a.energy_pj - b.energy_pj) / max(abs(a.energy_pj), 1.0)
+              for eng in ("compiled", "fused")
+              for a, b in zip(reports["reference"], reports[eng]))
+    ok = bit_identical and rel <= 1e-6
+    if not ok:
+        log(f"# fault: ENGINES DIVERGED under faults bit_identical="
+            f"{bit_identical} report_rel={rel}")
+    return {
+        "faults": faults.describe(),
+        "bit_identical": bool(bit_identical),
+        "report_rel_err": float(rel),
+        "equiv": float(ok),
+    }
+
+
+def zero_cost_study(cfg: dict, log=print) -> dict:
+    """Study 4: a null FaultConfig lowers to the SAME program as no
+    fault argument at all — the hooks are provably free when off."""
+    import jax
+
+    from repro.faults import NULL_FAULTS
+
+    sizes = cfg["diff_sizes"]
+    base = _mk_sims(sizes, None, ("compiled",))["compiled"]
+    null = _mk_sims(sizes, NULL_FAULTS, ("compiled",))["compiled"]
+    x = np.zeros((cfg["batch"], cfg["timesteps"], sizes[0]), np.float32)
+
+    def jaxpr(sim):
+        s = str(jax.make_jaxpr(sim.array_engine().run_raw)(x))
+        # custom_vjp params embed function reprs with memory addresses;
+        # normalize them away so only real structural diffs remain
+        return re.sub(r"0x[0-9a-f]+", "0x", s)
+
+    same = jaxpr(base) == jaxpr(null)
+    if not same:
+        log("# fault: NULL FaultConfig CHANGED the lowered program")
+    return {"jaxpr_identical": bool(same), "zero_cost_off": float(same)}
+
+
+def degradation_study(cfg: dict, log=print) -> dict:
+    """Study 5: accuracy vs fault rate on the deploy smoke net.
+
+    Trains the same small event-camera SNN that tests/test_deploy.py
+    pushes through the deploy pipeline (8x8 EventStream, one hidden
+    layer), then executes it on the chip engine under each fault
+    scenario and reports labeled accuracy plus prediction agreement
+    with the fault-free chip.  Informational — the curve characterizes
+    graceful degradation, not a better/worse axis."""
+    from repro.core.soc import ChipSimulator
+    from repro.data.synthetic import EventStream
+    from repro.faults import FaultConfig
+    from repro.models.snn import SNNConfig
+    from repro.train.snn_trainer import SNNTrainConfig, SNNTrainer
+
+    ev = EventStream(timesteps=5, height=8, width=8, seed=2)
+    scfg = SNNConfig(layer_sizes=(ev.n_inputs, cfg["deploy_hidden"], 10),
+                     timesteps=5, qat=True)
+    tcfg = SNNTrainConfig(steps=cfg["deploy_steps"], lr=8e-3, log_every=0)
+    params, _ = SNNTrainer(scfg, tcfg).fit(
+        lambda step: ev.batch(tcfg.batch, step))
+    weights = [np.asarray(w) for w in params]
+    spikes, labels = ev.batch(cfg["degrade_batch"], step=777)
+    spikes, labels = np.asarray(spikes), np.asarray(labels)
+
+    def chip_pred(faults):
+        sim = ChipSimulator(weights, engine="compiled", faults=faults)
+        c, _ = sim.run_batch(spikes)
+        return np.asarray(c).argmax(axis=1)
+
+    clean_pred = chip_pred(None)
+    acc_clean = float(np.mean(clean_pred == labels))
+    log(f"# fault: deploy smoke net acc_chip(clean)={acc_clean:.3f}")
+
+    def row(scenario, drop_p, faults):
+        pred = chip_pred(faults)
+        return {"scenario": scenario, "drop_p": drop_p,
+                "accuracy": round(float(np.mean(pred == labels)), 4),
+                "agreement": round(float(np.mean(pred == clean_pred)), 4)}
+
+    rows = [row(f"drop_p={p}", p,
+                FaultConfig(drop_p=p, seed=11) if p else None)
+            for p in cfg["drop_sweep"]]
+    rows.append(row("dead_core=14", 0.0,
+                    FaultConfig(dead_cores=(14,), seed=11)))
+    mid = next(r for r in rows if abs(r["drop_p"] - 0.1) < 1e-9)
+    return {"net": list(scfg.layer_sizes), "train_steps": tcfg.steps,
+            "eval_batch": int(cfg["degrade_batch"]),
+            "accuracy_clean": acc_clean, "rows": rows,
+            "accuracy_at_drop10": mid["accuracy"],
+            "agreement_at_drop10": mid["agreement"]}
+
+
+def main(emit, tiny: bool = True, log=print) -> dict:
+    cfg = TINY if tiny else FULL
+    t0 = time.perf_counter()
+    surv = survivability(cfg)
+    rep = repair_study(cfg, log=log)
+    diff = differential_study(cfg, log=log)
+    zero = zero_cost_study(cfg, log=log)
+    deg = degradation_study(cfg, log=log)
+    us = (time.perf_counter() - t0) * 1e6
+
+    results = {
+        "mode": "tiny" if tiny else "full",
+        "survivability": surv, "repair": rep, "differential": diff,
+        "zero_cost": zero, "degradation": deg,
+    }
+    emit("fault_bench", us, {
+        "survivability_ratio_vs_mesh": surv["routable_ratio_vs_mesh"],
+        "repair_speedup": rep["speedup"],
+        "differential_equiv": diff["equiv"],
+        "zero_cost_off": zero["zero_cost_off"],
+    })
+    return results
+
+
+def metrics(results: dict | None) -> dict:
+    """The schema-stable fault.* slice of the bench trajectory."""
+    r = results or {}
+    surv = r.get("survivability") or {}
+    rep = r.get("repair") or {}
+    diff = r.get("differential") or {}
+    zero = r.get("zero_cost") or {}
+    deg = r.get("degradation") or {}
+    return {
+        "fault.survivability_ratio_vs_mesh":
+            surv.get("routable_ratio_vs_mesh"),
+        "fault.saturation_ratio_vs_mesh":
+            surv.get("saturation_ratio_vs_mesh"),
+        "fault.repair_speedup": rep.get("speedup"),
+        "fault.repair_reused": rep.get("reused"),
+        "fault.differential_equiv": diff.get("equiv"),
+        "fault.zero_cost_off": zero.get("zero_cost_off"),
+        "fault.accuracy_clean": deg.get("accuracy_clean"),
+        "fault.accuracy_at_drop10": deg.get("accuracy_at_drop10"),
+        "fault.agreement_at_drop10": deg.get("agreement_at_drop10"),
+    }
+
+
+if __name__ == "__main__":
+    import argparse
+    import json
+    import os
+    import sys
+
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--tiny", action="store_true",
+                    help="CI scale (the fault-smoke lane)")
+    ap.add_argument("--out", default=None,
+                    help="write a fault.* bench-trajectory JSON here")
+    args = ap.parse_args()
+
+    root = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+    sys.path.insert(0, os.path.join(root, "src"))
+    sys.path.insert(0, root)
+
+    out = main(lambda n, us, c: print(f"{n}: {json.dumps(c, default=str)}"),
+               tiny=args.tiny)
+    print(json.dumps(out, indent=1, default=str))
+    if args.out:
+        from benchmarks import run as RUN
+
+        traj = {"schema_version": RUN.TRAJECTORY_SCHEMA_VERSION,
+                "lane": RUN.lane(), "provenance": RUN.provenance(),
+                "metrics": metrics(out)}
+        with open(args.out, "w") as f:
+            json.dump(traj, f, indent=1, sort_keys=True)
+        print(f"# fault trajectory -> {args.out}", file=sys.stderr)

@@ -9,6 +9,11 @@ scripts/bench_compare.py diffs against the committed baseline
 (BENCH_pr3.json) to fail CI on >20% regressions in engine throughput or
 pJ/SOP.  Keys are append-only: removing or renaming one is itself a CI
 failure, so the trajectory stays comparable across PRs.
+
+Sections run fault-tolerantly: a raising section records an ``error``
+entry (nulling its trajectory metrics, which any gated metric turns into
+a failure) and the rest still run; the harness exits nonzero at the end
+if any section failed.
 """
 from __future__ import annotations
 
@@ -20,7 +25,8 @@ import sys
 TRAJECTORY_SCHEMA_VERSION = 1
 
 SECTIONS = ("fig3", "fig5", "noc", "compiler", "engine", "deploy", "fig6",
-            "table1", "kernels", "roofline", "telemetry", "serve", "fleet")
+            "table1", "kernels", "roofline", "telemetry", "serve", "fleet",
+            "fault")
 
 
 def lane() -> str:
@@ -137,9 +143,14 @@ def trajectory(results: dict) -> dict:
     # against the cached per-domain placements, fullerene-vs-mesh
     # saturation at equal node count, and the sharded-engine equivalence
     # claim (1.0 == spikes bit-identical AND reports within 1e-6)
-    from benchmarks import fleet_bench
+    from benchmarks import fault_bench, fleet_bench
 
     metrics.update(fleet_bench.metrics(results.get("fleet")))
+    # fault-injection subsystem (PR 9): random-kill survivability of the
+    # fullerene fabric vs an equal-node mesh, the fault-aware repair
+    # speedup over a from-scratch faulty compile, and the differential /
+    # zero-cost-off claim flags (1.0, or a -100% change any gate trips)
+    metrics.update(fault_bench.metrics(results.get("fault")))
     return {"schema_version": TRAJECTORY_SCHEMA_VERSION,
             "lane": lane(), "provenance": provenance(),
             "metrics": metrics}
@@ -165,46 +176,57 @@ def main(argv=None) -> None:
     sys.path.insert(0, os.path.join(root, "src"))
     sys.path.insert(0, root)                    # `python benchmarks/run.py`
     from benchmarks import (compiler_bench, contention_bench, deploy_bench,
-                            engine_bench, fig3_core_efficiency, fig5_noc,
-                            fig6_riscv_power, fleet_bench, kernel_bench,
-                            roofline, serve_bench, table1_chip,
+                            engine_bench, fault_bench, fig3_core_efficiency,
+                            fig5_noc, fig6_riscv_power, fleet_bench,
+                            kernel_bench, roofline, serve_bench, table1_chip,
                             telemetry_bench)
 
     results = {}
+    failed: list[str] = []
     print("name,us_per_call,derived")
 
     def emit(name, us, derived):
         print(f"{name},{us:.1f},\"{json.dumps(derived, default=str)}\"")
 
-    if "fig3" in only:
-        results["fig3"] = fig3_core_efficiency.main(emit)
-    if "fig5" in only:
-        results["fig5"] = fig5_noc.main(emit)
-    if "noc" in only:
-        results["noc"] = contention_bench.main(emit)
-    if "compiler" in only:
-        results["compiler"] = compiler_bench.main(emit)
-    if "engine" in only:
-        results["engine"] = engine_bench.main(emit)
-    if "deploy" in only:
-        results["deploy"] = deploy_bench.main(emit, steps=args.deploy_steps)
-    if "fig6" in only:
-        results["fig6"] = fig6_riscv_power.main(emit)
-    if "table1" in only:
-        results["table1"] = table1_chip.main(emit)
-    if "kernels" in only:
-        results["kernels"] = kernel_bench.main(emit)
-    if "roofline" in only:
-        dr = os.environ.get("REPRO_DRYRUN_JSON", "dryrun_results.json")
-        results["roofline"] = roofline.main(emit, dr)
-    if "telemetry" in only:
-        results["telemetry"] = telemetry_bench.main(emit)
-    if "serve" in only:
-        results["serve"] = serve_bench.main(emit)
-    if "fleet" in only:
-        # always the tiny (CI-scale) configuration so trajectories stay
-        # comparable across hosts; the full board is a standalone run
-        results["fleet"] = fleet_bench.main(emit, tiny=True)
+    def section(name, fn):
+        """Run one bench section fault-tolerantly: a raising section
+        records `{"error": ...}` in its results slot (its trajectory
+        metrics go None, which fails any gated metric downstream) and
+        the remaining sections still run — one broken table must not
+        cost the diagnostics of the other twelve.  The harness exits
+        nonzero at the end if anything failed."""
+        if name not in only:
+            return
+        try:
+            results[name] = fn()
+        except Exception as e:
+            import traceback
+
+            traceback.print_exc()
+            results[name] = {"error": f"{type(e).__name__}: {e}"}
+            failed.append(name)
+            print(f"# section {name} FAILED: {type(e).__name__}: {e}",
+                  file=sys.stderr)
+
+    section("fig3", lambda: fig3_core_efficiency.main(emit))
+    section("fig5", lambda: fig5_noc.main(emit))
+    section("noc", lambda: contention_bench.main(emit))
+    section("compiler", lambda: compiler_bench.main(emit))
+    section("engine", lambda: engine_bench.main(emit))
+    section("deploy",
+            lambda: deploy_bench.main(emit, steps=args.deploy_steps))
+    section("fig6", lambda: fig6_riscv_power.main(emit))
+    section("table1", lambda: table1_chip.main(emit))
+    section("kernels", lambda: kernel_bench.main(emit))
+    section("roofline", lambda: roofline.main(
+        emit, os.environ.get("REPRO_DRYRUN_JSON", "dryrun_results.json")))
+    section("telemetry", lambda: telemetry_bench.main(emit))
+    section("serve", lambda: serve_bench.main(emit))
+    # fleet + fault always run the tiny (CI-scale) configurations so
+    # trajectories stay comparable across hosts; the full boards are
+    # standalone runs
+    section("fleet", lambda: fleet_bench.main(emit, tiny=True))
+    section("fault", lambda: fault_bench.main(emit, tiny=True))
 
     out = os.path.join(os.path.dirname(__file__), "results.json")
     with open(out, "w") as f:
@@ -216,6 +238,11 @@ def main(argv=None) -> None:
         with open(args.out, "w") as f:
             json.dump(traj, f, indent=1, sort_keys=True)
         print(f"# bench trajectory -> {args.out}", file=sys.stderr)
+
+    if failed:
+        print(f"# {len(failed)} section(s) failed: {', '.join(failed)}",
+              file=sys.stderr)
+        sys.exit(1)
 
 
 if __name__ == "__main__":

@@ -107,6 +107,25 @@ METRICS: dict[str, tuple[str, bool, str]] = {
     "fleet.sharded_equiv": ("higher", True, "det"),
     "fleet.domains": ("higher", False, "det"),
     "fleet.recompile_reused": ("higher", False, "det"),
+    # fault lane (PR 9): the survivability margin of the fullerene fabric
+    # over the equal-node mesh under random kills is a deterministic
+    # model output (the decentralization dividend — routers carry no
+    # compute, mesh nodes do).  The repair speedup is a same-host ratio
+    # like fleet.recompile_speedup (timing threshold).  differential_
+    # equiv and zero_cost_off are claim flags: 1.0 while all engines stay
+    # bit-identical under an active fault set / while a null FaultConfig
+    # lowers to the identical jaxpr — 0.0 is a -100% change, so any
+    # threshold gates it.  The degradation agreement tracks workload
+    # shape, not a better/worse axis: informational.
+    "fault.survivability_ratio_vs_mesh": ("higher", True, "det"),
+    "fault.saturation_ratio_vs_mesh": ("higher", False, "det"),
+    "fault.repair_speedup": ("higher", True, "timing"),
+    "fault.repair_reused": ("higher", False, "det"),
+    "fault.differential_equiv": ("higher", True, "det"),
+    "fault.zero_cost_off": ("higher", True, "det"),
+    "fault.accuracy_clean": ("higher", False, "det"),
+    "fault.accuracy_at_drop10": ("higher", False, "det"),
+    "fault.agreement_at_drop10": ("higher", False, "det"),
 }
 
 

@@ -6,7 +6,9 @@ Design (1000+-node posture, CPU-testable):
     device buffers) — here the single host writes everything, but the
     layout and the restore path are shard-aware.
   * Atomicity: write to  step_XXXX.tmp/  then os.rename -> step_XXXX/
-    (rename is atomic on POSIX).  A crashed writer leaves only .tmp.
+    (rename is atomic on POSIX).  A crashed writer leaves only .tmp —
+    which is never resumable (`latest_step` requires the renamed
+    directory plus its MANIFEST.json) and is swept on the next save.
   * Async: a writer thread drains a queue of (step, host arrays); training
     continues.  `wait()` drains before exit; a bounded queue gives
     backpressure instead of unbounded host memory growth.
@@ -62,7 +64,17 @@ class CheckpointManager:
     # -- public API ----------------------------------------------------------
 
     def save(self, step: int, tree, blocking: bool = False):
-        """Snapshot to host memory now; write in the background."""
+        """Snapshot to host memory now; write in the background.
+
+        Crash-atomicity contract: leaves land in ``step_XXXX.tmp/``
+        and only an atomic POSIX rename publishes ``step_XXXX/``, so a
+        reader (``latest_step``/``restore``) can never observe a
+        half-written checkpoint.  A writer that died mid-save leaves a
+        stale ``.tmp`` directory behind; the next ``save()`` sweeps ALL
+        stale ``step_*.tmp`` directories (any step, not just this one)
+        before writing, and the resume path ignores them entirely — a
+        ``.tmp`` is by definition incomplete and never restored from.
+        """
         host = {k: np.asarray(v) for k, v in _flatten_with_paths(tree).items()}
         if self._thread is None or blocking:
             self._write(step, host)
@@ -128,8 +140,12 @@ class CheckpointManager:
     def _write(self, step: int, host: dict):
         final = os.path.join(self.dir, f"step_{step:08d}")
         tmp = final + ".tmp"
-        if os.path.exists(tmp):
-            shutil.rmtree(tmp)
+        # sweep stale .tmp directories from crashed writers — every step,
+        # not just this one; a .tmp is by contract incomplete, never
+        # restored from, and safe to drop
+        for d in os.listdir(self.dir):
+            if d.startswith("step_") and d.endswith(".tmp"):
+                shutil.rmtree(os.path.join(self.dir, d), ignore_errors=True)
         os.makedirs(tmp)
         for key, arr in host.items():
             if arr.dtype == jnp.bfloat16:

@@ -129,7 +129,8 @@ def assign_domains(groups: list[CoreGroup],
                    flows: list[tuple[int, int, float]],
                    spec: ChipSpec,
                    n_domains: int | None = None,
-                   refine_passes: int = 6) -> DomainPlan:
+                   refine_passes: int = 6,
+                   capacity: dict[int, int] | None = None) -> DomainPlan:
     """Group core groups into level-1 domains, minimizing cross-domain
     spike traffic under the per-domain core-count capacity.
 
@@ -138,15 +139,34 @@ def assign_domains(groups: list[CoreGroup],
     contiguity is already near-optimal).  Refinement: deterministic
     first-improvement sweeps moving single groups into domains with free
     slots whenever that strictly lowers cross-domain traffic.
+
+    `capacity` optionally lowers individual domains' core budgets below
+    `spec.n_cores` (a repaired chip with dead cores — see
+    `compiler.repair`); omitted domains keep the full budget.
     """
     if n_domains is None:
         n_domains = spec.domains_needed(len(groups))
     cap = spec.n_cores
-    if len(groups) > n_domains * cap:
+    caps = [cap] * n_domains
+    for d, c in (capacity or {}).items():
+        if not 0 <= int(d) < n_domains:
+            raise ValueError(f"capacity for domain {d} outside "
+                             f"0..{n_domains - 1}")
+        caps[int(d)] = min(cap, int(c))
+    if len(groups) > sum(caps):
         raise ValueError(
-            f"{len(groups)} groups exceed {n_domains} domains x {cap} cores")
-    domain_of = {g.gid: min(i // cap, n_domains - 1)
-                 for i, g in enumerate(groups)}
+            f"{len(groups)} groups exceed the {sum(caps)} usable cores of "
+            f"{n_domains} domain(s)")
+    # contiguous fill in gid order, honouring per-domain capacity
+    # (identical to the historical i // cap fill when no cap is lowered)
+    domain_of: dict[int, int] = {}
+    d = 0
+    seed_fill = [0] * n_domains
+    for g in groups:
+        while seed_fill[d] >= caps[d]:
+            d += 1
+        domain_of[g.gid] = d
+        seed_fill[d] += 1
 
     # per-group traffic affinity toward each domain, kept incremental
     touching: dict[int, list[tuple[int, float]]] = {g.gid: [] for g in groups}
@@ -166,7 +186,7 @@ def assign_domains(groups: list[CoreGroup],
             home = domain_of[g.gid]
             aff_home = affinity(g.gid, home)
             for dom in range(n_domains):
-                if dom == home or fill[dom] >= cap:
+                if dom == home or fill[dom] >= caps[dom]:
                     continue
                 if affinity(g.gid, dom) > aff_home + 1e-12:
                     fill[home] -= 1

@@ -441,10 +441,14 @@ def domain_cache_key(groups: list[CoreGroup],
                      portal_out: list[tuple[int, float]],
                      portal_in: list[tuple[int, float]],
                      derived_seed: int, strategy: str, anneal_iters: int,
-                     congestion_weight: float, l2_weight: float) -> str:
+                     congestion_weight: float, l2_weight: float,
+                     dead_slots: tuple = ()) -> str:
     """Content hash of one domain subproblem, over gid-free canonical
     forms (flows re-expressed through local group indices) so renumbering
-    untouched layers cannot invalidate the cache."""
+    untouched layers cannot invalidate the cache.  `dead_slots` (local
+    slot ids a repaired chip may not use) extends the canon only when
+    non-empty, so fault-free domains keep their historical keys — which
+    is what makes `compiler.repair` reuse untouched domains for free."""
     gids = sorted(g.gid for g in groups)
     local = {g: i for i, g in enumerate(gids)}
     by_gid = {g.gid: g for g in groups}
@@ -456,6 +460,8 @@ def domain_cache_key(groups: list[CoreGroup],
         int(derived_seed), str(strategy), int(anneal_iters),
         round(float(congestion_weight), 12), round(float(l2_weight), 12),
     )
+    if dead_slots:
+        canon = canon + (tuple(sorted(int(s) for s in dead_slots)),)
     return hashlib.sha256(repr(canon).encode()).hexdigest()
 
 
@@ -464,14 +470,23 @@ def _place_one_domain(groups: list[CoreGroup],
                       portal_out: list[tuple[int, float]],
                       portal_in: list[tuple[int, float]],
                       derived_seed: int, strategy: str, anneal_iters: int,
-                      congestion_weight: float, l2_weight: float
+                      congestion_weight: float, l2_weight: float,
+                      dead_slots: frozenset[int] = frozenset()
                       ) -> tuple[tuple[int, ...], float]:
-    """Solve one local subproblem; returns (slots in gid order, cost)."""
+    """Solve one local subproblem; returns (slots in gid order, cost).
+    `dead_slots` removes local core slots a repaired chip may not use."""
     from repro.core import noc as NOC
 
     _, local_dist, path_load = _local_tables(
         l2_weight, congestion_weight > 0.0)
     slots = NOC.core_ids()
+    if dead_slots:
+        slots = np.array([s for s in slots if int(s) not in dead_slots])
+        if len(groups) > len(slots):
+            raise ValueError(
+                f"{len(groups)} groups need more than the {len(slots)} "
+                f"surviving cores of this domain — no spare capacity to "
+                f"remap dead cores onto")
     gids = sorted(g.gid for g in groups)
     order = {g: i for i, g in enumerate(gids)}
     sorted_groups = sorted(groups, key=lambda g: g.gid)
@@ -514,7 +529,8 @@ def place_hierarchical(groups: list[CoreGroup],
                        anneal_iters: int = 4000,
                        congestion_weight: float = 0.0,
                        cache: dict[str, DomainPlacement] | None = None,
-                       stats: dict | None = None
+                       stats: dict | None = None,
+                       faults=None
                        ) -> tuple[Placement, dict[int, DomainPlacement]]:
     """Place each domain's groups independently on the shared 33-node
     local graph, then stitch the global Placement back together.
@@ -522,6 +538,9 @@ def place_hierarchical(groups: list[CoreGroup],
     `cache` maps `DomainPlacement.cache_key` to previously solved
     subproblems (see `recompile`); hits are returned by object identity.
     `stats`, when given, receives {"domains": D, "reused": k}.
+    `faults` (a faults.FaultConfig) removes dead cores' slots from their
+    domains; only those domains get extended cache keys, so a repair
+    reuses every untouched domain's placement verbatim.
     """
     from repro.core import noc as NOC
 
@@ -530,6 +549,10 @@ def place_hierarchical(groups: list[CoreGroup],
     local_rt = NOC.RoutingTable(NOC.fullerene_adjacency(with_level2=True))
     intra, cross = dplan.split_flows(flows)
     by_gid = {g.gid: g for g in groups}
+    dead_local: dict[int, set[int]] = {}
+    for c in (faults.dead_cores if faults is not None else ()):
+        dom, loc = divmod(int(c), NOC.DOMAIN_STRIDE)
+        dead_local.setdefault(dom, set()).add(loc)
 
     assignment: dict[int, int] = {}
     placements: dict[int, DomainPlacement] = {}
@@ -551,9 +574,11 @@ def place_hierarchical(groups: list[CoreGroup],
         portal_out = sorted(out_w.items())
         portal_in = sorted(in_w.items())
         dseed = derive_domain_seed(seed, d)
+        dead = frozenset(dead_local.get(d, ()))
         key = domain_cache_key(dgroups, intra[d], portal_out, portal_in,
                                dseed, strategy, anneal_iters,
-                               congestion_weight, l2w)
+                               congestion_weight, l2w,
+                               dead_slots=tuple(sorted(dead)))
         hit = cache.get(key) if cache else None
         if hit is not None:
             dp = dataclasses.replace(hit, domain=d) if hit.domain != d else hit
@@ -561,7 +586,7 @@ def place_hierarchical(groups: list[CoreGroup],
         else:
             slots, cost = _place_one_domain(
                 dgroups, intra[d], portal_out, portal_in, dseed, strategy,
-                anneal_iters, congestion_weight, l2w)
+                anneal_iters, congestion_weight, l2w, dead_slots=dead)
             asg = {g: s for g, s in zip(gids, slots)}
             dp = DomainPlacement(
                 domain=d, slots=slots, cost=cost,

@@ -328,6 +328,9 @@ class _EngineBase:
         sim = self.sim
         tbl = self.tables
         ys = self.run_raw(spike_trains)
+        # injected transient dispatch faults fire HERE: the scan ran, the
+        # readback is lost (mid-flight), so a retry can succeed
+        sim._consume_transient_fault()
         B, T = int(spike_trains.shape[0]), int(spike_trains.shape[1])
         out_counts = jnp.sum(ys["out"], axis=1)
 
@@ -443,9 +446,12 @@ class CompiledEngine(_EngineBase):
         has_flow = [ft is not None for ft in tbl.flows]
         traced = self.trace.enabled
         trace_skips = traced and self.trace.skip_words
+        # per-hop packet drop (faults.DropPlan); None lowers the exact
+        # fault-free scan — same xs, same ops, bit-identical jaxpr
+        drop = getattr(sim, "drop_plan", None)
 
-        def step(states, spikes_t):
-            spikes = spikes_t
+        def step(states, xs):
+            spikes, t = xs if drop is not None else (xs, None)
             wall = jnp.zeros((n_active,), jnp.float32)
             nnzs, toucheds, fireds, skips = [], [], [], []
             fired_cores = {}
@@ -484,7 +490,13 @@ class CompiledEngine(_EngineBase):
                 nnzs.append(nnz)
                 toucheds.append(tsum)
                 fireds.append(fired)
-                spikes = out
+                # fired counters above are pre-drop (the source fired and
+                # committed the energy); the next layer integrates what
+                # survived the hops
+                if drop is not None and drop.keep_p[li] is not None:
+                    spikes = out * drop.mask(li, t)
+                else:
+                    spikes = out
             ys = {
                 "nnz": jnp.stack(nnzs),
                 "touched": jnp.stack(toucheds),
@@ -499,7 +511,9 @@ class CompiledEngine(_EngineBase):
 
         def one_sample(train):
             states = tuple(init_state(int(w.shape[1])) for w in weights)
-            _, ys = jax.lax.scan(step, states, train)
+            xs = (train if drop is None
+                  else (train, jnp.arange(train.shape[0])))
+            _, ys = jax.lax.scan(step, states, xs)
             return ys
 
         def run(trains):                     # (B, T, n_in) f32
@@ -632,6 +646,7 @@ class ShardedEngine(_EngineBase):
         traced = self.trace.enabled
         trace_skips = traced and self.trace.skip_words
         shl = self.sharded_layers
+        drop = getattr(sim, "drop_plan", None)
 
         def body(trains, *stacks):
             # per-device views: each P("cores") operand arrives (1, ...)
@@ -640,8 +655,9 @@ class ShardedEngine(_EngineBase):
             nzw_l = local[1::3]
             oh_l = local[2::3]
 
-            def step(states, spikes_t):
-                spikes = spikes_t                      # full (n_pre,) f32
+            def step(states, xs):
+                spikes, t = xs if drop is not None else (xs, None)
+                # spikes: full (n_pre,) f32
                 wall = jnp.zeros((n_active,), jnp.float32)
                 nnzs, toucheds, fireds, skips = [], [], [], []
                 fired_cores = {}
@@ -683,7 +699,10 @@ class ShardedEngine(_EngineBase):
                     spikes = bits[sl.pos]               # global order
                     nnzs.append(nnz)
                     toucheds.append(tsum)
+                    # fired is counted pre-drop, on the gathered globals
                     fireds.append(jnp.sum(spikes).astype(jnp.float32))
+                    if drop is not None and drop.keep_p[li] is not None:
+                        spikes = spikes * drop.mask(li, t)
                 ys = {
                     "nnz": jnp.stack(nnzs),
                     "touched": jnp.stack(toucheds),
@@ -698,7 +717,9 @@ class ShardedEngine(_EngineBase):
 
             def one_sample(train):
                 states = tuple(init_state(sl.width) for sl in shl)
-                _, ys = jax.lax.scan(step, states, train)
+                xs = (train if drop is None
+                      else (train, jnp.arange(train.shape[0])))
+                _, ys = jax.lax.scan(step, states, xs)
                 return ys
 
             return jax.vmap(one_sample)(trains)
@@ -797,6 +818,7 @@ class FusedEngine(_EngineBase):
         ]
         has_flow = [ft is not None for ft in tbl.flows]
         traced = self.trace.enabled
+        drop = getattr(sim, "drop_plan", None)
         lif_kw = dict(threshold=float(lif.threshold), leak=float(lif.leak),
                       reset=float(lif.reset),
                       partial_update=bool(lif.partial_update))
@@ -816,10 +838,10 @@ class FusedEngine(_EngineBase):
                 all_nonzero=lw.all_nonzero, block=block, interpret=interp,
                 **lif_kw)
 
-        def step(states, packed_t):          # packed_t: (B, kw0) uint16
+        def step(states, xs):                # xs: (B, kw0) uint16 [+ t]
             from repro.core.neuron import LIFState
 
-            packed = packed_t
+            packed, t = xs if drop is not None else (xs, None)
             B = packed.shape[0]
             wall = jnp.zeros((B, n_active), jnp.float32)
             nnzs, toucheds, fireds, skips = [], [], [], []
@@ -851,7 +873,12 @@ class FusedEngine(_EngineBase):
                 toucheds.append(tsum)
                 fireds.append(fired)
                 skips.append(ew.astype(jnp.float32))
-                packed = Z.pack_spike_words(out)   # next layer's spike words
+                # counters above are pre-drop; the next layer's spike
+                # words carry only the packets that survived the hops
+                nxt = (out * drop.mask(li, t)
+                       if drop is not None and drop.keep_p[li] is not None
+                       else out)
+                packed = Z.pack_spike_words(nxt)   # next layer's spike words
             ys = {
                 "nnz": jnp.stack(nnzs, axis=-1),               # (B, L)
                 "touched": jnp.stack(toucheds, axis=-1),
@@ -865,7 +892,9 @@ class FusedEngine(_EngineBase):
 
         def run(packed_trains, states):      # (B, T, kw0) uint16, LIFStates
             packed_t = jnp.swapaxes(packed_trains, 0, 1)
-            final, ys = jax.lax.scan(step, states, packed_t)
+            xs = (packed_t if drop is None
+                  else (packed_t, jnp.arange(packed_t.shape[0])))
+            final, ys = jax.lax.scan(step, states, xs)
             ys = jax.tree_util.tree_map(
                 lambda a: jnp.swapaxes(a, 0, 1), ys)
             # final states are returned so the donated membrane buffers

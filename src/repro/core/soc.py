@@ -419,10 +419,12 @@ class ChipSimulator:
         register_tables: Sequence[RegisterTable] | None = None,
         lif=None,
         trace=None,                            # telemetry.TraceConfig
+        faults=None,                           # faults.FaultConfig
     ):
         from repro.core.neuron import LIFParams  # local import to avoid cycle
         from repro.core import quant as Q
         from repro.telemetry.trace import TraceConfig
+        from repro.faults import model as FM
 
         weights = list(weights)
         n_quant = sum(isinstance(w, Q.QuantizedTensor) for w in weights)
@@ -469,6 +471,7 @@ class ChipSimulator:
         self.freq_hz = freq_hz
         self.zero_skip = zero_skip
         self.partial_update = partial_update
+        self.faults = faults if faults is not None else FM.NULL_FAULTS
         self.cycle_model = CycleModel(self.geom)
         self.core_model = E.calibrate_core()
         self.chip_model = E.calibrate_chip(self.core_model)
@@ -488,6 +491,12 @@ class ChipSimulator:
             self.adj = NOC.fullerene_adjacency()
             self._level2 = frozenset()
             self.interconnect = None
+        if self.faults.rerouted and self.faults.topology_faults():
+            # repaired chip: CMRouter tables are reprogrammed on the
+            # surviving graph, so routes below detour around the faults
+            # (and the replay prices the detours); unreachable pairs fail
+            # loudly in _compile_layer_routes
+            self.adj = FM.masked_adjacency(self.adj, self.faults)
         self.routing = NOC.RoutingTable(self.adj)
         # routes are compiled ONCE from the mapping; each timestep only
         # replays them (no BFS in the simulation loop)
@@ -507,6 +516,12 @@ class ChipSimulator:
         self.register_tables = (list(register_tables)
                                 if register_tables is not None
                                 else self._build_register_tables())
+        # static faults fold into the weights/tables HERE — before the
+        # touch masks, so every engine inherits them with no lowering
+        # changes; a null config returns without touching anything
+        FM.apply_chip_faults(self)
+        self.drop_plan = FM.build_drop_plan(self)
+        self._dispatch_count = 0
         # connectivity masks for the partial-update touch set (see
         # neuron.touch_mask): computed AFTER quantization so both engines
         # see the synapses the chip actually programs
@@ -595,6 +610,18 @@ class ChipSimulator:
 
     # -- execution ----------------------------------------------------------
 
+    def _consume_transient_fault(self) -> None:
+        """Raise `TransientChipFault` when this dispatch index is listed in
+        `faults.transient_dispatches`.  Engines call it after the scan ran
+        but before results are read back — a mid-flight loss, so a retry
+        (same FaultConfig, next dispatch index) can succeed."""
+        i = self._dispatch_count
+        self._dispatch_count += 1
+        if i in self.faults.transient_dispatches:
+            from repro.faults.model import TransientChipFault
+            raise TransientChipFault(
+                f"injected transient fault at dispatch {i}")
+
     def run(self, spike_train: jax.Array) -> tuple[jax.Array, ChipReport]:
         """spike_train: (T, n_in) binary.  Returns (out_spike_counts, report).
 
@@ -619,6 +646,7 @@ class ChipSimulator:
             reports.append(rep)
             if self._last_trace is not None:
                 traces.append(self._last_trace)
+        self._consume_transient_fault()
         if traces:
             from repro.telemetry.trace import ChipTrace
             self._last_trace = ChipTrace.concat(traces)
@@ -703,7 +731,14 @@ class ChipSimulator:
                     acc.noc_energy_pj += rep.energy_pj
                     acc.spikes_routed += fired
                     step_load += rep.router_load
-                spikes = out
+                # per-hop packet drop (faults.DropPlan): fired counters
+                # above are pre-drop (the source committed the energy);
+                # what the next layer integrates is post-drop
+                if (self.drop_plan is not None
+                        and self.drop_plan.keep_p[li] is not None):
+                    spikes = out * self.drop_plan.mask(li, t)
+                else:
+                    spikes = out
             out_counts = out_counts + spikes
             core_wall = max(per_core_cycles.values()) if per_core_cycles else 1.0
             # bottleneck-router contention stalls the timestep barrier

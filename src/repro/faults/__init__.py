@@ -1,0 +1,37 @@
+"""repro.faults — deterministic, seeded fault injection + tolerance.
+
+The subsystem has two halves:
+
+* `faults.model` — the `FaultConfig` describing a faulty chip (dead
+  cores, failed level-1/level-2 routers and links, stuck-at / bit-flip
+  corruption of `RegisterTable` codebook words, per-hop spike-packet
+  drop probability, injected transient dispatch faults) plus the
+  lowering helpers that fold it into `ChipSimulator` state: static
+  weight masks for topology faults, corrupted register tables, and the
+  seeded per-timestep `DropPlan` every engine replays bit-identically.
+* `faults.survivability` — masked-graph survivability studies (routable
+  pairs + sustained injection rate under k random router kills),
+  fullerene vs the equal-node mesh.
+
+Every random choice derives from `numpy.random.SeedSequence` seeds (the
+PR-8 `derive_domain_seed` convention) — no global RNG anywhere, so a
+`FaultConfig` is a value: the same config + seed produces the same
+faulty chip in every engine and every process.  A fault-free config is
+provably zero-cost: the engines lower to bit-identical jaxprs with and
+without it (asserted in tests/test_faults.py).
+"""
+from repro.faults.model import (CodebookFault, DropPlan, FaultConfig,
+                                NULL_FAULTS, TransientChipFault,
+                                apply_chip_faults, build_drop_plan,
+                                derive_fault_seed, masked_adjacency,
+                                sample_faults)
+from repro.faults.survivability import (routable_fraction,
+                                        masked_saturation_rate,
+                                        survivability_study)
+
+__all__ = [
+    "CodebookFault", "DropPlan", "FaultConfig", "NULL_FAULTS",
+    "TransientChipFault", "apply_chip_faults", "build_drop_plan",
+    "derive_fault_seed", "masked_adjacency", "masked_saturation_rate",
+    "routable_fraction", "sample_faults", "survivability_study",
+]

@@ -67,6 +67,10 @@ class SnnRequest:
     energy_pj: float = 0.0
     pj_per_sop: float = 0.0
     dma_pj: float = 0.0
+    # True when the result came from the tenant's degraded (repaired-
+    # chip) model because the primary's circuit was open or its retries
+    # were exhausted — completed, not shed, but accuracy may differ
+    degraded: bool = False
     # monotonic lifecycle timestamps (time.monotonic seconds):
     # t_enqueue <= t_dequeue <= t_complete once served
     t_enqueue: float | None = None

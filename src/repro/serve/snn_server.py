@@ -33,6 +33,16 @@ Failure is transactional per group: if the engine raises, the group's
 `t_dequeue` stamps are cleared, no metrics are recorded for it, the
 requests stay queued, and the exception propagates.
 
+Resilience (see serve/resilience.py): transient dispatch failures —
+`faults.TransientChipFault` and `DispatchTimeout` — are retried with
+jittered exponential backoff before the transactional unwind; repeated
+failures open a per-tenant circuit breaker; and a tenant registered with
+a `degraded_sim` (a `compiler.repair`-ed chip) completes requests
+through it with `degraded=True` instead of shedding when the primary is
+unavailable.  Fatal errors (anything non-transient) propagate exactly as
+before.  Surfaced as `snn_faults_injected` / `snn_retries` /
+`snn_degraded_total` metrics.
+
 Metrics: the server maintains a `telemetry.MetricsRegistry` with global
 series (latency/queue-wait/occupancy histograms, queue-depth gauge,
 request/shed/deadline counters) plus per-tenant labelled series
@@ -50,6 +60,9 @@ from repro.core.soc import ChipSimulator, HostDmaModel
 from repro.serve import admission as ADM
 from repro.serve.admission import (DEADLINE_EXCEEDED, QUEUED, SERVED, SHED,
                                    SnnRequest)
+from repro.serve.resilience import (RETRYABLE, CircuitBreaker,
+                                    CircuitOpenError, DispatchTimeout,
+                                    RetryPolicy)
 from repro.telemetry.metrics import MetricsRegistry
 
 __all__ = ["SnnRequest", "SnnServer", "Tenant"]
@@ -58,7 +71,8 @@ __all__ = ["SnnRequest", "SnnServer", "Tenant"]
 class Tenant:
     """One registered model: a compiled simulator plus residency state."""
 
-    def __init__(self, name: str, sim: ChipSimulator):
+    def __init__(self, name: str, sim: ChipSimulator,
+                 degraded_sim: ChipSimulator | None = None):
         if sim.engine not in ("compiled", "fused"):
             raise ValueError("SnnServer requires an array-engine simulator "
                              "(engine='compiled' or 'fused')")
@@ -68,6 +82,17 @@ class Tenant:
         self.n_out = int(sim.weights[-1].shape[1])
         self.core_ids = frozenset(sim.mapping.active_core_ids())
         self.resident = False
+        if degraded_sim is not None:
+            if degraded_sim.engine not in ("compiled", "fused"):
+                raise ValueError(
+                    "degraded_sim must be an array-engine simulator")
+            din = int(degraded_sim.weights[0].shape[0])
+            dout = int(degraded_sim.weights[-1].shape[1])
+            if (din, dout) != (self.n_in, self.n_out):
+                raise ValueError(
+                    f"degraded_sim io ({din}, {dout}) does not match the "
+                    f"primary's ({self.n_in}, {self.n_out})")
+        self.degraded_sim = degraded_sim
 
 
 class SnnServer:
@@ -77,11 +102,24 @@ class SnnServer:
                  registry: MetricsRegistry | None = None,
                  max_queue_depth: int | None = 256,
                  dma: HostDmaModel | None = None,
-                 clock=time.monotonic):
+                 clock=time.monotonic,
+                 retry: RetryPolicy | None = None,
+                 dispatch_timeout_s: float | None = None,
+                 breaker_threshold: int = 0,
+                 breaker_cooldown_s: float = 5.0,
+                 sleep=time.sleep):
         self.slots = batch_slots
         self.max_queue_depth = max_queue_depth
         self.dma = dma if dma is not None else HostDmaModel()
         self.clock = clock
+        # resilience knobs: retries cover ONLY transient faults/timeouts;
+        # breaker_threshold=0 disables circuit breaking entirely
+        self.retry = retry if retry is not None else RetryPolicy()
+        self.dispatch_timeout_s = dispatch_timeout_s
+        self.breaker_threshold = int(breaker_threshold)
+        self.breaker_cooldown_s = float(breaker_cooldown_s)
+        self.sleep = sleep
+        self.breakers: dict[str, CircuitBreaker] = {}
         self.queue: list[SnnRequest] = []
         self.tenants: dict[str, Tenant] = {}
         self.metrics = registry if registry is not None else MetricsRegistry()
@@ -120,19 +158,35 @@ class SnnServer:
         self._m_swap_cycles = m.counter(
             "snn_model_swap_cycles_total",
             "reconfiguration DMA cycles (register-table loads)")
+        self._m_faults = m.counter(
+            "snn_faults_injected",
+            "transient dispatch faults observed (injected or timeout)")
+        self._m_retries = m.counter(
+            "snn_retries", "dispatch retries after transient faults")
+        self._m_degraded = m.counter(
+            "snn_degraded_total",
+            "requests completed through a degraded (repaired-chip) model")
         self._per_tenant: dict[str, dict] = {}
         if sim is not None:
             self.add_model("default", sim)
 
     # -- tenancy ------------------------------------------------------------
 
-    def add_model(self, name: str, sim: ChipSimulator) -> Tenant:
+    def add_model(self, name: str, sim: ChipSimulator,
+                  degraded_sim: ChipSimulator | None = None) -> Tenant:
         """Register a compiled network under `name`.  Tenants with
-        disjoint core sets co-reside; overlapping tenants swap."""
+        disjoint core sets co-reside; overlapping tenants swap.
+        `degraded_sim` (typically a `compiler.repair`-ed chip) serves the
+        tenant's requests with `degraded=True` whenever the primary is
+        unavailable (open circuit, exhausted transient retries)."""
         if name in self.tenants:
             raise ValueError(f"model {name!r} already registered")
-        t = Tenant(name, sim)
+        t = Tenant(name, sim, degraded_sim=degraded_sim)
         self.tenants[name] = t
+        if self.breaker_threshold > 0:
+            self.breakers[name] = CircuitBreaker(
+                failure_threshold=self.breaker_threshold,
+                cooldown_s=self.breaker_cooldown_s)
         m, lbl = self.metrics, {"tenant": name}
         self._per_tenant[name] = {
             "requests": m.counter("snn_requests_total",
@@ -237,7 +291,8 @@ class SnnServer:
             batch = np.zeros((self.slots, T, tenant.n_in), np.float32)
             for i, r in enumerate(group):
                 batch[i] = r.events
-            counts, reports = tenant.sim.run_batch(jnp.asarray(batch))
+            counts, reports, degraded = self._dispatch(tenant,
+                                                       jnp.asarray(batch))
             counts = np.asarray(counts)
         except Exception:
             for r in group:
@@ -256,6 +311,9 @@ class SnnServer:
             r.dma_pj = up_pj + out_pj
             r.t_complete = t_complete
             r.status = SERVED
+            r.degraded = degraded
+            if degraded:
+                self._m_degraded.inc()
             self._m_dma_pj.inc(r.dma_pj)
             self._m_served.inc()
             per["served"].inc()
@@ -265,6 +323,70 @@ class SnnServer:
             self._m_pj.observe(r.energy_pj)
             self._m_pj_sop.observe(r.pj_per_sop)
             per["pj_sop"].observe(r.pj_per_sop)
+
+    def _dispatch(self, tenant: Tenant, batch):
+        """Resilient dispatch for one slot group.
+
+        Breaker gate -> primary with bounded retry over RETRYABLE
+        failures (`TransientChipFault`, `DispatchTimeout`) -> degraded
+        fallback.  Returns `(counts, reports, degraded_flag)`.  Anything
+        non-retryable — a real engine bug — propagates immediately to
+        `_serve_group`'s transactional unwind, exactly as before this
+        layer existed.
+        """
+        breaker = self.breakers.get(tenant.name)
+        if breaker is not None and not breaker.allow(self.clock()):
+            # circuit open: primary never tried, cooldown not yet elapsed
+            return self._degraded_dispatch(tenant, batch, None)
+        last: Exception | None = None
+        for attempt in range(self.retry.max_retries + 1):
+            if attempt > 0:
+                self._m_retries.inc()
+                self.sleep(self.retry.delay_s(attempt - 1))
+            try:
+                counts, reports = self._primary_dispatch(tenant, batch)
+            except RETRYABLE as e:
+                self._m_faults.inc()
+                last = e
+                continue
+            if breaker is not None:
+                breaker.record_success()
+            return counts, reports, False
+        # transient retries exhausted: one dispatch-level failure
+        if breaker is not None:
+            breaker.record_failure(self.clock())
+        return self._degraded_dispatch(tenant, batch, last)
+
+    def _primary_dispatch(self, tenant: Tenant, batch):
+        """One primary engine launch, classified against the per-dispatch
+        timeout budget.  The engines run synchronously, so the timeout is
+        detected post-hoc — a wedged dispatch on real hardware is
+        indistinguishable from a lost one, so it is transient/retryable."""
+        t0 = self.clock()
+        counts, reports = tenant.sim.run_batch(batch)
+        elapsed = self.clock() - t0
+        if (self.dispatch_timeout_s is not None
+                and elapsed > self.dispatch_timeout_s):
+            raise DispatchTimeout(
+                f"tenant {tenant.name!r}: dispatch took {elapsed:.3f}s, "
+                f"over the {self.dispatch_timeout_s}s budget")
+        return counts, reports
+
+    def _degraded_dispatch(self, tenant: Tenant, batch, cause):
+        """Complete the group through the tenant's degraded simulator
+        (`degraded=True` on every result) instead of shedding.  With no
+        degraded model the failure propagates transactionally: `cause`
+        when the primary's retries were exhausted, `CircuitOpenError`
+        when the circuit was open — either way the group stays queued."""
+        if tenant.degraded_sim is None:
+            if cause is not None:
+                raise cause
+            raise CircuitOpenError(
+                f"tenant {tenant.name!r}: circuit open and no degraded "
+                f"model registered; requests stay queued until the "
+                f"cooldown elapses")
+        counts, reports = tenant.degraded_sim.run_batch(batch)
+        return counts, reports, True
 
     def step(self) -> list[SnnRequest]:
         """One dispatch round: expire overdue requests, then form and

@@ -1,0 +1,141 @@
+"""Property sweeps over the serving tier's admission policy.
+
+Hypothesis-driven invariants for the pure policy half of the serve tier
+(`serve.admission`) — the request-shape contract of `validate_events`
+and the selection invariants of `expired`/`form_group` that the
+dispatch loop's transactionality leans on:
+
+* validation either returns a binary f32 array of the declared shape or
+  raises ValueError — it never crashes with anything else and never
+  mutates its input;
+* no request is both expired and grouped in the same round;
+* a formed group is one (model, T) bucket, at most `slots` long, in
+  oldest-deadline-first order (FIFO for no-deadline requests), and
+  stable under ties.
+
+Runs with or without hypothesis installed (see tests/hypothesis_compat).
+"""
+import math
+
+import numpy as np
+import pytest
+
+from hypothesis_compat import HAVE_HYPOTHESIS, given, settings, st
+from repro.serve.admission import (SnnRequest, expired, form_group,
+                                   validate_events)
+
+if HAVE_HYPOTHESIS:
+    finite_floats = st.floats(allow_nan=True, allow_infinity=False,
+                              width=32)
+    event_arrays = st.lists(
+        st.lists(finite_floats, min_size=1, max_size=6),
+        min_size=0, max_size=5).map(
+            lambda rows: np.asarray(rows, np.float32)
+            if rows and len({len(r) for r in rows}) == 1
+            else np.zeros((0, 4), np.float32))
+
+    request_lists = st.lists(
+        st.tuples(
+            st.sampled_from(["a", "b"]),               # model
+            st.integers(min_value=1, max_value=3),     # timesteps
+            st.one_of(st.none(),
+                      st.floats(min_value=0.0, max_value=10.0)),  # deadline
+            st.floats(min_value=0.0, max_value=10.0),  # enqueue time
+        ),
+        min_size=0, max_size=12)
+else:                                    # inert placeholders; tests skip
+    event_arrays = request_lists = None
+
+
+def _mk_queue(raw):
+    queue = []
+    for uid, (model, T, deadline, t_enq) in enumerate(raw):
+        r = SnnRequest(uid=uid, events=np.zeros((T, 4), np.float32),
+                       model=model)
+        r.t_enqueue = t_enq
+        r.deadline = deadline
+        queue.append(r)
+    return queue
+
+
+@settings(max_examples=60, deadline=None)
+@given(events=event_arrays)
+def test_validate_events_returns_binary_or_raises(events):
+    n_in = 4
+    before = events.copy()
+    try:
+        out = validate_events(events, n_in, uid=0)
+    except ValueError:
+        pass                             # the only acceptable failure
+    else:
+        assert out.dtype == np.float32
+        assert out.ndim == 2 and out.shape[1] == n_in
+        assert out.shape[0] >= 1
+        assert np.all((out == 0.0) | (out == 1.0))
+    np.testing.assert_array_equal(events, before)   # input never mutated
+
+
+@settings(max_examples=30, deadline=None)
+@given(scale=st.floats(min_value=0.01, max_value=0.99))
+def test_validate_events_rejects_every_non_binary_value(scale):
+    ev = np.zeros((3, 4), np.float32)
+    ev[1, 2] = scale
+    with pytest.raises(ValueError, match="binary"):
+        validate_events(ev, 4, uid=1)
+
+
+@settings(max_examples=60, deadline=None)
+@given(raw=request_lists,
+       now=st.floats(min_value=0.0, max_value=12.0),
+       slots=st.integers(min_value=1, max_value=4))
+def test_expired_and_grouped_are_disjoint(raw, now, slots):
+    queue = _mk_queue(raw)
+    dead = expired(queue, now)
+    for r in dead:
+        assert r.deadline is not None and now >= r.deadline
+    gone = {id(r) for r in dead}
+    live = [r for r in queue if id(r) not in gone]
+    group = form_group(live, slots, now)
+    assert not ({id(r) for r in group} & {id(r) for r in dead})
+
+
+@settings(max_examples=60, deadline=None)
+@given(raw=request_lists,
+       now=st.floats(min_value=0.0, max_value=12.0),
+       slots=st.integers(min_value=1, max_value=4))
+def test_formed_group_is_one_bucket_in_deadline_order(raw, now, slots):
+    queue = _mk_queue(raw)
+    group = form_group(queue, slots, now)
+    assert len(group) <= slots
+    assert len({(r.model, r.timesteps) for r in group}) <= 1
+    keys = [(r.deadline if r.deadline is not None else math.inf,
+             r.t_enqueue if r.t_enqueue is not None else math.inf)
+            for r in group]
+    assert keys == sorted(keys)
+    # the chosen bucket's head is the most urgent across all buckets
+    if group:
+        head = keys[0]
+        for r in queue:
+            assert head <= (r.deadline if r.deadline is not None
+                            else math.inf,
+                            r.t_enqueue if r.t_enqueue is not None
+                            else math.inf) or (
+                (r.model, r.timesteps) == (group[0].model,
+                                           group[0].timesteps))
+
+
+@settings(max_examples=30, deadline=None)
+@given(n=st.integers(min_value=2, max_value=8))
+def test_group_order_stable_under_deadline_ties(n):
+    # identical deadlines: enqueue order (FIFO) breaks the tie, and the
+    # selection must be deterministic across calls
+    queue = []
+    for uid in range(n):
+        r = SnnRequest(uid=uid, events=np.zeros((2, 4), np.float32))
+        r.t_enqueue = float(uid)
+        r.deadline = 5.0
+        queue.append(r)
+    g1 = form_group(queue, n, now=0.0)
+    g2 = form_group(list(reversed(queue)), n, now=0.0)
+    assert [r.uid for r in g1] == list(range(n))
+    assert [r.uid for r in g1] == [r.uid for r in g2]

@@ -90,3 +90,32 @@ def test_crash_resume_cycle(tmpdir_ckpt):
     assert step == 50
     np.testing.assert_allclose(
         np.asarray(restored["params"]["w"]), np.asarray(t["params"]["w"]))
+
+
+def test_stale_tmp_swept_on_next_save_and_never_resumed(tmpdir_ckpt):
+    """Crash recovery: a writer that died mid-save leaves step_XXXX.tmp/
+    with real leaf files in it.  The contract (see save's docstring) is
+    that the next save() sweeps EVERY stale .tmp — any step, not just
+    its own — and that the resume path never considers one, even when
+    the .tmp's step is newer than every published checkpoint."""
+    m = CheckpointManager(tmpdir_ckpt, async_writes=False)
+    t = tree()
+    m.save(5, t)
+    # fabricate a crashed writer at a NEWER step: leaf files present,
+    # manifest written, but the publishing rename never happened
+    stale = os.path.join(tmpdir_ckpt, "step_00000099.tmp")
+    os.makedirs(stale)
+    np.save(os.path.join(stale, "params__w.npy"), np.zeros((3, 4)))
+    with open(os.path.join(stale, "MANIFEST.json"), "w") as f:
+        f.write('{"step": 99, "leaves": []}')
+    # never resumed from, even though 99 > 5
+    assert m.latest_step() == 5
+    step, _ = m.restore_latest(t)
+    assert step == 5
+    # the next save sweeps it and publishes normally
+    m.save(6, t)
+    assert not os.path.exists(stale)
+    assert m.latest_step() == 6
+    contents = sorted(d for d in os.listdir(tmpdir_ckpt)
+                      if d.endswith(".tmp"))
+    assert contents == []

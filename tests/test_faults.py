@@ -1,0 +1,278 @@
+"""Fault-injection subsystem: differential engine parity under faults,
+the zero-cost-off jaxpr claim, seeded sampling determinism, codebook
+corruption, fault-aware compiler repair, and survivability sanity.
+
+These pin the PR-9 contracts:
+* one FaultConfig + seed => bit-identical spikes across the reference
+  oracle and both array engines (the fault model lowers to static state
+  + a shared DropPlan, never to per-engine control flow);
+* a fault-free config is provably free — the compiled engine lowers to
+  the SAME jaxpr with and without it;
+* `compiler.repair` reroutes on the fault-masked graph while reusing
+  every unaffected per-domain placement from the PR-8 cache, and a
+  repaired network never routes through a killed router;
+* dead cores remap onto spare capacity, loudly failing when none exists.
+"""
+import re
+
+import jax
+import numpy as np
+import pytest
+
+from repro import compiler as COMP
+from repro.compiler.ir import from_layer_sizes
+from repro.core import noc as NOC
+from repro.core.soc import ChipSimulator
+from repro.faults import (CodebookFault, FaultConfig, NULL_FAULTS,
+                          TransientChipFault, masked_adjacency,
+                          sample_faults, survivability_study)
+
+SIZES = [64, 96, 96, 16]          # widths stay multiples of 16 (fused pack)
+FAULTS = FaultConfig(dead_cores=(14,), failed_routers=(3,),
+                     drop_p=0.15, seed=7)
+
+
+def _weights(sizes=SIZES, seed=0):
+    rng = np.random.default_rng(seed)
+    return [np.asarray(rng.normal(0, 1.2 / np.sqrt(a), (a, b)), np.float32)
+            for a, b in zip(sizes[:-1], sizes[1:])]
+
+
+def _trains(sizes=SIZES, batch=4, T=6, seed=1):
+    rng = np.random.default_rng(seed)
+    return np.asarray(rng.random((batch, T, sizes[0])) < 0.25, np.float32)
+
+
+def _sim(engine, faults=None, sizes=SIZES, seed=0):
+    return ChipSimulator(_weights(sizes, seed), engine=engine, faults=faults)
+
+
+# ---------------------------------------------------------------------------
+# differential parity: same faults, same spikes, every engine
+
+
+def test_engines_bit_identical_under_faults():
+    trains = _trains()
+    counts, reports = {}, {}
+    for eng in ("reference", "compiled", "fused"):
+        c, r = _sim(eng, FAULTS).run_batch(trains)
+        counts[eng], reports[eng] = np.asarray(c), r
+    assert np.array_equal(counts["reference"], counts["compiled"])
+    assert np.array_equal(counts["reference"], counts["fused"])
+    for eng in ("compiled", "fused"):
+        for a, b in zip(reports["reference"], reports[eng]):
+            rel = abs(a.energy_pj - b.energy_pj) / max(abs(a.energy_pj), 1.0)
+            assert rel <= 1e-6
+
+
+def test_fault_config_is_deterministic_across_instances():
+    trains = _trains()
+    c1, _ = _sim("compiled", FAULTS).run_batch(trains)
+    c2, _ = _sim("compiled", FaultConfig(dead_cores=(14,),
+                                         failed_routers=(3,),
+                                         drop_p=0.15, seed=7)
+                 ).run_batch(trains)
+    assert np.array_equal(np.asarray(c1), np.asarray(c2))
+
+
+def test_faults_actually_change_the_output():
+    trains = _trains()
+    clean, _ = _sim("compiled").run_batch(trains)
+    faulty, _ = _sim("compiled", FAULTS).run_batch(trains)
+    assert not np.array_equal(np.asarray(clean), np.asarray(faulty))
+
+
+def test_drop_seed_changes_the_loss_pattern():
+    # the per-layer keep masks are the seeded state every engine replays;
+    # a different fault seed must yield a different loss pattern, the
+    # same seed the identical one
+    p1 = _sim("compiled", FaultConfig(drop_p=0.15, seed=1)).drop_plan
+    p2 = _sim("compiled", FaultConfig(drop_p=0.15, seed=2)).drop_plan
+    p1b = _sim("compiled", FaultConfig(drop_p=0.15, seed=1)).drop_plan
+    m1 = np.asarray(p1.mask(0, 0))
+    assert not np.array_equal(m1, np.asarray(p2.mask(0, 0)))
+    assert np.array_equal(m1, np.asarray(p1b.mask(0, 0)))
+    # masks vary over timesteps too (per-t key folding)
+    assert not np.array_equal(m1, np.asarray(p1.mask(0, 1)))
+
+
+# ---------------------------------------------------------------------------
+# zero-cost off: the hooks vanish from the lowered program
+
+
+def _jaxpr(sim):
+    x = np.zeros((2, 4, SIZES[0]), np.float32)
+    s = str(jax.make_jaxpr(sim.array_engine().run_raw)(x))
+    # custom_vjp params embed function reprs with raw memory addresses;
+    # normalize those away so only structural differences remain
+    return re.sub(r"0x[0-9a-f]+", "0x", s)
+
+
+def test_null_faults_lower_to_identical_jaxpr():
+    assert _jaxpr(_sim("compiled")) == _jaxpr(_sim("compiled", NULL_FAULTS))
+    assert _jaxpr(_sim("compiled")) == _jaxpr(_sim("compiled", FaultConfig()))
+
+
+def test_active_drop_plan_changes_the_jaxpr():
+    assert (_jaxpr(_sim("compiled"))
+            != _jaxpr(_sim("compiled", FaultConfig(drop_p=0.2, seed=3))))
+
+
+# ---------------------------------------------------------------------------
+# sampling + masking + codebook corruption
+
+
+def test_sample_faults_deterministic_per_trial():
+    kw = dict(routers=NOC.router_ids(), cores=NOC.core_ids(),
+              router_kills=2, core_kills=1)
+    assert sample_faults(5, **kw) == sample_faults(5, **kw)
+    assert sample_faults(5, **kw) != sample_faults(5, trial=1, **kw)
+    assert sample_faults(5, **kw) != sample_faults(6, **kw)
+
+
+def test_masked_adjacency_removes_failed_routers_symmetrically():
+    adj = NOC.fullerene_adjacency()
+    f = FaultConfig(failed_routers=(3,), failed_links=((0, 1),))
+    m = masked_adjacency(adj, f)
+    assert m[3].sum() == 0 and m[:, 3].sum() == 0
+    assert m[0, 1] == 0 and m[1, 0] == 0
+    assert np.array_equal(m, m.T)
+    # untouched rows keep their degree
+    assert m[7].sum() == adj[7].sum() - adj[7, 3]
+
+
+def test_fault_node_outside_graph_raises():
+    with pytest.raises(ValueError, match="outside"):
+        _sim("compiled", FaultConfig(dead_cores=(47,)))
+
+
+def _quant_sim(faults=None):
+    from repro.core.quant import CodebookConfig
+
+    return ChipSimulator(_weights(), engine="compiled",
+                         quant_cfg=CodebookConfig(n_levels=8, bit_width=8),
+                         faults=faults)
+
+
+def test_codebook_fault_changes_tables_deterministically():
+    f = FaultConfig(codebook_faults=(
+        CodebookFault(core_id=12, word=0, kind="stuck", value=3),))
+    t1 = _quant_sim(f).register_tables
+    t2 = _quant_sim(f).register_tables
+    clean = _quant_sim().register_tables
+    changed = any(not np.array_equal(np.asarray(a.codebook()),
+                                     np.asarray(b.codebook()))
+                  for a, b in zip(t1, clean))
+    same = all(np.array_equal(np.asarray(a.codebook()),
+                              np.asarray(b.codebook()))
+               for a, b in zip(t1, t2))
+    assert changed and same
+
+
+def test_codebook_fault_on_unquantized_sim_fails_loudly():
+    f = FaultConfig(codebook_faults=(
+        CodebookFault(core_id=12, word=0, kind="stuck", value=3),))
+    with pytest.raises(ValueError, match="quantized"):
+        _sim("compiled", f)
+
+
+def test_transient_dispatch_fault_raises_then_clears():
+    sim = _sim("compiled", FaultConfig(transient_dispatches=(0,)))
+    trains = _trains(batch=2, T=4)
+    with pytest.raises(TransientChipFault):
+        sim.run_batch(trains)
+    counts, _ = sim.run_batch(trains)      # dispatch 1: healthy again
+    clean, _ = _sim("compiled").run_batch(trains)
+    assert np.array_equal(np.asarray(counts), np.asarray(clean))
+
+
+# ---------------------------------------------------------------------------
+# fault-aware repair
+
+
+def _board():
+    sizes = [64] + [96] * 8 + [16]
+    spec = COMP.ChipSpec(neurons_per_core=8, max_domains=8)
+    return from_layer_sizes(sizes), spec
+
+
+def test_repair_router_kill_reuses_all_placements():
+    net, spec = _board()
+    kw = dict(seed=0, anneal_iters=800)
+    prev = COMP.compile_network(net, spec, **kw)
+    faults = FaultConfig(failed_routers=(3,))
+    rep = COMP.repair(net, prev, faults, **kw)
+    # a router kill changes no domain membership, so every cached
+    # per-domain placement is reused — the repair is pure re-route
+    assert rep.recompile_stats["reused"] == rep.recompile_stats["domains"]
+    assert rep.faults is not None and rep.faults.rerouted
+    routed = {int(n) for fl in rep.routed.layer_flows.values()
+              for f in fl for uv in f.links for n in uv}
+    assert 3 not in routed
+    # and matches a from-scratch faulty compile bit for bit
+    fresh = COMP.compile_network(net, spec,
+                                 faults=faults.with_rerouted(), **kw)
+    assert rep.placement.assignment == fresh.placement.assignment
+    assert rep.cost == fresh.cost
+
+
+def test_repaired_network_runs_end_to_end():
+    net, spec = _board()
+    kw = dict(seed=0, anneal_iters=800)
+    prev = COMP.compile_network(net, spec, **kw)
+    rep = COMP.repair(net, prev, FaultConfig(failed_routers=(3,)), **kw)
+    sizes = [64] + [96] * 8 + [16]
+    sim = ChipSimulator(_weights(sizes), engine="compiled",
+                        mapping=rep.to_soc_mapping(), faults=rep.faults)
+    counts, _ = sim.run_batch(_trains(sizes, batch=2, T=4))
+    assert np.asarray(counts).shape == (2, 16)
+
+
+def test_repair_dead_core_remaps_onto_spare_capacity():
+    net, spec = _board()
+    kw = dict(seed=0, anneal_iters=800, spread=False)
+    prev = COMP.compile_network(net, spec, **kw)
+    used = sorted({int(c) for c in prev.placement.assignment.values()})
+    dead = used[0]
+    rep = COMP.repair(net, prev, FaultConfig(dead_cores=(dead,)), **kw)
+    assert dead not in set(rep.placement.assignment.values())
+    assert len(set(rep.placement.assignment.values())) == len(used)
+
+
+def test_repair_without_spare_capacity_fails_loudly():
+    sizes = [64] + [96] * 8 + [16]
+    net = from_layer_sizes(sizes)
+    spec = COMP.ChipSpec(neurons_per_core=8, max_domains=8)
+    kw = dict(seed=0, anneal_iters=800)
+    prev = COMP.compile_network(net, spec, **kw)   # spread fills every core
+    used = sorted({int(c) for c in prev.placement.assignment.values()})
+    with pytest.raises(ValueError):
+        COMP.repair(net, prev, FaultConfig(dead_cores=(used[0],)), **kw)
+
+
+def test_disconnecting_fault_set_raises_value_error():
+    sizes = [48, 64, 16]
+    net = from_layer_sizes(sizes)
+    prev = COMP.compile_network(net, seed=0, anneal_iters=400)
+    # kill every level-1 router: nothing can route
+    faults = FaultConfig(failed_routers=tuple(NOC.router_ids()))
+    with pytest.raises(ValueError):
+        COMP.repair(net, prev, faults, seed=0, anneal_iters=400)
+
+
+# ---------------------------------------------------------------------------
+# survivability
+
+
+def test_survivability_study_fullerene_beats_mesh():
+    s = survivability_study(k=4, trials=8, seed=0)
+    assert s["routable_ratio_vs_mesh"] > 1.0
+    assert s["saturation_ratio_vs_mesh"] > 1.0
+    assert 0.0 < s["fullerene"]["routable_frac"] <= 1.0
+    assert 0.0 < s["mesh"]["routable_frac"] <= 1.0
+
+
+def test_survivability_study_is_seeded():
+    a = survivability_study(k=2, trials=4, seed=3)
+    b = survivability_study(k=2, trials=4, seed=3)
+    assert a == b

@@ -300,3 +300,145 @@ def test_host_dma_model_packetization():
     assert pj2 > pj1
     assert register_table_bytes(
         ChipSimulator(_net(), engine="compiled").register_tables[0]) > 0
+
+
+# ---------------------------------------------------------------------------
+# PR 9: dispatch resilience — retry, timeout, circuit breaking, degraded
+
+
+from repro.faults import FaultConfig, TransientChipFault  # noqa: E402
+from repro.serve.resilience import (CircuitOpenError,  # noqa: E402
+                                    DispatchTimeout, RetryPolicy)
+
+
+def _faulty_sim(*dispatches):
+    return ChipSimulator(_net(), engine="compiled",
+                         faults=FaultConfig(
+                             transient_dispatches=tuple(dispatches)))
+
+
+def test_retry_recovers_from_injected_transient_fault():
+    srv = SnnServer(_faulty_sim(0), batch_slots=4,
+                    retry=RetryPolicy(max_retries=2, base_delay_s=0.0))
+    rng = np.random.default_rng(3)
+    r = srv.submit(SnnRequest(uid=0, events=_events(rng)))
+    done = srv.run()
+    assert done[0].status == SERVED and not done[0].degraded
+    assert srv._m_faults.value == 1
+    assert srv._m_retries.value == 1
+    assert srv._m_degraded.value == 0
+
+
+def test_mid_scan_chip_fault_is_transactional_when_retries_off():
+    """Satellite: a transient fault from the fault model (the scan ran,
+    the readback was lost) with retries disabled must take the exact
+    PR-7 transactional unwind — queue, stamps, and metrics untouched."""
+    srv = SnnServer(_faulty_sim(0), batch_slots=4,
+                    retry=RetryPolicy(max_retries=0))
+    rng = np.random.default_rng(4)
+    reqs = [srv.submit(SnnRequest(uid=i, events=_events(rng)))
+            for i in range(3)]
+    with pytest.raises(TransientChipFault):
+        srv.step()
+    assert [r.status for r in reqs] == [QUEUED] * 3
+    assert all(r.t_dequeue is None for r in reqs)
+    assert len(srv.queue) == 3
+    assert srv.metrics.get("snn_queue_depth").value == 3
+    assert srv.metrics.get("snn_requests_served_total").value == 0
+    assert srv._m_faults.value == 1 and srv._m_retries.value == 0
+    # the faulty dispatch is consumed: the same queue then drains
+    done = srv.run()
+    assert [r.status for r in done] == [SERVED] * 3
+
+
+def test_degraded_fallback_after_retry_exhaustion():
+    srv = SnnServer(None, batch_slots=4,
+                    retry=RetryPolicy(max_retries=1, base_delay_s=0.0),
+                    sleep=lambda s: None)
+    srv.add_model("default", _faulty_sim(0, 1, 2, 3),
+                  degraded_sim=ChipSimulator(_net(), engine="compiled"))
+    rng = np.random.default_rng(5)
+    srv.submit(SnnRequest(uid=0, events=_events(rng)))
+    done = srv.run()
+    assert done[0].status == SERVED and done[0].degraded
+    assert srv._m_degraded.value == 1
+    assert srv._m_faults.value == 2      # initial try + 1 retry, both lost
+
+
+def test_dispatch_timeout_is_classified_transient():
+    class AdvancingClock:
+        def __init__(self):
+            self.t = 0.0
+
+        def __call__(self):
+            self.t += 10.0
+            return self.t
+
+    srv = SnnServer(ChipSimulator(_net(), engine="compiled"), batch_slots=4,
+                    clock=AdvancingClock(), retry=RetryPolicy(max_retries=0),
+                    dispatch_timeout_s=1.0)
+    rng = np.random.default_rng(6)
+    r = srv.submit(SnnRequest(uid=0, events=_events(rng)))
+    with pytest.raises(DispatchTimeout):
+        srv.step()
+    assert r.status == QUEUED and srv._m_faults.value == 1
+
+
+def test_circuit_breaker_opens_serves_degraded_then_recovers():
+    clock = FakeClock()
+    faulty = _faulty_sim(0)
+    srv = SnnServer(None, batch_slots=4, clock=clock,
+                    retry=RetryPolicy(max_retries=0, base_delay_s=0.0),
+                    breaker_threshold=1, breaker_cooldown_s=5.0,
+                    sleep=lambda s: None)
+    srv.add_model("default", faulty,
+                  degraded_sim=ChipSimulator(_net(), engine="compiled"))
+    rng = np.random.default_rng(7)
+
+    srv.submit(SnnRequest(uid=0, events=_events(rng)))
+    done = srv.run()
+    assert done[0].degraded and srv.breakers["default"].state == "open"
+    # while open the primary is never dispatched
+    dispatches = faulty._dispatch_count
+    srv.submit(SnnRequest(uid=1, events=_events(rng)))
+    done = srv.run()
+    assert done[0].degraded and faulty._dispatch_count == dispatches
+    # cooldown elapses -> half_open trial succeeds -> closed again
+    clock.advance(10.0)
+    srv.submit(SnnRequest(uid=2, events=_events(rng)))
+    done = srv.run()
+    assert not done[0].degraded
+    assert srv.breakers["default"].state == "closed"
+
+
+def test_open_circuit_without_degraded_model_keeps_queue():
+    clock = FakeClock()
+    srv = SnnServer(None, batch_slots=4, clock=clock,
+                    retry=RetryPolicy(max_retries=0, base_delay_s=0.0),
+                    breaker_threshold=1, breaker_cooldown_s=5.0)
+    srv.add_model("default", _faulty_sim(0))
+    rng = np.random.default_rng(8)
+    r = srv.submit(SnnRequest(uid=0, events=_events(rng)))
+    with pytest.raises(TransientChipFault):
+        srv.step()
+    with pytest.raises(CircuitOpenError):
+        srv.step()
+    assert r.status == QUEUED and len(srv.queue) == 1
+    assert r.t_dequeue is None
+
+
+def test_nonretryable_error_is_never_retried():
+    srv = SnnServer(ChipSimulator(_net(), engine="compiled"), batch_slots=4,
+                    retry=RetryPolicy(max_retries=3, base_delay_s=0.0))
+    calls = []
+
+    def boom(batch):
+        calls.append(1)
+        raise RuntimeError("real bug")
+
+    srv.tenants["default"].sim.run_batch = boom
+    rng = np.random.default_rng(9)
+    srv.submit(SnnRequest(uid=0, events=_events(rng)))
+    with pytest.raises(RuntimeError, match="real bug"):
+        srv.step()
+    assert len(calls) == 1 and srv._m_retries.value == 0
