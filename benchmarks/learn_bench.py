@@ -1,0 +1,253 @@
+"""On-chip plasticity benchmark — the PR-10 learning subsystem end to
+end: differential engine parity while learning, the zero-cost-off
+claim, the runtime price of carrying mutable synaptic state, and the
+continual-adaptation payoff at a measured write-energy budget.
+
+Four studies:
+
+  1. Differential parity: reference oracle vs compiled vs fused under
+     one STDP PlasticityConfig — spikes AND learned codebook indexes
+     bit-identical, report accounting (write energy included) within
+     1e-6, or the `learn.differential_equiv` claim flag drops to 0.0
+     (a -100% change any gate threshold catches).
+  2. Zero-cost-off: a disabled PlasticityConfig must lower to the SAME
+     jaxpr as no plasticity argument at all (addresses normalized away)
+     — the scan-carried index/trace state is provably free when
+     learning is off (`learn.zero_cost_off`).
+  3. Overhead: plasticity-on vs plasticity-off wall time on the same
+     compiled-engine workload.  The on-path carries int8 index stacks
+     and trace state through the scan and re-dequantizes the learned
+     layer each step, so some overhead is structural; the gated
+     `learn.plasticity_overhead_x` keeps it bounded (timing threshold —
+     it is a same-host ratio like engine.speedup).
+  4. Continual adaptation: `deploy.continual_adaptation` — train (QAT),
+     quantize, deploy, drift the event-camera input statistics by one
+     class slot, then recover on-chip with reward-modulated STDP on the
+     readout.  Gates `learn.recovery_frac` (the fraction of the
+     drift-induced accuracy loss clawed back) and reports the itemized
+     energy ledger: write pJ share of the on-chip total and the
+     marginal advantage over off-device retraining (ship every trial
+     over host DMA + re-program the register tables).
+
+Standalone usage (the learn-smoke CI lane):
+
+    python benchmarks/learn_bench.py --tiny --out learn_bench.json
+
+writes a bench-trajectory JSON gated by scripts/bench_compare.py
+--metrics-prefix learn. against the latest committed BENCH_pr*.json.
+"""
+from __future__ import annotations
+
+import re
+import time
+
+import numpy as np
+
+TINY = dict(
+    diff_sizes=[64, 96, 96, 16], batch=4, timesteps=6,
+    overhead_batch=16, overhead_reps=3,
+    adapt=dict(n_trials=128, eval_batch=128, train_steps=60),
+)
+FULL = dict(
+    diff_sizes=[128, 256, 256, 32], batch=8, timesteps=12,
+    overhead_batch=64, overhead_reps=5,
+    adapt=dict(n_trials=256, eval_batch=256, train_steps=120),
+)
+
+_STDP = dict(enabled=True, mode="stdp", lr=0.4)
+
+
+def _mk_sims(sizes, plast, engines):
+    from repro.core.plasticity import PlasticityConfig
+    from repro.core.quant import CodebookConfig
+    from repro.core.soc import ChipSimulator
+
+    rng = np.random.default_rng(0)
+    weights = [np.asarray(rng.normal(0, 1.2 / np.sqrt(a), (a, b)),
+                          np.float32)
+               for a, b in zip(sizes[:-1], sizes[1:])]
+    cfg = None if plast is None else PlasticityConfig(**plast)
+    return {e: ChipSimulator([w.copy() for w in weights], engine=e,
+                             quant_cfg=CodebookConfig(8, 8),
+                             plasticity=cfg)
+            for e in engines}
+
+
+def _trains(cfg, batch=None):
+    rng = np.random.default_rng(1)
+    return np.asarray(
+        rng.random((batch or cfg["batch"], cfg["timesteps"],
+                    cfg["diff_sizes"][0])) < 0.25, np.float32)
+
+
+def differential_study(cfg: dict, log=print) -> dict:
+    """Study 1: one STDP config => bit-identical spikes AND learned
+    indexes across the oracle and both array engines, reports to 1e-6."""
+    sims = _mk_sims(cfg["diff_sizes"], _STDP,
+                    ("reference", "compiled", "fused"))
+    trains = _trains(cfg)
+
+    counts, learned, reports = {}, {}, {}
+    for name, sim in sims.items():
+        c, r = sim.run_batch(trains)
+        counts[name], reports[name] = np.asarray(c), r
+        learned[name] = [None if l is None else np.asarray(l)
+                         for l in sim.last_learned]
+    spikes_ok = all(np.array_equal(counts["reference"], counts[e])
+                    for e in ("compiled", "fused"))
+    learned_ok = all(
+        (a is None) == (b is None) and (a is None or np.array_equal(a, b))
+        for e in ("compiled", "fused")
+        for a, b in zip(learned["reference"], learned[e]))
+    rel = max(
+        max(abs(a.energy_pj - b.energy_pj) / max(abs(a.energy_pj), 1.0),
+            abs(a.write_energy_pj - b.write_energy_pj)
+            / max(abs(a.write_energy_pj), 1.0))
+        for eng in ("compiled", "fused")
+        for a, b in zip(reports["reference"], reports[eng]))
+    writes = float(sum(r.stats.weight_writes for r in reports["reference"]))
+    ok = spikes_ok and learned_ok and rel <= 1e-6 and writes > 0
+    if not ok:
+        log(f"# learn: ENGINES DIVERGED while learning spikes={spikes_ok} "
+            f"learned={learned_ok} report_rel={rel} writes={writes}")
+    return {
+        "spikes_bit_identical": bool(spikes_ok),
+        "learned_bit_identical": bool(learned_ok),
+        "report_rel_err": float(rel),
+        "weight_writes": writes,
+        "equiv": float(ok),
+    }
+
+
+def zero_cost_study(cfg: dict, log=print) -> dict:
+    """Study 2: a disabled PlasticityConfig lowers to the SAME program
+    as no plasticity argument — the mutable-state refactor is provably
+    free when learning is off."""
+    import jax
+
+    sizes = cfg["diff_sizes"]
+    base = _mk_sims(sizes, None, ("compiled",))["compiled"]
+    null = _mk_sims(sizes, dict(enabled=False), ("compiled",))["compiled"]
+    x = np.zeros((cfg["batch"], cfg["timesteps"], sizes[0]), np.float32)
+
+    def jaxpr(sim):
+        s = str(jax.make_jaxpr(sim.array_engine().run_raw)(x))
+        return re.sub(r"0x[0-9a-f]+", "0x", s)
+
+    same = jaxpr(base) == jaxpr(null)
+    if not same:
+        log("# learn: disabled PlasticityConfig CHANGED the lowered program")
+    return {"jaxpr_identical": bool(same), "zero_cost_off": float(same)}
+
+
+def overhead_study(cfg: dict, log=print) -> dict:
+    """Study 3: wall-time price of learning on the compiled engine —
+    best-of-N plasticity-on vs plasticity-off on the same workload."""
+    trains = _trains(cfg, batch=cfg["overhead_batch"])
+    times = {}
+    for name, plast in (("off", None), ("stdp", _STDP)):
+        sim = _mk_sims(cfg["diff_sizes"], plast, ("compiled",))["compiled"]
+        sim.run_batch(trains)                      # compile + warm caches
+        best = float("inf")
+        for _ in range(cfg["overhead_reps"]):
+            t0 = time.perf_counter()
+            sim.run_batch(trains)
+            best = min(best, time.perf_counter() - t0)
+        times[name] = best
+    overhead = times["stdp"] / max(times["off"], 1e-12)
+    log(f"# learn: plasticity-on overhead {overhead:.2f}x "
+        f"({times['off'] * 1e3:.1f} -> {times['stdp'] * 1e3:.1f} ms)")
+    return {"off_s": round(times["off"], 4),
+            "stdp_s": round(times["stdp"], 4),
+            "overhead_x": round(overhead, 3)}
+
+
+def adaptation_study(cfg: dict, log=print) -> dict:
+    """Study 4: the deploy-tier payoff — drift-and-recover with the
+    full write-energy ledger (see deploy/adapt.py)."""
+    import dataclasses
+
+    from repro.deploy import AdaptConfig, continual_adaptation
+
+    acfg = dataclasses.replace(AdaptConfig(), **cfg["adapt"])
+    rep = continual_adaptation(acfg)
+    log(f"# learn: adapt {rep.acc_base:.3f} -> {rep.acc_drift:.3f} -> "
+        f"{rep.acc_adapted:.3f} (recovered {rep.recovered_frac:.2f}, "
+        f"{rep.weight_writes:.0f} writes / {rep.write_energy_pj:.1f} pJ)")
+    if not rep.recovered:
+        log(f"# learn: RECOVERY GATE MISSED "
+            f"{rep.recovered_frac:.3f} < {rep.recovery_frac_gate}")
+    return rep.to_dict()
+
+
+def main(emit, tiny: bool = True, log=print) -> dict:
+    cfg = TINY if tiny else FULL
+    t0 = time.perf_counter()
+    diff = differential_study(cfg, log=log)
+    zero = zero_cost_study(cfg, log=log)
+    over = overhead_study(cfg, log=log)
+    adapt = adaptation_study(cfg, log=log)
+    us = (time.perf_counter() - t0) * 1e6
+
+    results = {
+        "mode": "tiny" if tiny else "full",
+        "differential": diff, "zero_cost": zero, "overhead": over,
+        "adaptation": adapt,
+    }
+    emit("learn_bench", us, {
+        "differential_equiv": diff["equiv"],
+        "zero_cost_off": zero["zero_cost_off"],
+        "plasticity_overhead_x": over["overhead_x"],
+        "recovery_frac": adapt["recovered_frac"],
+        "write_pj_share": adapt["write_pj_share"],
+    })
+    return results
+
+
+def metrics(results: dict | None) -> dict:
+    """The schema-stable learn.* slice of the bench trajectory."""
+    r = results or {}
+    diff = r.get("differential") or {}
+    zero = r.get("zero_cost") or {}
+    over = r.get("overhead") or {}
+    adapt = r.get("adaptation") or {}
+    return {
+        "learn.differential_equiv": diff.get("equiv"),
+        "learn.zero_cost_off": zero.get("zero_cost_off"),
+        "learn.plasticity_overhead_x": over.get("overhead_x"),
+        "learn.recovery_frac": adapt.get("recovered_frac"),
+        "learn.acc_adapted": adapt.get("acc_adapted"),
+        "learn.write_pj_share": adapt.get("write_pj_share"),
+        "learn.adapt_vs_retrain_x": adapt.get("onchip_advantage_x"),
+    }
+
+
+if __name__ == "__main__":
+    import argparse
+    import json
+    import os
+    import sys
+
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--tiny", action="store_true",
+                    help="CI scale (the learn-smoke lane)")
+    ap.add_argument("--out", default=None,
+                    help="write a learn.* bench-trajectory JSON here")
+    args = ap.parse_args()
+
+    root = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+    sys.path.insert(0, os.path.join(root, "src"))
+    sys.path.insert(0, root)
+
+    out = main(lambda n, us, c: print(f"{n}: {json.dumps(c, default=str)}"),
+               tiny=args.tiny)
+    print(json.dumps(out, indent=1, default=str))
+    if args.out:
+        from benchmarks import run as RUN
+
+        traj = {"schema_version": RUN.TRAJECTORY_SCHEMA_VERSION,
+                "lane": RUN.lane(), "provenance": RUN.provenance(),
+                "metrics": metrics(out)}
+        with open(args.out, "w") as f:
+            json.dump(traj, f, indent=1, sort_keys=True)
+        print(f"# learn trajectory -> {args.out}", file=sys.stderr)

@@ -26,7 +26,7 @@ TRAJECTORY_SCHEMA_VERSION = 1
 
 SECTIONS = ("fig3", "fig5", "noc", "compiler", "engine", "deploy", "fig6",
             "table1", "kernels", "roofline", "telemetry", "serve", "fleet",
-            "fault")
+            "fault", "learn")
 
 
 def lane() -> str:
@@ -143,7 +143,7 @@ def trajectory(results: dict) -> dict:
     # against the cached per-domain placements, fullerene-vs-mesh
     # saturation at equal node count, and the sharded-engine equivalence
     # claim (1.0 == spikes bit-identical AND reports within 1e-6)
-    from benchmarks import fault_bench, fleet_bench
+    from benchmarks import fault_bench, fleet_bench, learn_bench
 
     metrics.update(fleet_bench.metrics(results.get("fleet")))
     # fault-injection subsystem (PR 9): random-kill survivability of the
@@ -151,6 +151,11 @@ def trajectory(results: dict) -> dict:
     # speedup over a from-scratch faulty compile, and the differential /
     # zero-cost-off claim flags (1.0, or a -100% change any gate trips)
     metrics.update(fault_bench.metrics(results.get("fault")))
+    # on-chip plasticity (PR 10): engines-learn-identically and
+    # zero-cost-off claim flags, the runtime price of carrying mutable
+    # synaptic state through the scan, and the continual-adaptation
+    # recovery fraction with its write-energy ledger
+    metrics.update(learn_bench.metrics(results.get("learn")))
     return {"schema_version": TRAJECTORY_SCHEMA_VERSION,
             "lane": lane(), "provenance": provenance(),
             "metrics": metrics}
@@ -178,8 +183,8 @@ def main(argv=None) -> None:
     from benchmarks import (compiler_bench, contention_bench, deploy_bench,
                             engine_bench, fault_bench, fig3_core_efficiency,
                             fig5_noc, fig6_riscv_power, fleet_bench,
-                            kernel_bench, roofline, serve_bench, table1_chip,
-                            telemetry_bench)
+                            kernel_bench, learn_bench, roofline, serve_bench,
+                            table1_chip, telemetry_bench)
 
     results = {}
     failed: list[str] = []
@@ -227,6 +232,7 @@ def main(argv=None) -> None:
     # standalone runs
     section("fleet", lambda: fleet_bench.main(emit, tiny=True))
     section("fault", lambda: fault_bench.main(emit, tiny=True))
+    section("learn", lambda: learn_bench.main(emit, tiny=True))
 
     out = os.path.join(os.path.dirname(__file__), "results.json")
     with open(out, "w") as f:

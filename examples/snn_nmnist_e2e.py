@@ -12,15 +12,14 @@ Run:  PYTHONPATH=src python examples/snn_nmnist_e2e.py [--steps 60]
 import argparse
 import time
 
-import jax
-import jax.numpy as jnp
 import numpy as np
 
 from repro import compiler as COMP
-from repro.core.quant import CodebookConfig
+from repro.core.quant import CodebookConfig, dequantize, quantize
 from repro.core.soc import ChipSimulator
 from repro.data.synthetic import EventStream
 from repro.models import snn as SNN
+from repro.train.snn_trainer import SNNTrainConfig, SNNTrainer
 
 
 def main():
@@ -32,29 +31,30 @@ def main():
     ev = EventStream(timesteps=args.timesteps, height=16, width=16, seed=0)
     cfg = SNN.SNNConfig(layer_sizes=(ev.n_inputs, 256, 10),
                         timesteps=args.timesteps)
-    params = SNN.init_params(cfg, jax.random.PRNGKey(0))
 
     print(f"== train: {cfg.layer_sizes} LIF MLP, surrogate-gradient BPTT ==")
-    for step in range(args.steps):
-        sp, lb = ev.batch(64, step)
-        params, loss, stats = SNN.sgd_step(params, cfg, sp, lb, lr=0.3)
-        if step % 10 == 0:
-            print(f"step {step:3d} loss {float(loss):.3f} "
-                  f"spike-sparsity {float(stats['sparsity']):.3f}")
+    trainer = SNNTrainer(cfg, SNNTrainConfig(steps=args.steps, batch=64,
+                                             lr=4e-3, log_every=0))
+    params, _ = trainer.fit(
+        lambda step: ev.batch(64, step),
+        on_metrics=lambda s, m: (print(
+            f"step {s:3d} loss {float(m['loss']):.3f} "
+            f"spike-density {float(m['density']):.3f}")
+            if s % 10 == 0 else None))
 
     sp, lb = ev.batch(256, 99_999)
     acc_fp = float(SNN.accuracy(params, cfg, sp, lb))
 
     print("\n== quantize to per-core N=16 x W=8-bit shared codebooks (C3) ==")
-    qparams = SNN.quantize_for_chip(params, cfg)
-    acc_q = float(SNN.accuracy(SNN.dequantized(qparams), cfg, sp, lb))
+    qparams = [quantize(w, cfg.quant) for w in params]
+    weights = [dequantize(q) for q in qparams]
+    acc_q = float(SNN.accuracy(weights, cfg, sp, lb))
     print(f"accuracy fp32 {acc_fp:.3f} -> quantized {acc_q:.3f} "
           f"(paper NMNIST: 0.988)")
 
     print("\n== compile onto the 20-core fullerene SoC (partition -> "
           "place -> route) ==")
     test_sp, _ = ev.batch(8, 123)
-    weights = SNN.dequantized(qparams)
     # profile-guided traffic: measure per-layer spike rates on real events
     rates = COMP.measure_spike_rates(weights, test_sp[1])
     graph = COMP.from_weights(weights, spike_rates=rates)

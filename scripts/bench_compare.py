@@ -126,6 +126,23 @@ METRICS: dict[str, tuple[str, bool, str]] = {
     "fault.accuracy_clean": ("higher", False, "det"),
     "fault.accuracy_at_drop10": ("higher", False, "det"),
     "fault.agreement_at_drop10": ("higher", False, "det"),
+    # learn lane (PR 10): differential_equiv and zero_cost_off are claim
+    # flags — 1.0 while every engine learns bit-identically under one
+    # PlasticityConfig / while a disabled config lowers to the identical
+    # jaxpr; 0.0 is a -100% change, so any threshold gates it.  The
+    # plasticity-on overhead is a same-host on/off wall ratio like
+    # telemetry.capture_overhead_x (timing threshold).  recovery_frac is
+    # a deterministic seeded scenario (the continual-adaptation gate);
+    # the energy-ledger shares and the marginal on-chip-vs-retrain
+    # advantage track scenario shape, not a better/worse axis:
+    # informational.
+    "learn.differential_equiv": ("higher", True, "det"),
+    "learn.zero_cost_off": ("higher", True, "det"),
+    "learn.plasticity_overhead_x": ("lower", True, "timing"),
+    "learn.recovery_frac": ("higher", True, "det"),
+    "learn.acc_adapted": ("higher", False, "det"),
+    "learn.write_pj_share": ("lower", False, "det"),
+    "learn.adapt_vs_retrain_x": ("higher", False, "det"),
 }
 
 

@@ -222,6 +222,28 @@ class InterconnectEnergyModel:
 
 
 # ---------------------------------------------------------------------------
+# On-chip plasticity: register-table index writes
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class WeightWriteModel:
+    """Energy of one synaptic-index write during on-chip learning.
+
+    A plasticity update does not rewrite a weight value — it rewrites the
+    log2(N)-bit *index* selecting a codebook entry (paper C3), a few-bit
+    register-file/SRAM write.  At 55 nm that lands below the cost of one
+    performed SOP (which spans dequant + MAC + MP update); 0.15 pJ/write
+    is an estimate in that spirit, not a paper anchor — the paper's chip
+    is inference-only.
+    """
+
+    pj_per_write: float = 0.15
+
+    def write_pj(self, writes) -> np.ndarray:
+        return np.asarray(writes, np.float64) * self.pj_per_write
+
+
+# ---------------------------------------------------------------------------
 # Batched workload pricing (the compiled engine's report stage)
 # ---------------------------------------------------------------------------
 
@@ -240,6 +262,8 @@ def price_batched(
     freq_hz: float,
     zero_skip: bool = True,
     partial_update: bool = True,
+    weight_writes=0.0,
+    write_model: "WeightWriteModel | None" = None,
 ) -> dict:
     """Price per-sample accounting arrays into energy totals.
 
@@ -260,12 +284,15 @@ def price_batched(
     duty = np.minimum(
         1.0, steps * RISCV_CTRL_CYCLES_PER_STEP / np.maximum(wall, 1.0))
     riscv_pj = riscv.average_power_mw(duty) * 1e-3 * t_wall_s * 1e12
-    total = core_pj + noc_pj + riscv_pj
+    write_pj = (write_model.write_pj(weight_writes) if write_model is not None
+                else np.asarray(weight_writes, np.float64) * 0.0)
+    total = core_pj + noc_pj + riscv_pj + write_pj
     return {
         "sparsity": sparsity,
         "core_pj": core_pj,
         "riscv_pj": riscv_pj,
         "noc_pj": noc_pj,
+        "write_pj": write_pj,
         "total_pj": total,
         "duty": duty,
     }

@@ -160,13 +160,19 @@ class FusedLayerWeights:
         return self.dense.size * 4 + spikes
 
 
-def _lower_codebook_layer(sim: "ChipSimulator", li: int,
+def _lower_codebook_layer(sim: "ChipSimulator", li: int, fill: float = 0.0,
                           ) -> tuple[np.ndarray, np.ndarray] | None:
     """Rebuild (idx, cbw) for layer `li` from the per-core RegisterTables.
 
     Returns None when any slice lacks a programmed table or the table
     words do not reproduce the executed weights bit-exactly — the caller
     then falls back to the dense-weight kernel.
+
+    `fill` pads unprogrammed codebook rows (slices whose table holds
+    fewer than the layer-max levels).  The fused kernel wants 0.0 (a
+    padded row dequantizes to nothing); the plasticity lowering wants
+    +inf so `quant.project_to_codebook` can never select a row the
+    core's table does not actually hold.
     """
     w = np.asarray(sim.weights[li], np.float32)
     n_pre, n_post = w.shape
@@ -187,7 +193,7 @@ def _lower_codebook_layer(sim: "ChipSimulator", li: int,
         return None
     n_levels = max(rt.weight_levels for _, rt in slices)
     idx = np.zeros((n_pre, n_post), np.int8)
-    cbw = np.zeros((n_levels, n_post), np.float32)
+    cbw = np.full((n_levels, n_post), fill, np.float32)
     for a, rt in slices:
         if not rt.codebook_words:
             return None
@@ -199,6 +205,43 @@ def _lower_codebook_layer(sim: "ChipSimulator", li: int,
         idx[:, a.neuron_lo:a.neuron_hi] = ii.astype(np.int8)
         cbw[:len(cb), a.neuron_lo:a.neuron_hi] = cb[:, None]
     return idx, cbw
+
+
+def lower_plasticity_tables(sim: "ChipSimulator"):
+    """Per-layer plasticity lowering: None for frozen layers, else the
+    (idx0 int8 (n_pre, n_post), cbw f32 (L, n_post)) pair whose indexes
+    every engine scan-carries and learns over.
+
+    Initial indexes come from the post-fault RegisterTables (faults
+    corrupt tables in `ChipSimulator.__init__`, before any lowering), so
+    `FaultConfig` codebook corruption lands in the *initial* state only —
+    the learning dynamics themselves are never perturbed.  Unprogrammed
+    codebook rows are +inf so projection cannot select them; both the
+    argmin here and `project_to_codebook` break ties to the lowest index,
+    making every initial index a projection fixed point (a zero update
+    never counts as a write).
+    """
+    cfg = sim.plasticity
+    if not cfg.enabled:
+        return tuple(None for _ in sim.weights)
+    out = []
+    for li in range(len(sim.weights)):
+        if not cfg.learns(li):
+            out.append(None)
+            continue
+        t = _lower_codebook_layer(sim, li, fill=np.inf)
+        if t is None:
+            raise ValueError(
+                f"plasticity on layer {li} requires table-exact codebook "
+                f"register tables (quantized weights, or float weights "
+                f"with a quant_cfg) — the chip has no register words to "
+                f"write otherwise")
+        out.append(t)
+    if not any(t is not None for t in out):
+        raise ValueError(
+            f"plasticity enabled but layers={cfg.layers} selects none of "
+            f"the network's {len(sim.weights)} layers")
+    return tuple(out)
 
 
 def _pick_engine_block(m: int, k: int, n: int,
@@ -277,6 +320,14 @@ class _EngineBase:
         # each engine once); trace-off lowers the exact PR-5 scan outputs
         self.trace = getattr(sim, "trace", None) or TraceConfig()
         self.last_trace = None       # ChipTrace of the latest traced run
+        # on-chip learning (core/plasticity.py): disabled keeps every
+        # lowering below byte-identical to the inference-only programs
+        from repro.core.plasticity import NULL_PLASTICITY
+        self.plast = getattr(sim, "plasticity", None) or NULL_PLASTICITY
+        self.plast_tables = (sim.plasticity_tables() if self.plast.enabled
+                             else tuple(None for _ in sim.weights))
+        self.last_learned = None     # per-layer learned indexes (B leading)
+        self.last_elig = None        # per-layer eligibility (reward mode)
 
     # -- trace construction (subclass hooks) --------------------------------
 
@@ -297,9 +348,61 @@ class _EngineBase:
         return shard_map(fn, mesh=mesh, in_specs=(spec,) * n_args,
                          out_specs=spec, check_rep=False)
 
+    # -- plasticity state plumbing ------------------------------------------
+
+    def _adapt_learned(self, li: int, idx: jax.Array) -> jax.Array:
+        """Subclass hook: engine-layout view of a (B, n_pre, n_post)
+        global learned-index array (fused pads rows to the spike-word
+        boundary; the base layout IS the global layout)."""
+        return idx
+
+    def _initial_learned(self, batch: int, learned) -> list:
+        """Materialize the per-layer initial-index operand: table idx0 by
+        default, overridden per layer by `learned` entries ((n_pre,
+        n_post) broadcast over the batch, or per-sample (B, ...))."""
+        if learned is not None and len(learned) != len(self.plast_tables):
+            raise ValueError(
+                f"learned must carry one entry per layer "
+                f"({len(self.plast_tables)}), got {len(learned)}")
+        out = []
+        for li, pt in enumerate(self.plast_tables):
+            if pt is None:
+                if learned is not None and learned[li] is not None:
+                    raise ValueError(
+                        f"learned[{li}] given but layer {li} is frozen")
+                out.append(None)
+                continue
+            src = pt[0] if learned is None or learned[li] is None \
+                else learned[li]
+            base = jnp.asarray(src, jnp.int8)
+            if base.ndim == 2:
+                base = jnp.broadcast_to(base, (batch,) + base.shape)
+            if base.ndim != 3 or int(base.shape[0]) != batch:
+                raise ValueError(
+                    f"learned[{li}]: expected (n_pre, n_post) or "
+                    f"({batch}, n_pre, n_post), got {base.shape}")
+            # materialized copy: the fused engine donates this operand
+            out.append(self._adapt_learned(li, jnp.array(base)))
+        return out
+
+    def apply_reward(self, reward):
+        """Reward-mode trial commit: convert the eligibility the last run
+        accumulated into projected index writes, priced per sample."""
+        from repro.core import plasticity as PLC
+
+        if self.plast.mode != "reward" or self.last_elig is None:
+            raise ValueError(
+                "apply_reward needs a completed reward-mode run to commit")
+        self.last_learned, info = PLC.commit_reward(
+            self.plast, self.plast_tables, self.last_learned,
+            self.last_elig, reward, self.sim.write_model,
+            self.sim.cycle_model)
+        self.last_elig = None
+        return info
+
     # -- execution ----------------------------------------------------------
 
-    def run_raw(self, spike_trains: jax.Array) -> dict:
+    def run_raw(self, spike_trains: jax.Array, learned=None) -> dict:
         """Run the XLA program; returns the per-step counter arrays."""
         trains = jnp.asarray(spike_trains, jnp.float32)
         if trains.ndim != 3:
@@ -310,9 +413,15 @@ class _EngineBase:
         if sharded not in self._exec:
             self._exec[sharded] = self._make_executable(sharded)
         self.last_run_sharded = sharded
-        return self._exec[sharded](trains)
+        if not self.plast.enabled:
+            if learned is not None:
+                raise ValueError("learned indexes passed but plasticity "
+                                 "is off")
+            return self._exec[sharded](trains)
+        return self._exec[sharded](
+            trains, self._initial_learned(int(trains.shape[0]), learned))
 
-    def run_batch(self, spike_trains: jax.Array
+    def run_batch(self, spike_trains: jax.Array, learned=None
                   ) -> tuple[jax.Array, list["ChipReport"]]:
         """(B, T, n_in) spike trains -> ((B, n_out) counts, per-sample
         ChipReports).
@@ -327,12 +436,28 @@ class _EngineBase:
 
         sim = self.sim
         tbl = self.tables
-        ys = self.run_raw(spike_trains)
+        ys = self.run_raw(spike_trains, learned=learned)
         # injected transient dispatch faults fire HERE: the scan ran, the
         # readback is lost (mid-flight), so a retry can succeed
         sim._consume_transient_fault()
         B, T = int(spike_trains.shape[0]), int(spike_trains.shape[1])
         out_counts = jnp.sum(ys["out"], axis=1)
+
+        writes = None
+        if self.plast.enabled:
+            # learned state is stashed per engine (B leading, global
+            # neuron layout) for warm-starting the next run / the reward
+            # commit; writes price below alongside the other counters
+            self.last_learned = [
+                ys.pop(f"learned_idx_{li}") if pt is not None else None
+                for li, pt in enumerate(self.plast_tables)]
+            if self.plast.mode == "reward":
+                self.last_elig = [
+                    ys.pop(f"elig_{li}") if pt is not None else None
+                    for li, pt in enumerate(self.plast_tables)]
+            writes = np.asarray(ys.pop("writes"), np.float64)  # (B, T, L)
+        writes_total = (writes.sum(axis=(1, 2)) if writes is not None
+                        else np.zeros(B))
 
         n_posts = np.array([lt.n_post for lt in tbl.layers], np.float64)
         nnz = np.asarray(ys["nnz"], np.float64)          # (B, T, L)
@@ -382,14 +507,16 @@ class _EngineBase:
                                 for li in range(L)], axis=-1),
                 nnz,
                 (np.asarray(ys["skip_words"], np.float64)
-                 if self.trace.skip_words and "skip_words" in ys else None))
+                 if self.trace.skip_words and "skip_words" in ys else None),
+                weight_writes=writes)
 
         priced = E.price_batched(
             sim.core_model, sim.riscv,
             nominal_sops=np.full(B, nominal), performed_sops=performed,
             noc_energy_pj=noc_pj, wall_cycles=wall, steps=T,
             freq_hz=sim.freq_hz, zero_skip=sim.zero_skip,
-            partial_update=sim.partial_update)
+            partial_update=sim.partial_update,
+            weight_writes=writes_total, write_model=sim.write_model)
 
         reports = []
         for b in range(B):
@@ -403,6 +530,7 @@ class _EngineBase:
                 noc_energy_pj=float(noc_pj[b]),
                 noc_contention_cycles=float(noc_contention[b]),
                 spike_words_skipped=float(skipped_words[b]),
+                weight_writes=float(writes_total[b]),
             )
             reports.append(ChipReport(
                 steps=T, stats=acc,
@@ -410,12 +538,15 @@ class _EngineBase:
                 core_energy_pj=float(priced["core_pj"][b]),
                 noc_energy_pj=float(noc_pj[b]),
                 riscv_energy_pj=float(priced["riscv_pj"][b]),
-                wall_cycles=float(wall[b]), freq_hz=sim.freq_hz))
+                wall_cycles=float(wall[b]), freq_hz=sim.freq_hz,
+                write_energy_pj=float(priced["write_pj"][b])))
         return out_counts, reports
 
-    def run(self, spike_train: jax.Array) -> tuple[jax.Array, "ChipReport"]:
+    def run(self, spike_train: jax.Array,
+            learned=None) -> tuple[jax.Array, "ChipReport"]:
         """Single-sample convenience wrapper (batch of 1)."""
-        counts, reports = self.run_batch(jnp.asarray(spike_train)[None])
+        counts, reports = self.run_batch(jnp.asarray(spike_train)[None],
+                                         learned=learned)
         return counts[0], reports[0]
 
 
@@ -509,22 +640,139 @@ class CompiledEngine(_EngineBase):
                 ys["skip_words"] = jnp.stack(skips)
             return tuple(new_states), ys
 
-        def one_sample(train):
+        if not self.plast.enabled:
+            def one_sample(train):
+                states = tuple(init_state(int(w.shape[1])) for w in weights)
+                xs = (train if drop is None
+                      else (train, jnp.arange(train.shape[0])))
+                _, ys = jax.lax.scan(step, states, xs)
+                return ys
+
+            def run(trains):                     # (B, T, n_in) f32
+                return jax.vmap(one_sample)(trains)
+
+            return run
+
+        # ---- plasticity path: codebook indexes + traces are scan state ----
+        from repro.core import plasticity as PLC
+
+        plast = self.plast
+        cbws = [None if pt is None else jnp.asarray(pt[1])
+                for pt in self.plast_tables]
+        reward = plast.mode == "reward"
+
+        def step_plast(carry, xs):
+            states, pidx, xpre, xpost, elig = carry
+            spikes, t = xs if drop is not None else (xs, None)
+            wall = jnp.zeros((n_active,), jnp.float32)
+            nnzs, toucheds, fireds, skips, wr = [], [], [], [], []
+            fired_cores = {}
+            new_states = []
+            nidx, nxpre, nxpost, nelig = (list(pidx), list(xpre),
+                                          list(xpost), list(elig))
+            for li in range(len(weights)):
+                lt, slices, core_idx, onehot = layer_consts[li]
+                learns = cbws[li] is not None
+                if learns:
+                    # live weights from the carried indexes — the chip's
+                    # SPEs dequantizing the current register state
+                    w = PLC.dequant_indices(pidx[li], cbws[li])
+                    nzw = (w != 0).astype(jnp.float32)
+                else:
+                    w = weights[li]
+                    nzw = nonzero_w[li]
+                nnz = jnp.sum(spikes != 0).astype(jnp.float32)
+                if trace_skips:
+                    skips.append(Z.empty_spike_words(
+                        Z.pack_spike_words(spikes)).astype(jnp.float32))
+                current = spikes @ w
+                st, out, touched = lif_step(
+                    states[li], current, lif,
+                    touched=touch_mask(spikes, nzw))
+                new_states.append(st)
+                tsum = jnp.sum(touched).astype(jnp.float32)
+                core_touched = touched.astype(jnp.float32) @ onehot
+                core_writes = None
+                writes_l = jnp.float32(0.0)
+                if learns:
+                    if reward:
+                        xp, xq, e = PLC.elig_step(
+                            plast, spikes, out, xpre[li], xpost[li],
+                            elig[li])
+                        nxpre[li], nxpost[li], nelig[li] = xp, xq, e
+                    else:
+                        ni, xp, xq, changed = PLC.stdp_step(
+                            plast, spikes, out, xpre[li], xpost[li],
+                            pidx[li], cbws[li])
+                        nidx[li], nxpre[li], nxpost[li] = ni, xp, xq
+                        # integer-exact per-post write counts -> per-core
+                        # plasticity-stage occupancy + priced energy
+                        col_ch = jnp.sum(changed, axis=0).astype(jnp.float32)
+                        core_writes = col_ch @ onehot
+                        writes_l = jnp.sum(col_ch)
+                core_cyc = cyc.timestep_cycles_array(
+                    lt.n_pre, slices, nnz, core_touched,
+                    sim.zero_skip, sim.partial_update, writes=core_writes)
+                wall = wall + jax.ops.segment_sum(
+                    core_cyc, core_idx, num_segments=n_active)
+                fired = jnp.sum(out).astype(jnp.float32)
+                if has_flow[li] or traced:
+                    fired_cores[f"fired_core_{li}"] = out @ onehot
+                if traced:
+                    fired_cores[f"touched_core_{li}"] = core_touched
+                nnzs.append(nnz)
+                toucheds.append(tsum)
+                fireds.append(fired)
+                wr.append(writes_l)
+                if drop is not None and drop.keep_p[li] is not None:
+                    spikes = out * drop.mask(li, t)
+                else:
+                    spikes = out
+            ys = {
+                "nnz": jnp.stack(nnzs),
+                "touched": jnp.stack(toucheds),
+                "fired": jnp.stack(fireds),
+                "writes": jnp.stack(wr),
+                "wall": jnp.max(wall),
+                "out": spikes,
+                **fired_cores,
+            }
+            if trace_skips:
+                ys["skip_words"] = jnp.stack(skips)
+            return (tuple(new_states), nidx, nxpre, nxpost, nelig), ys
+
+        def one_sample(train, idx0):
             states = tuple(init_state(int(w.shape[1])) for w in weights)
+            xpre0 = [None if c is None else
+                     jnp.zeros((int(weights[li].shape[0]),), jnp.float32)
+                     for li, c in enumerate(cbws)]
+            xpost0 = [None if c is None else
+                      jnp.zeros((int(weights[li].shape[1]),), jnp.float32)
+                      for li, c in enumerate(cbws)]
+            elig0 = [jnp.zeros(weights[li].shape, jnp.float32)
+                     if (c is not None and reward) else None
+                     for li, c in enumerate(cbws)]
             xs = (train if drop is None
                   else (train, jnp.arange(train.shape[0])))
-            _, ys = jax.lax.scan(step, states, xs)
+            carry = (states, list(idx0), xpre0, xpost0, elig0)
+            final, ys = jax.lax.scan(step_plast, carry, xs)
+            _, fidx, _, _, felig = final
+            for li, c in enumerate(cbws):
+                if c is not None:
+                    ys[f"learned_idx_{li}"] = fidx[li]
+                    if reward:
+                        ys[f"elig_{li}"] = felig[li]
             return ys
 
-        def run(trains):                     # (B, T, n_in) f32
-            return jax.vmap(one_sample)(trains)
+        def run(trains, idx0):               # (B, T, n_in) f32, [B-led idx]
+            return jax.vmap(one_sample)(trains, idx0)
 
         return run
 
     def _make_executable(self, sharded: bool):
         fn = self._build_run()
         if sharded:
-            fn = self._shard_wrap(fn, n_args=1)
+            fn = self._shard_wrap(fn, n_args=2 if self.plast.enabled else 1)
         return jax.jit(fn)
 
 
@@ -591,7 +839,9 @@ class ShardedEngine(_EngineBase):
                 f"{self.n_domains} domain(s) — shards split on domain "
                 f"boundaries")
         self.n_shards = n_shards
+        self._owned: list[list[np.ndarray]] = []
         self.sharded_layers = self._lower_shards()
+        self._plast_shards = self._lower_plast_shards()
 
     def _shard_of_core(self, core_id: int) -> int:
         dom = (core_id // NOC.DOMAIN_STRIDE
@@ -623,11 +873,53 @@ class ShardedEngine(_EngineBase):
                 nzs[s, :, :o.size] = nzw[:, o]
                 oh[s, :o.size] = lt.slice_onehot[o]
                 pos[o] = s * words * Z.SPIKE_WORD_BITS + np.arange(o.size)
+            self._owned.append(owned)
             out.append(ShardedLayer(
                 width=width, words=words, w=jnp.asarray(ws),
                 nzw=jnp.asarray(nzs), onehot=jnp.asarray(oh),
                 pos=jnp.asarray(pos)))
         return tuple(out)
+
+    def _lower_plast_shards(self):
+        """Cores-axis view of the plasticity tables: per learnable layer a
+        (cbw_s (S, L, width) f32, colpos (n_post,) int32) pair.  Padded
+        width columns get the level set [0, inf, ...] — their index-0
+        entries are projection fixed points with zero traffic, so pads
+        can never write.  `colpos` reassembles all-gathered local columns
+        back into global neuron order (shard * width + lane)."""
+        out: list[tuple | None] = []
+        S = self.n_shards
+        for li, pt in enumerate(self.plast_tables):
+            if pt is None:
+                out.append(None)
+                continue
+            cbw = np.asarray(pt[1], np.float32)        # (L, n_post) global
+            width = self.sharded_layers[li].width
+            cbw_s = np.full((S, cbw.shape[0], width), np.inf, np.float32)
+            cbw_s[:, 0, :] = 0.0
+            colpos = np.zeros(cbw.shape[1], np.int32)
+            for s, o in enumerate(self._owned[li]):
+                cbw_s[s, :, :o.size] = cbw[:, o]
+                colpos[o] = s * width + np.arange(o.size)
+            out.append((jnp.asarray(cbw_s), jnp.asarray(colpos)))
+        return out
+
+    def _shard_learned(self, idx0: list) -> list:
+        """(B, n_pre, n_post) global learned indexes -> per-layer
+        (S, B, n_pre, width) shard stacks (pad columns index 0)."""
+        out = []
+        for li, g in enumerate(idx0):
+            if g is None:
+                out.append(None)
+                continue
+            g = np.asarray(g, np.int8)
+            width = self.sharded_layers[li].width
+            arr = np.zeros((self.n_shards,) + g.shape[:-1] + (width,),
+                           np.int8)
+            for s, o in enumerate(self._owned[li]):
+                arr[s, ..., :o.size] = g[..., o]
+            out.append(jnp.asarray(arr))
+        return out
 
     def _build_body(self):
         """The per-device program: full-fan-in layer steps on local
@@ -724,7 +1016,169 @@ class ShardedEngine(_EngineBase):
 
             return jax.vmap(one_sample)(trains)
 
-        return body
+        if not self.plast.enabled:
+            return body
+
+        # ---- plasticity path: local index/trace state, psum'd writes -----
+        # Each shard carries its owned weight-index columns (plus pre
+        # traces over the full fan-in, which is replicated arithmetic on
+        # the gathered global spikes), so the learning rule runs on
+        # exactly the column blocks the inference matmul uses.  Finals
+        # are all-gathered back to global neuron order at the end.
+        from repro.core import plasticity as PLC
+
+        plast = self.plast
+        plast_shards = self._plast_shards
+        reward = plast.mode == "reward"
+        n_pres = [lt.n_pre for lt in tbl.layers]
+
+        def body_plast(trains, idx0, *stacks):
+            local = [s[0] for s in stacks]
+            nbase = 3 * len(shl)
+            w_l = local[0:nbase:3]
+            nzw_l = local[1:nbase:3]
+            oh_l = local[2:nbase:3]
+            extra = local[nbase:]
+            cbw_l: dict[int, jax.Array] = {}
+            k = 0
+            for li, ps in enumerate(plast_shards):
+                if ps is not None:
+                    cbw_l[li] = extra[k]
+                    k += 1
+            idx_l = [None if x is None else x[0] for x in idx0]
+
+            def step_plast(carry, xs):
+                states, pidx, xpre, xpost, elig = carry
+                spikes, t = xs if drop is not None else (xs, None)
+                wall = jnp.zeros((n_active,), jnp.float32)
+                nnzs, toucheds, fireds, skips, wr = [], [], [], [], []
+                fired_cores = {}
+                new_states = []
+                nidx, nxpre, nxpost, nelig = (list(pidx), list(xpre),
+                                              list(xpost), list(elig))
+                for li, sl in enumerate(shl):
+                    lt, slices, core_idx = layer_consts[li]
+                    learns = li in cbw_l
+                    if learns:
+                        w = PLC.dequant_indices(pidx[li], cbw_l[li])
+                        nzw = (w != 0).astype(jnp.float32)
+                    else:
+                        w = w_l[li]
+                        nzw = nzw_l[li]
+                    nnz = jnp.sum(spikes != 0).astype(jnp.float32)
+                    if trace_skips:
+                        skips.append(Z.empty_spike_words(
+                            Z.pack_spike_words(spikes))
+                            .astype(jnp.float32))
+                    current = spikes @ w            # (width,) local
+                    st, out_l, touched_l = lif_step(
+                        states[li], current, lif,
+                        touched=touch_mask(spikes, nzw))
+                    new_states.append(st)
+                    tsum = jax.lax.psum(
+                        jnp.sum(touched_l).astype(jnp.float32), "cores")
+                    core_touched = jax.lax.psum(
+                        touched_l.astype(jnp.float32) @ oh_l[li], "cores")
+                    core_writes = None
+                    writes_l = jnp.float32(0.0)
+                    if learns:
+                        if reward:
+                            xp, xq, e = PLC.elig_step(
+                                plast, spikes, out_l, xpre[li],
+                                xpost[li], elig[li])
+                            nxpre[li], nxpost[li], nelig[li] = xp, xq, e
+                        else:
+                            ni, xp, xq, changed = PLC.stdp_step(
+                                plast, spikes, out_l, xpre[li],
+                                xpost[li], pidx[li], cbw_l[li])
+                            nidx[li], nxpre[li], nxpost[li] = ni, xp, xq
+                            col_ch = jnp.sum(changed, axis=0
+                                             ).astype(jnp.float32)
+                            core_writes = jax.lax.psum(
+                                col_ch @ oh_l[li], "cores")
+                            writes_l = jax.lax.psum(
+                                jnp.sum(col_ch), "cores")
+                    core_cyc = cyc.timestep_cycles_array(
+                        lt.n_pre, slices, nnz, core_touched,
+                        sim.zero_skip, sim.partial_update,
+                        writes=core_writes)
+                    wall = wall + jax.ops.segment_sum(
+                        core_cyc, core_idx, num_segments=n_active)
+                    if has_flow[li] or traced:
+                        fired_cores[f"fired_core_{li}"] = jax.lax.psum(
+                            out_l @ oh_l[li], "cores")
+                    if traced:
+                        fired_cores[f"touched_core_{li}"] = core_touched
+                    packed = Z.pack_spike_words(out_l)
+                    gathered = jax.lax.all_gather(packed, "cores",
+                                                  tiled=True)
+                    bits = Z.unpack_spike_words(
+                        gathered, S * sl.words * Z.SPIKE_WORD_BITS)
+                    spikes = bits[sl.pos]
+                    nnzs.append(nnz)
+                    toucheds.append(tsum)
+                    fireds.append(jnp.sum(spikes).astype(jnp.float32))
+                    wr.append(writes_l)
+                    if drop is not None and drop.keep_p[li] is not None:
+                        spikes = spikes * drop.mask(li, t)
+                ys = {
+                    "nnz": jnp.stack(nnzs),
+                    "touched": jnp.stack(toucheds),
+                    "fired": jnp.stack(fireds),
+                    "writes": jnp.stack(wr),
+                    "wall": jnp.max(wall),
+                    "out": spikes,
+                    **fired_cores,
+                }
+                if trace_skips:
+                    ys["skip_words"] = jnp.stack(skips)
+                return (tuple(new_states), nidx, nxpre, nxpost, nelig), ys
+
+            def one_sample(train, i0):
+                states = tuple(init_state(sl.width) for sl in shl)
+                xpre0 = [None if i is None else
+                         jnp.zeros((n_pres[li],), jnp.float32)
+                         for li, i in enumerate(i0)]
+                xpost0 = [None if i is None else
+                          jnp.zeros((shl[li].width,), jnp.float32)
+                          for li, i in enumerate(i0)]
+                elig0 = [jnp.zeros((n_pres[li], shl[li].width),
+                                   jnp.float32)
+                         if (i is not None and reward) else None
+                         for li, i in enumerate(i0)]
+                xs = (train if drop is None
+                      else (train, jnp.arange(train.shape[0])))
+                carry = (states, list(i0), xpre0, xpost0, elig0)
+                final, ys = jax.lax.scan(step_plast, carry, xs)
+                _, fidx, _, _, felig = final
+                for li, i in enumerate(i0):
+                    if i is not None:
+                        ys[f"learned_loc_{li}"] = fidx[li]
+                        if reward:
+                            ys[f"elig_loc_{li}"] = felig[li]
+                return ys
+
+            ys = jax.vmap(one_sample)(trains, idx_l)
+
+            def to_global(loc, colpos):
+                # (B, n_pre, width) local -> (B, n_pre, n_post) global,
+                # replicated across the cores axis
+                g = jax.lax.all_gather(loc, "cores", tiled=False)
+                flat = jnp.transpose(g, (1, 2, 0, 3))
+                flat = flat.reshape(flat.shape[0], flat.shape[1], -1)
+                return flat[..., colpos]
+
+            for li, ps in enumerate(plast_shards):
+                if ps is None:
+                    continue
+                ys[f"learned_idx_{li}"] = to_global(
+                    ys.pop(f"learned_loc_{li}"), ps[1])
+                if reward:
+                    ys[f"elig_{li}"] = to_global(
+                        ys.pop(f"elig_loc_{li}"), ps[1])
+            return ys
+
+        return body_plast
 
     def _make_executable(self, nb: int):
         try:
@@ -740,14 +1194,25 @@ class ShardedEngine(_EngineBase):
         for sl in self.sharded_layers:
             stacks.extend((sl.w, sl.nzw, sl.onehot))
         body = self._build_body()
+        if not self.plast.enabled:
+            fn = shard_map(
+                body, mesh=mesh,
+                in_specs=(P("batch"),) + (P("cores"),) * len(stacks),
+                out_specs=P("batch"), check_rep=False)
+            jfn = jax.jit(fn)
+            return lambda trains: jfn(trains, *stacks)
+        plast_stacks = [ps[0] for ps in self._plast_shards
+                        if ps is not None]
         fn = shard_map(
             body, mesh=mesh,
-            in_specs=(P("batch"),) + (P("cores"),) * len(stacks),
+            in_specs=(P("batch"), P("cores", "batch"))
+            + (P("cores"),) * (len(stacks) + len(plast_stacks)),
             out_specs=P("batch"), check_rep=False)
         jfn = jax.jit(fn)
-        return lambda trains: jfn(trains, *stacks)
+        return lambda trains, idx0: jfn(
+            trains, self._shard_learned(idx0), *stacks, *plast_stacks)
 
-    def run_raw(self, spike_trains: jax.Array) -> dict:
+    def run_raw(self, spike_trains: jax.Array, learned=None) -> dict:
         trains = jnp.asarray(spike_trains, jnp.float32)
         if trains.ndim != 3:
             raise ValueError(f"expected (batch, T, n_in), got {trains.shape}")
@@ -757,7 +1222,13 @@ class ShardedEngine(_EngineBase):
         if nb not in self._exec:
             self._exec[nb] = self._make_executable(nb)
         self.last_run_sharded = self.n_shards > 1 or nb > 1
-        return self._exec[nb](trains)
+        if not self.plast.enabled:
+            if learned is not None:
+                raise ValueError("learned indexes passed but plasticity "
+                                 "is off")
+            return self._exec[nb](trains)
+        return self._exec[nb](
+            trains, self._initial_learned(int(trains.shape[0]), learned))
 
 
 class FusedEngine(_EngineBase):
@@ -890,18 +1361,139 @@ class FusedEngine(_EngineBase):
             }
             return tuple(new_states), ys
 
-        def run(packed_trains, states):      # (B, T, kw0) uint16, LIFStates
+        if not self.plast.enabled:
+            def run(packed_trains, states):  # (B, T, kw0) uint16, LIFStates
+                packed_t = jnp.swapaxes(packed_trains, 0, 1)
+                xs = (packed_t if drop is None
+                      else (packed_t, jnp.arange(packed_t.shape[0])))
+                final, ys = jax.lax.scan(step, states, xs)
+                ys = jax.tree_util.tree_map(
+                    lambda a: jnp.swapaxes(a, 0, 1), ys)
+                # final states are returned so the donated membrane buffers
+                # have same-shaped outputs to alias into (in-place update)
+                return ys, final
+
+            return run
+
+        # ---- plasticity path ---------------------------------------------
+        # Learnable layers leave the Pallas kernel and run the batched jnp
+        # program instead: their weights are per-sample scan state, which
+        # the kernel's static closure operands cannot express.  The jnp
+        # expressions (unpack -> per-column dequant gather -> batched
+        # matmul -> elementwise lif_step) are the batch-native form of
+        # exactly what the compiled engine traces per sample under vmap,
+        # so the two engines stay bit-identical at word-aligned widths.
+        # Frozen layers keep the fused kernel.
+        from repro.core import plasticity as PLC
+
+        plast = self.plast
+        cbws = [None if pt is None else jnp.asarray(pt[1])
+                for pt in self.plast_tables]
+        reward = plast.mode == "reward"
+
+        def step_plast(carry, xs):
+            from repro.core.neuron import LIFState
+
+            states, pidx, xpre, xpost, elig = carry
+            packed, t = xs if drop is not None else (xs, None)
+            B = packed.shape[0]
+            wall = jnp.zeros((B, n_active), jnp.float32)
+            nnzs, toucheds, fireds, skips, wr = [], [], [], [], []
+            fired_cores = {}
+            new_states = []
+            nidx, nxpre, nxpost, nelig = (list(pidx), list(xpre),
+                                          list(xpost), list(elig))
+            out = None
+            for li, lw in enumerate(fused_w):
+                lt, slices, core_idx, onehot = layer_consts[li]
+                if cbws[li] is None:
+                    vo, eo, out, tc, nnz_rows, ew = layer_apply(
+                        li, packed, states[li])
+                    new_states.append(LIFState(v=vo, elapsed=eo))
+                    nnz = nnz_rows[:, 0].astype(jnp.float32)   # (B,)
+                    ew = ew[:, 0]
+                    core_writes = None
+                    writes_l = jnp.zeros((B,), jnp.float32)
+                else:
+                    s = Z.unpack_spike_words(packed)           # (B, kp)
+                    w = PLC.dequant_indices(pidx[li], cbws[li])
+                    current = jnp.einsum("bk,bkn->bn", s, w)
+                    nzw = (w != 0).astype(jnp.float32)
+                    tm = jnp.einsum("bk,bkn->bn", s, nzw) > 0
+                    st, out, tc = lif_step(states[li], current, lif,
+                                           touched=tm)
+                    new_states.append(st)
+                    nnz = jnp.sum(s != 0, axis=-1).astype(jnp.float32)
+                    ew = Z.empty_spike_words(packed)
+                    if reward:
+                        xp, xq, e = PLC.elig_step(
+                            plast, s, out, xpre[li], xpost[li], elig[li])
+                        nxpre[li], nxpost[li], nelig[li] = xp, xq, e
+                        core_writes = None
+                        writes_l = jnp.zeros((B,), jnp.float32)
+                    else:
+                        ni, xp, xq, changed = PLC.stdp_step(
+                            plast, s, out, xpre[li], xpost[li],
+                            pidx[li], cbws[li])
+                        nidx[li], nxpre[li], nxpost[li] = ni, xp, xq
+                        col_ch = jnp.sum(changed, axis=-2
+                                         ).astype(jnp.float32)  # (B, N)
+                        core_writes = col_ch @ onehot           # (B, A)
+                        writes_l = jnp.sum(col_ch, axis=-1)     # (B,)
+                tsum = jnp.sum(tc, axis=-1).astype(jnp.float32)
+                fired = jnp.sum(out, axis=-1)
+                core_touched = tc.astype(jnp.float32) @ onehot
+                core_cyc = cyc.timestep_cycles_array(
+                    lt.n_pre, slices, nnz[:, None], core_touched,
+                    sim.zero_skip, sim.partial_update, writes=core_writes)
+                wall = wall + jax.vmap(
+                    lambda c: jax.ops.segment_sum(
+                        c, core_idx, num_segments=n_active))(core_cyc)
+                if has_flow[li] or traced:
+                    fired_cores[f"fired_core_{li}"] = out @ onehot
+                if traced:
+                    fired_cores[f"touched_core_{li}"] = core_touched
+                nnzs.append(nnz)
+                toucheds.append(tsum)
+                fireds.append(fired)
+                skips.append(ew.astype(jnp.float32))
+                wr.append(writes_l)
+                nxt = (out * drop.mask(li, t)
+                       if drop is not None and drop.keep_p[li] is not None
+                       else out)
+                packed = Z.pack_spike_words(nxt)
+            ys = {
+                "nnz": jnp.stack(nnzs, axis=-1),               # (B, L)
+                "touched": jnp.stack(toucheds, axis=-1),
+                "fired": jnp.stack(fireds, axis=-1),
+                "skip_words": jnp.stack(skips, axis=-1),
+                "writes": jnp.stack(wr, axis=-1),
+                "wall": jnp.max(wall, axis=-1),                # (B,)
+                "out": out,                                    # (B, n_out)
+                **fired_cores,
+            }
+            return (tuple(new_states), nidx, nxpre, nxpost, nelig), ys
+
+        def run(packed_trains, carry):
             packed_t = jnp.swapaxes(packed_trains, 0, 1)
             xs = (packed_t if drop is None
                   else (packed_t, jnp.arange(packed_t.shape[0])))
-            final, ys = jax.lax.scan(step, states, xs)
+            final, ys = jax.lax.scan(step_plast, carry, xs)
             ys = jax.tree_util.tree_map(
                 lambda a: jnp.swapaxes(a, 0, 1), ys)
-            # final states are returned so the donated membrane buffers
-            # have same-shaped outputs to alias into (in-place update)
             return ys, final
 
         return run
+
+    def _adapt_learned(self, li: int, idx: jax.Array) -> jax.Array:
+        """Pad learned-index rows to the spike-word boundary.  Padded
+        rows never see a spike (their packed bits are zero) and their
+        pre-trace stays zero, so they are write-free fixed points."""
+        kp = self.fused_weights[li].kw * Z.SPIKE_WORD_BITS
+        pad = kp - int(idx.shape[-2])
+        if pad:
+            idx = jnp.pad(idx, [(0, 0)] * (idx.ndim - 2) + [(0, pad), (0, 0)])
+        return idx
 
     def _make_executable(self, sharded: bool):
         from repro.core.neuron import LIFState
@@ -913,13 +1505,49 @@ class FusedEngine(_EngineBase):
         pack = jax.jit(Z.pack_spike_words)
         fused_w = self.fused_weights
 
-        def executable(trains):              # (B, T, n_in) f32
+        if not self.plast.enabled:
+            def executable(trains):          # (B, T, n_in) f32
+                B = int(trains.shape[0])
+                states = tuple(
+                    LIFState(v=jnp.zeros((B, lw.n_post), jnp.float32),
+                             elapsed=jnp.zeros((B, lw.n_post), jnp.int32))
+                    for lw in fused_w)
+                ys, self.last_states = run_jit(pack(trains), states)
+                return ys
+
+            return executable
+
+        plast_tables = self.plast_tables
+        reward = self.plast.mode == "reward"
+
+        def executable(trains, idx0):        # idx0: row-padded, B leading
             B = int(trains.shape[0])
             states = tuple(
                 LIFState(v=jnp.zeros((B, lw.n_post), jnp.float32),
                          elapsed=jnp.zeros((B, lw.n_post), jnp.int32))
                 for lw in fused_w)
-            ys, self.last_states = run_jit(pack(trains), states)
+            kps = [lw.kw * Z.SPIKE_WORD_BITS for lw in fused_w]
+            xpre0 = [None if pt is None else
+                     jnp.zeros((B, kps[li]), jnp.float32)
+                     for li, pt in enumerate(plast_tables)]
+            xpost0 = [None if pt is None else
+                      jnp.zeros((B, fused_w[li].n_post), jnp.float32)
+                      for li, pt in enumerate(plast_tables)]
+            elig0 = [jnp.zeros((B, kps[li], fused_w[li].n_post),
+                               jnp.float32)
+                     if (pt is not None and reward) else None
+                     for li, pt in enumerate(plast_tables)]
+            carry = (states, list(idx0), xpre0, xpost0, elig0)
+            ys, final = run_jit(pack(trains), carry)
+            self.last_states = final[0]
+            fidx, felig = final[1], final[4]
+            for li, pt in enumerate(plast_tables):
+                if pt is None:
+                    continue
+                n_pre = fused_w[li].n_pre   # crop the word-boundary pad
+                ys[f"learned_idx_{li}"] = fidx[li][:, :n_pre, :]
+                if reward:
+                    ys[f"elig_{li}"] = felig[li][:, :n_pre, :]
             return ys
 
         return executable

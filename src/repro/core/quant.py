@@ -204,6 +204,34 @@ def memory_bytes(shape: tuple[int, ...], cfg: CodebookConfig, n_groups: int = 1)
     return (idx_bits + table_bits + 7) // 8
 
 
+def project_to_codebook(values: jax.Array, codebook: jax.Array) -> jax.Array:
+    """Nearest-level projection: float candidate weights -> int8 indexes.
+
+    This is the on-chip plasticity constraint (paper C3): a learning rule
+    may *compute* an update in float, but the synapse can only *store* a
+    codebook index, so every write lands on the nearest table level.
+
+    `codebook` is either a shared (N,) level vector, or an (N, cols)
+    per-column table whose column j quantizes `values[..., j]` (the form
+    the engines carry for a layer whose core slices program different
+    RegisterTables).  Ties resolve to the LOWEST index — the same
+    first-occurrence rule `quantize()` uses — which makes the projection
+    idempotent even when a table holds duplicate levels: re-projecting
+    `codebook[project(v)]` returns the identical indexes.  Unprogrammed
+    table rows are padded with +inf by the engine lowering, so they are
+    never selected.
+    """
+    v = jnp.asarray(values, jnp.float32)
+    cb = jnp.asarray(codebook, jnp.float32)
+    if cb.ndim == 1:
+        return jnp.argmin(jnp.abs(v[..., None] - cb), axis=-1).astype(jnp.int8)
+    if cb.ndim != 2 or cb.shape[-1] != v.shape[-1]:
+        raise ValueError(
+            f"codebook must be (N,) or (N, cols) with cols matching "
+            f"values' last axis; got {cb.shape} vs {v.shape}")
+    return jnp.argmin(jnp.abs(v[..., None, :] - cb), axis=-2).astype(jnp.int8)
+
+
 # ---------------------------------------------------------------------------
 # Register-table round trip — the chip's actual storage format for codebooks
 # ---------------------------------------------------------------------------

@@ -339,6 +339,7 @@ class StepStats:
     noc_energy_pj: float = 0.0
     noc_contention_cycles: float = 0.0  # M/M/1 bottleneck-router wait cycles
     spike_words_skipped: float = 0.0  # ZSPE word-scan skips (fused engine)
+    weight_writes: float = 0.0       # plasticity register-index writes
 
     @property
     def sparsity(self) -> float:
@@ -357,6 +358,7 @@ class ChipReport:
     riscv_energy_pj: float
     wall_cycles: float
     freq_hz: float
+    write_energy_pj: float = 0.0     # plasticity weight-write energy
 
     @property
     def pj_per_sop(self) -> float:
@@ -420,6 +422,7 @@ class ChipSimulator:
         lif=None,
         trace=None,                            # telemetry.TraceConfig
         faults=None,                           # faults.FaultConfig
+        plasticity=None,                       # plasticity.PlasticityConfig
     ):
         from repro.core.neuron import LIFParams  # local import to avoid cycle
         from repro.core import quant as Q
@@ -534,6 +537,15 @@ class ChipSimulator:
         # opt-in per-timestep capture (repro.telemetry): threaded through
         # every engine; trace-off lowers zero extra scan outputs
         self.trace = trace or TraceConfig()
+        # opt-in on-chip learning (core/plasticity.py): disabled lowers the
+        # exact inference programs (jaxpr-asserted, like trace/faults)
+        from repro.core.plasticity import NULL_PLASTICITY
+        self.plasticity = (plasticity if plasticity is not None
+                           else NULL_PLASTICITY)
+        self.write_model = E.WeightWriteModel()
+        self._plast_tables = None  # lazy lower_plasticity_tables result
+        self._ref_learned = None   # reference-engine learned indexes
+        self._ref_elig = None      # reference-engine eligibility traces
         self._last_trace = None  # reference-engine ChipTrace
         self._compiled = None    # CompiledEngine, built lazily
         self._fused = None       # FusedEngine, built lazily
@@ -586,6 +598,42 @@ class ChipSimulator:
             return eng.last_trace if eng is not None else None
         return self._last_trace
 
+    def plasticity_tables(self):
+        """Per-layer plasticity lowering: None for frozen layers, else the
+        (idx0 int8, cbw f32 inf-padded) pair every engine AND the reference
+        oracle learn over — one lowering, so initial state cannot drift."""
+        if self._plast_tables is None:
+            from repro.core.engine import lower_plasticity_tables
+            self._plast_tables = lower_plasticity_tables(self)
+        return self._plast_tables
+
+    @property
+    def last_learned(self):
+        """Per-layer learned codebook indexes from the most recent
+        plasticity-enabled run (None entries for frozen layers; batch axis
+        leading for batched runs)."""
+        if self.engine in ("compiled", "fused", "sharded"):
+            eng = {"fused": self._fused, "sharded": self._sharded,
+                   "compiled": self._compiled}[self.engine]
+            return eng.last_learned if eng is not None else None
+        return self._ref_learned
+
+    def apply_reward(self, reward):
+        """Reward-mode trial commit: turn the eligibility accumulated by
+        the last run into priced register writes (see
+        plasticity.commit_reward).  Returns the write-accounting dict."""
+        if self.engine in ("compiled", "fused", "sharded"):
+            return self.array_engine().apply_reward(reward)
+        from repro.core import plasticity as PLC
+        if self.plasticity.mode != "reward" or self._ref_elig is None:
+            raise ValueError("apply_reward needs a completed reward-mode "
+                             "run to commit")
+        self._ref_learned, info = PLC.commit_reward(
+            self.plasticity, self.plasticity_tables(), self._ref_learned,
+            self._ref_elig, reward, self.write_model, self.cycle_model)
+        self._ref_elig = None
+        return info
+
     def _build_register_tables(self) -> list[RegisterTable]:
         """One programmed RegisterTable per core assignment.  With quantized
         weights the core's shared table is the layer codebook (the group
@@ -622,40 +670,93 @@ class ChipSimulator:
             raise TransientChipFault(
                 f"injected transient fault at dispatch {i}")
 
-    def run(self, spike_train: jax.Array) -> tuple[jax.Array, ChipReport]:
+    def run(self, spike_train: jax.Array,
+            learned=None) -> tuple[jax.Array, ChipReport]:
         """spike_train: (T, n_in) binary.  Returns (out_spike_counts, report).
 
         Dispatches to the engine selected at construction; all engines
-        return identical spikes and matching accounting.
+        return identical spikes and matching accounting.  `learned`
+        (plasticity only) warm-starts the learnable layers' codebook
+        indexes, e.g. with a previous run's `last_learned`.
         """
         if self.engine in ("compiled", "fused", "sharded"):
-            return self.array_engine().run(spike_train)
-        return self.run_reference(spike_train)
+            return self.array_engine().run(spike_train, learned=learned)
+        return self.run_reference(spike_train, learned=learned)
 
-    def run_batch(self, spike_trains: jax.Array
-                  ) -> tuple[jax.Array, list[ChipReport]]:
+    def run_batch(self, spike_trains: jax.Array,
+                  learned=None) -> tuple[jax.Array, list[ChipReport]]:
         """spike_trains: (B, T, n_in).  Returns ((B, n_out) counts, one
         ChipReport per sample).  The array engines run the batch as a
-        single XLA program; the reference engine loops samples."""
+        single XLA program; the reference engine loops samples.
+
+        With plasticity enabled every sample starts from the same initial
+        indexes (broadcast `learned`, or per-sample (B, ...) entries) and
+        `last_learned` holds per-sample finals — matching the array
+        engines' vmap semantics, NOT chaining learning across the batch.
+        """
         if self.engine in ("compiled", "fused", "sharded"):
-            return self.array_engine().run_batch(spike_trains)
-        outs, reports, traces = [], [], []
-        for b in range(int(spike_trains.shape[0])):
-            counts, rep = self.run_reference(spike_trains[b])
+            return self.array_engine().run_batch(spike_trains,
+                                                 learned=learned)
+        outs, reports, traces, finals, eligs = [], [], [], [], []
+        B = int(spike_trains.shape[0])
+        for b in range(B):
+            lb = None
+            if learned is not None:
+                lb = [None if l is None
+                      else (l[b] if np.ndim(l) == 3 else l)
+                      for l in learned]
+            counts, rep = self.run_reference(spike_trains[b], learned=lb)
             outs.append(counts)
             reports.append(rep)
+            if self._ref_learned is not None:
+                finals.append(self._ref_learned)
+                eligs.append(self._ref_elig)
             if self._last_trace is not None:
                 traces.append(self._last_trace)
         self._consume_transient_fault()
         if traces:
             from repro.telemetry.trace import ChipTrace
             self._last_trace = ChipTrace.concat(traces)
+        if finals:
+            self._ref_learned = [
+                None if finals[0][li] is None
+                else jnp.stack([f[li] for f in finals])
+                for li in range(len(finals[0]))]
+            self._ref_elig = (None if eligs[0] is None else [
+                None if eligs[0][li] is None
+                else jnp.stack([e[li] for e in eligs])
+                for li in range(len(eligs[0]))])
         return jnp.stack(outs), reports
 
-    def run_reference(self, spike_train: jax.Array
-                      ) -> tuple[jax.Array, ChipReport]:
+    def run_reference(self, spike_train: jax.Array,
+                      learned=None) -> tuple[jax.Array, ChipReport]:
         """The interpretive per-timestep loop (differential-test oracle)."""
         from repro.core.neuron import init_state, lif_step, touch_mask
+
+        plast = self.plasticity
+        if learned is not None and not plast.enabled:
+            raise ValueError("learned indexes passed but plasticity is off")
+        idx = x_pre = x_post = elig = cbws = None
+        if plast.enabled:
+            ptables = self.plasticity_tables()
+            cbws = [None if pt is None else jnp.asarray(pt[1])
+                    for pt in ptables]
+            idx, x_pre, x_post, elig = [], [], [], []
+            for li, pt in enumerate(ptables):
+                if pt is None:
+                    idx.append(None)
+                    x_pre.append(None)
+                    x_post.append(None)
+                    elig.append(None)
+                    continue
+                i0 = pt[0] if learned is None or learned[li] is None \
+                    else learned[li]
+                idx.append(jnp.asarray(i0, jnp.int8))
+                n_pre, n_post = (int(s) for s in self.weights[li].shape)
+                x_pre.append(jnp.zeros((n_pre,), jnp.float32))
+                x_post.append(jnp.zeros((n_post,), jnp.float32))
+                elig.append(jnp.zeros((n_pre, n_post), jnp.float32)
+                            if plast.mode == "reward" else None)
 
         T = int(spike_train.shape[0])
         states = [init_state(int(w.shape[1])) for w in self.weights]
@@ -670,6 +771,7 @@ class ChipSimulator:
         rec_touched: list[list[float]] = []
         rec_nnz: list[list[float]] = []
         rec_skip: list[list[float]] = []
+        rec_writes: list[list[float]] = []
 
         for t in range(T):
             spikes = spike_train[t].astype(jnp.float32)
@@ -680,7 +782,19 @@ class ChipSimulator:
                 rec_touched.append([])
                 rec_nnz.append([])
                 rec_skip.append([])
-            for li, w in enumerate(self.weights):
+                rec_writes.append([])
+            for li in range(len(self.weights)):
+                learns = plast.enabled and idx[li] is not None
+                if learns:
+                    # live weights from the carried indexes — the SAME
+                    # jnp expressions the array engines lower, so spikes
+                    # and learned indexes stay bit-identical
+                    from repro.core import plasticity as PLC
+                    w = PLC.dequant_indices(idx[li], cbws[li])
+                    nzw = (w != 0).astype(jnp.float32)
+                else:
+                    w = self.weights[li]
+                    nzw = self.nonzero_weights[li]
                 n_pre, n_post = int(w.shape[0]), int(w.shape[1])
                 nnz = float(jnp.sum(spikes != 0))
                 acc.spikes_in += nnz
@@ -693,13 +807,31 @@ class ChipSimulator:
                 current = spikes @ w
                 st, out, touched = lif_step(
                     states[li], current, self.lif,
-                    touched=touch_mask(spikes, self.nonzero_weights[li]))
+                    touched=touch_mask(spikes, nzw))
                 states[li] = st
                 acc.nominal_sops += n_pre * n_post
                 acc.performed_sops += nnz * n_post
                 acc.neurons_touched += float(jnp.sum(touched))
                 touched_np = np.asarray(touched)
                 out_np = np.asarray(out)
+                col_ch = None
+                if learns:
+                    if plast.mode == "stdp":
+                        nidx, xp, xq, changed = PLC.stdp_step(
+                            plast, spikes, out, x_pre[li], x_post[li],
+                            idx[li], cbws[li])
+                        idx[li], x_pre[li], x_post[li] = nidx, xp, xq
+                        col_ch = np.asarray(
+                            jnp.sum(changed, axis=0), np.float64)
+                        acc.weight_writes += float(col_ch.sum())
+                    else:
+                        xp, xq, e = PLC.elig_step(
+                            plast, spikes, out, x_pre[li], x_post[li],
+                            elig[li])
+                        x_pre[li], x_post[li], elig[li] = xp, xq, e
+                if traced:
+                    rec_writes[-1].append(
+                        float(col_ch.sum()) if col_ch is not None else 0.0)
                 asn = self.mapping.cores_of_layer(li + 1)
                 # cycles for each core holding a slice of this layer, from
                 # the exact (integer) touched count of the core's slice
@@ -708,7 +840,10 @@ class ChipSimulator:
                         touched_np[a.neuron_lo:a.neuron_hi].sum())
                     cyc = self.cycle_model.timestep_cycles(
                         n_pre, a.n_neurons, nnz, core_touched,
-                        self.zero_skip, self.partial_update)
+                        self.zero_skip, self.partial_update,
+                        writes=(float(
+                            col_ch[a.neuron_lo:a.neuron_hi].sum())
+                            if col_ch is not None else None))
                     per_core_cycles[a.core_id] = per_core_cycles.get(a.core_id, 0.0) + cyc
                     if traced:
                         rec_touched[-1].append(core_touched)
@@ -747,6 +882,9 @@ class ChipSimulator:
             acc.noc_contention_cycles += cont
             wall += core_wall + cont
 
+        if plast.enabled:
+            self._ref_learned = idx
+            self._ref_elig = elig if plast.mode == "reward" else None
         if traced:
             from repro.telemetry.trace import build_trace
             self._last_trace = build_trace(
@@ -755,7 +893,9 @@ class ChipSimulator:
                 np.asarray(rec_touched, np.float64)[None],
                 np.asarray(rec_nnz, np.float64)[None],
                 (np.asarray(rec_skip, np.float64)[None]
-                 if trace_skips else None))
+                 if trace_skips else None),
+                weight_writes=(np.asarray(rec_writes, np.float64)[None]
+                               if plast.enabled else None))
         return out_counts, self._report(T, acc, wall)
 
     def _report(self, steps: int, acc: StepStats, wall: float) -> ChipReport:
@@ -766,14 +906,16 @@ class ChipSimulator:
             nominal_sops=acc.nominal_sops, performed_sops=acc.performed_sops,
             noc_energy_pj=acc.noc_energy_pj, wall_cycles=wall, steps=steps,
             freq_hz=self.freq_hz, zero_skip=self.zero_skip,
-            partial_update=self.partial_update)
+            partial_update=self.partial_update,
+            weight_writes=acc.weight_writes, write_model=self.write_model)
         return ChipReport(
             steps=steps, stats=acc,
             energy_pj=float(priced["total_pj"]),
             core_energy_pj=float(priced["core_pj"]),
             noc_energy_pj=acc.noc_energy_pj,
             riscv_energy_pj=float(priced["riscv_pj"]),
-            wall_cycles=wall, freq_hz=self.freq_hz)
+            wall_cycles=wall, freq_hz=self.freq_hz,
+            write_energy_pj=float(priced["write_pj"]))
 
 
 # ---------------------------------------------------------------------------

@@ -105,6 +105,9 @@ class CoreGeometry:
     freq_hz: float = 200e6       # nominal core clock
     max_neurons: int = 8192      # 160K neurons / 20 cores
     pipeline_depth: int = 4      # caches -> ZSPE -> SPE -> updater
+    write_lanes: int = 4         # register-table index writes per cycle
+                                 # (plasticity stage; shares the SPE port
+                                 # width into the weight-index SRAM)
 
 
 @dataclasses.dataclass(frozen=True)
@@ -140,11 +143,17 @@ class CycleModel:
 
     def timestep_cycles(self, n_pre: int, n_post: int, nnz: float,
                         touched: float, zero_skip: bool = True,
-                        partial_update: bool = True) -> float:
+                        partial_update: bool = True,
+                        writes: float | None = None) -> float:
         load, syn, upd = self.stage_cycles(
             n_pre, n_post, nnz, touched, zero_skip, partial_update)
         # 4-stage pipeline: stages overlap; throughput set by slowest stage.
-        return max(load, syn, upd) + self.geom.pipeline_depth
+        crit = max(load, syn, upd)
+        if writes is not None:
+            # plasticity stage: register-table index writes drain through
+            # `write_lanes` ports, overlapped with the other stages
+            crit = max(crit, math.ceil(writes / self.geom.write_lanes))
+        return crit + self.geom.pipeline_depth
 
     def stage_cycles_array(self, n_pre: int, n_post, nnz, touched,
                            zero_skip: bool = True, partial_update: bool = True):
@@ -164,11 +173,20 @@ class CycleModel:
 
     def timestep_cycles_array(self, n_pre: int, n_post, nnz, touched,
                               zero_skip: bool = True,
-                              partial_update: bool = True):
-        """Array-native `timestep_cycles` (jnp.maximum instead of max())."""
+                              partial_update: bool = True,
+                              writes=None):
+        """Array-native `timestep_cycles` (jnp.maximum instead of max()).
+
+        `writes=None` (the inference default) emits the exact pre-plasticity
+        expression, keeping the plasticity-off jaxpr unchanged.  With
+        integer-exact write counts and a power-of-two `write_lanes` the f32
+        division is exact, so ceil here agrees with the scalar path's
+        math.ceil bit-for-bit."""
         load, syn, upd = self.stage_cycles_array(
             n_pre, n_post, nnz, touched, zero_skip, partial_update)
         crit = jnp.maximum(jnp.maximum(jnp.asarray(load, jnp.float32), syn), upd)
+        if writes is not None:
+            crit = jnp.maximum(crit, jnp.ceil(writes / self.geom.write_lanes))
         return crit + self.geom.pipeline_depth
 
     def sop_count(self, n_pre: int, n_post: int, nnz: float,

@@ -50,6 +50,11 @@ class EventStream:
     width: int = 34
     timesteps: int = 20
     seed: int = 0
+    angle_offset: float = 0.0   # global motion-direction drift (radians):
+                                # models a rotated sensor / changed scene
+                                # statistics for continual-adaptation runs
+                                # (offset 2*pi/n_classes = exactly one
+                                # class-slot, i.e. a label permutation)
 
     @property
     def n_inputs(self) -> int:
@@ -62,7 +67,7 @@ class EventStream:
         the trailing edge (how a DVS sees motion)."""
         t = np.arange(self.timesteps)[:, None, None]
         ys, xs = np.mgrid[0:self.height, 0:self.width]
-        angle = 2 * np.pi * label / self.n_classes
+        angle = 2 * np.pi * label / self.n_classes + self.angle_offset
         cy = self.height / 2 + (t - self.timesteps / 2) * 0.8 * np.sin(angle)
         cx = self.width / 2 + (t - self.timesteps / 2) * 0.8 * np.cos(angle)
         d2 = (ys - cy) ** 2 + (xs - cx) ** 2

@@ -10,11 +10,13 @@
 See examples/train_deploy_nmnist.py for the runnable walkthrough and
 benchmarks/deploy_bench.py for the regularized-vs-baseline study.
 """
+from repro.deploy.adapt import AdaptConfig, AdaptReport, continual_adaptation
 from repro.deploy.pipeline import DeployConfig, deploy
 from repro.deploy.quantize import PerCoreQuant, fit_per_core_codebooks
 from repro.deploy.report import DeployReport, ParityGates
 
 __all__ = [
-    "DeployConfig", "DeployReport", "ParityGates", "PerCoreQuant",
-    "deploy", "fit_per_core_codebooks",
+    "AdaptConfig", "AdaptReport", "DeployConfig", "DeployReport",
+    "ParityGates", "PerCoreQuant", "continual_adaptation", "deploy",
+    "fit_per_core_codebooks",
 ]

@@ -17,7 +17,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.core.neuron import LIFParams, LIFState, lif_step
-from repro.core.quant import CodebookConfig, dequantize, fake_quant, quantize
+from repro.core.quant import CodebookConfig, fake_quant
 
 
 @dataclasses.dataclass(frozen=True)
@@ -118,23 +118,3 @@ def loss_fn(params, cfg: SNNConfig, spikes, labels):
 def accuracy(params, cfg: SNNConfig, spikes, labels) -> jax.Array:
     counts, _ = forward(params, cfg, spikes)
     return jnp.mean((jnp.argmax(counts, axis=-1) == labels).astype(jnp.float32))
-
-
-@partial(jax.jit, static_argnames=("cfg", "lr"))
-def sgd_step(params, cfg: SNNConfig, spikes, labels, lr: float = 0.5):
-    """Plain-SGD compatibility step.  New code should use
-    train.snn_trainer.SNNTrainer (AdamW, hardware-aware losses,
-    checkpoint/resume); this stays as the minimal dependency-free loop."""
-    (loss, stats), grads = jax.value_and_grad(loss_fn, has_aux=True)(
-        params, cfg, spikes, labels)
-    new_params = [p - lr * g for p, g in zip(params, grads)]
-    return new_params, loss, stats
-
-
-def quantize_for_chip(params, cfg: SNNConfig):
-    """Post-training quantization to the chip's per-core codebooks."""
-    return [quantize(w, cfg.quant) for w in params]
-
-
-def dequantized(qparams):
-    return [dequantize(q) for q in qparams]

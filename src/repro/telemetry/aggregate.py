@@ -118,6 +118,9 @@ def profile(trace: ChipTrace,
             "pj_per_sop": (pj + npj) / max(nominal_li, 1.0),
             "skip_words": (None if trace.skip_words is None
                            else float(trace.skip_words[..., li].sum())),
+            "weight_writes": (None if trace.weight_writes is None
+                              else float(
+                                  trace.weight_writes[..., li].sum())),
             "share": (pj + npj) / attributable,
         })
 
@@ -179,6 +182,9 @@ def profile(trace: ChipTrace,
             "spike_words_skipped": (
                 None if trace.skip_words is None
                 else float(trace.skip_words.sum())),
+            "weight_writes": (
+                None if trace.weight_writes is None
+                else float(trace.weight_writes.sum())),
         },
         "layers": layers,
         "cores": cores,

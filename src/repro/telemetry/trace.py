@@ -76,6 +76,7 @@ class ChipTrace:
     touched: np.ndarray           # (B, T, S) membrane updates per slice
     nnz: np.ndarray               # (B, T, L) input spikes per layer
     skip_words: np.ndarray | None  # (B, T, L) ZSPE skip-word counts
+    weight_writes: np.ndarray | None  # (B, T, L) plasticity index writes
 
     # host-derived series (build_trace, float64, engine-independent)
     cycles: np.ndarray            # (B, T, S) per-slice timestep cycles
@@ -114,6 +115,9 @@ class ChipTrace:
         assert self.nnz.shape == (B, T, L), self.nnz.shape
         if self.skip_words is not None:
             assert self.skip_words.shape == (B, T, L), self.skip_words.shape
+        if self.weight_writes is not None:
+            assert self.weight_writes.shape == (B, T, L), \
+                self.weight_writes.shape
         assert self.cycles.shape == (B, T, S)
         assert self.core_cycles.shape == (B, T, len(self.core_ids))
         assert self.core_wall.shape == (B, T)
@@ -133,9 +137,9 @@ class ChipTrace:
         cat = {}
         for f in dataclasses.fields(ChipTrace):
             v = getattr(head, f.name)
-            if f.name == "skip_words":
+            if f.name in ("skip_words", "weight_writes"):
                 cat[f.name] = (None if v is None else np.concatenate(
-                    [t.skip_words for t in traces], axis=0))
+                    [getattr(t, f.name) for t in traces], axis=0))
             elif isinstance(v, np.ndarray) and v.ndim >= 2:
                 cat[f.name] = np.concatenate(
                     [getattr(t, f.name) for t in traces], axis=0)
@@ -175,11 +179,14 @@ def _slice_cycles(sim: "ChipSimulator", nnz_layer, slice_n, n_pre):
 
 
 def build_trace(sim: "ChipSimulator", fired, touched, nnz,
-                skip_words=None) -> ChipTrace:
+                skip_words=None, weight_writes=None) -> ChipTrace:
     """Assemble a ChipTrace from an engine's raw counters.
 
     fired/touched: (B, T, S) per-slice integer counts in layer-major
-    slice order; nnz: (B, T, L); skip_words: (B, T, L) or None.  All
+    slice order; nnz: (B, T, L); skip_words/weight_writes: (B, T, L) or
+    None.  `weight_writes` is the plasticity register-write count per
+    layer-step (raw counter only — its stage cycles are priced in-scan
+    per core, and its energy by `WeightWriteModel` in the report).  All
     derived series are computed here — identically for every engine.
     """
     fired = np.asarray(fired, np.float64)
@@ -187,6 +194,8 @@ def build_trace(sim: "ChipSimulator", fired, touched, nnz,
     nnz = np.asarray(nnz, np.float64)
     if skip_words is not None:
         skip_words = np.asarray(skip_words, np.float64)
+    if weight_writes is not None:
+        weight_writes = np.asarray(weight_writes, np.float64)
     B, T, S = fired.shape
     L = nnz.shape[2]
     slice_layer, slice_core, slice_neurons, n_pres = slice_metadata(sim)
@@ -231,6 +240,7 @@ def build_trace(sim: "ChipSimulator", fired, touched, nnz,
         slice_layer=slice_layer, slice_core=slice_core,
         slice_neurons=slice_neurons, core_ids=active, n_nodes=n_nodes,
         fired=fired, touched=touched, nnz=nnz, skip_words=skip_words,
+        weight_writes=weight_writes,
         cycles=cycles, core_cycles=core_cycles, core_wall=core_wall,
         router_load=router_load, contention_cycles=contention,
         noc_hops=noc_hops, noc_pj=noc_pj)

@@ -1,0 +1,274 @@
+"""On-chip plasticity (PR-10): differential engine parity for the
+learning rules, the zero-cost-off jaxpr claim, reward-commit semantics,
+write pricing, and the faults-interplay ordering regression.
+
+Contracts pinned here:
+* one PlasticityConfig => bit-identical spikes AND learned codebook
+  indexes across the reference oracle and all three array engines
+  (compiled / sharded / fused); report accounting within 1e-6 — the
+  rules are one jnp implementation (core/plasticity.py) shared by all;
+* a disabled config is provably free: the compiled engine lowers to the
+  SAME jaxpr with plasticity=None, NULL_PLASTICITY and a default
+  PlasticityConfig() (like TraceConfig and FaultConfig);
+* dw == 0 never writes (codebook projection is a fixed point on its own
+  levels), so a silent input costs zero write energy;
+* reward mode accumulates eligibility in-scan and commits *once* at
+  trial end; the committed indexes warm-start the next run;
+* FaultConfig codebook corruption composes with plasticity by
+  corrupting the *initial* indices only — faults apply to the register
+  tables BEFORE the plasticity lowering reads them, bit-identically
+  across engines.
+"""
+import dataclasses
+import re
+
+import jax
+import numpy as np
+import pytest
+
+from repro.core.plasticity import NULL_PLASTICITY, PlasticityConfig
+from repro.core.quant import CodebookConfig
+from repro.core.soc import ChipSimulator
+from repro.faults import CodebookFault, FaultConfig
+
+SIZES = [64, 96, 96, 16]          # widths stay multiples of 16 (fused pack)
+QUANT = CodebookConfig(n_levels=8, bit_width=8)
+STDP = PlasticityConfig(enabled=True, mode="stdp", lr=0.4)
+REWARD = PlasticityConfig(enabled=True, mode="reward", lr=0.4,
+                          elig_pre=0.1, layers=(2,))
+
+ENGINES = ("compiled", "sharded", "fused")
+
+REPORT_FIELDS = ("energy_pj", "core_energy_pj", "noc_energy_pj",
+                 "riscv_energy_pj", "wall_cycles", "write_energy_pj")
+
+
+def _weights(sizes=SIZES, seed=0):
+    rng = np.random.default_rng(seed)
+    return [np.asarray(rng.normal(0, 1.2 / np.sqrt(a), (a, b)), np.float32)
+            for a, b in zip(sizes[:-1], sizes[1:])]
+
+
+def _trains(sizes=SIZES, batch=4, T=6, seed=1):
+    rng = np.random.default_rng(seed)
+    return np.asarray(rng.random((batch, T, sizes[0])) < 0.25, np.float32)
+
+
+def _sim(engine, plast=None, faults=None, mapping=None):
+    return ChipSimulator(_weights(), engine=engine, quant_cfg=QUANT,
+                         plasticity=plast, faults=faults, mapping=mapping)
+
+
+def _assert_learned_equal(a, b, msg=""):
+    assert len(a) == len(b)
+    for la, lb in zip(a, b):
+        assert (la is None) == (lb is None), msg
+        if la is not None:
+            np.testing.assert_array_equal(np.asarray(la), np.asarray(lb),
+                                          err_msg=msg)
+
+
+def _assert_parity(ref, comp, trains, msg=""):
+    c_r, reps_r = ref.run_batch(trains)
+    c_c, reps_c = comp.run_batch(trains)
+    np.testing.assert_array_equal(np.asarray(c_r), np.asarray(c_c),
+                                  err_msg=f"{msg}: spikes")
+    _assert_learned_equal(ref.last_learned, comp.last_learned,
+                          f"{msg}: learned indexes")
+    for a, b in zip(reps_r, reps_c):
+        assert a.stats.weight_writes == b.stats.weight_writes, msg
+        for f in REPORT_FIELDS:
+            va, vb = getattr(a, f), getattr(b, f)
+            assert abs(va - vb) <= 1e-6 * max(abs(va), 1.0), (msg, f, va, vb)
+    return reps_r
+
+
+# ---------------------------------------------------------------------------
+# differential parity: every engine learns the same thing
+
+
+@pytest.mark.parametrize("engine", ENGINES)
+@pytest.mark.parametrize("batch", [1, 4])
+def test_stdp_bit_identical_across_engines(engine, batch):
+    ref = _sim("reference", STDP)
+    comp = _sim(engine, STDP, mapping=ref.mapping)
+    reps = _assert_parity(ref, comp, _trains(batch=batch),
+                          f"stdp/{engine}/B{batch}")
+    assert sum(r.stats.weight_writes for r in reps) > 0
+    assert sum(r.write_energy_pj for r in reps) > 0
+
+
+@pytest.mark.parametrize("engine", ENGINES)
+def test_reward_bit_identical_across_engines(engine):
+    trains = _trains()
+    ref = _sim("reference", REWARD)
+    comp = _sim(engine, REWARD, mapping=ref.mapping)
+    reps = _assert_parity(ref, comp, trains, f"reward/{engine}")
+    # in-trial: eligibility only, zero register writes
+    assert all(r.stats.weight_writes == 0 for r in reps)
+
+    reward = np.zeros(SIZES[-1], np.float32)
+    reward[3] = 1.0
+    reward[7] = -1.0
+    info_r = ref.apply_reward(reward)
+    info_c = comp.apply_reward(reward)
+    np.testing.assert_array_equal(info_r["weight_writes"],
+                                  info_c["weight_writes"])
+    np.testing.assert_allclose(info_r["write_energy_pj"],
+                               info_c["write_energy_pj"], rtol=1e-6)
+    assert info_r["weight_writes"].sum() > 0
+    _assert_learned_equal(ref.last_learned, comp.last_learned,
+                          f"reward/{engine}: committed indexes")
+
+
+@pytest.mark.parametrize("engine", ENGINES)
+def test_warm_start_resumes_learning(engine):
+    trains = _trains()
+    sim = _sim(engine, STDP)
+    c_cold, _ = sim.run_batch(trains)
+    learned = sim.last_learned
+    assert any(l is not None for l in learned)
+    c_warm, _ = sim.run_batch(trains, learned=learned)
+    # the learned state changed the network's behaviour...
+    assert not np.array_equal(np.asarray(c_cold), np.asarray(c_warm))
+    # ...and warm-starting is deterministic
+    c_warm2, _ = sim.run_batch(trains, learned=learned)
+    np.testing.assert_array_equal(np.asarray(c_warm), np.asarray(c_warm2))
+
+
+def test_warm_start_agrees_across_engines():
+    trains = _trains()
+    sims = {e: _sim(e, STDP) for e in ("reference",) + ENGINES}
+    for sim in sims.values():
+        sim.run_batch(trains)
+    learned = sims["reference"].last_learned
+    base = None
+    for name, sim in sims.items():
+        counts, _ = sim.run_batch(trains, learned=learned)
+        if base is None:
+            base = np.asarray(counts)
+        else:
+            np.testing.assert_array_equal(base, np.asarray(counts),
+                                          err_msg=f"warm-start {name}")
+
+
+def test_silent_input_writes_nothing():
+    """dw == 0 is a projection fixed point: no spikes, no writes."""
+    sim = _sim("compiled", STDP)
+    zeros = np.zeros((2, 6, SIZES[0]), np.float32)
+    _, reps = sim.run_batch(zeros)
+    assert all(r.stats.weight_writes == 0 for r in reps)
+    assert all(r.write_energy_pj == 0 for r in reps)
+
+
+# ---------------------------------------------------------------------------
+# zero-cost off: the plasticity hooks vanish from the lowered program
+
+
+def _jaxpr(sim):
+    x = np.zeros((2, 4, SIZES[0]), np.float32)
+    s = str(jax.make_jaxpr(sim.array_engine().run_raw)(x))
+    return re.sub(r"0x[0-9a-f]+", "0x", s)
+
+
+def test_plasticity_off_lowers_to_identical_jaxpr():
+    assert _jaxpr(_sim("compiled")) == _jaxpr(_sim("compiled",
+                                                   NULL_PLASTICITY))
+    assert _jaxpr(_sim("compiled")) == _jaxpr(_sim("compiled",
+                                                   PlasticityConfig()))
+
+
+def test_plasticity_on_changes_the_jaxpr():
+    assert _jaxpr(_sim("compiled")) != _jaxpr(_sim("compiled", STDP))
+
+
+# ---------------------------------------------------------------------------
+# faults interplay (ordering regression): corruption hits the INITIAL
+# indices only, before any learning step, bit-identically everywhere
+
+
+CB_FAULT = FaultConfig(codebook_faults=(
+    CodebookFault(core_id=12, word=0, kind="stuck", value=3),
+    CodebookFault(core_id=13, word=2, kind="bitflip", bit=5),))
+
+
+def test_codebook_fault_corrupts_initial_plasticity_tables():
+    clean = _sim("compiled", STDP)
+    faulty = _sim("compiled", STDP, faults=CB_FAULT, mapping=clean.mapping)
+    pt_c, pt_f = clean.plasticity_tables(), faulty.plasticity_tables()
+    # the fault reprograms codebook words => the plasticity lowering
+    # (which runs AFTER fault application) must see the corrupted levels
+    diff = any(
+        a is not None and not np.array_equal(np.asarray(a[1]),
+                                             np.asarray(b[1]))
+        for a, b in zip(pt_c, pt_f))
+    assert diff, "codebook fault never reached the plasticity tables"
+    # ...and the corrupted chip learns a different trajectory
+    trains = _trains()
+    c_clean, _ = clean.run_batch(trains)
+    c_fault, _ = faulty.run_batch(trains)
+    assert not np.array_equal(np.asarray(c_clean), np.asarray(c_fault))
+    _assert_learned_equal(clean.last_learned, clean.last_learned)
+    different = any(
+        a is not None and not np.array_equal(np.asarray(a), np.asarray(b))
+        for a, b in zip(clean.last_learned, faulty.last_learned))
+    assert different
+
+
+@pytest.mark.parametrize("engine", ENGINES)
+def test_faulted_plasticity_bit_identical_across_engines(engine):
+    ref = _sim("reference", STDP, faults=CB_FAULT)
+    comp = _sim(engine, STDP, faults=CB_FAULT, mapping=ref.mapping)
+    _assert_parity(ref, comp, _trains(), f"fault+stdp/{engine}")
+
+
+# ---------------------------------------------------------------------------
+# config and error paths
+
+
+def test_learned_with_plasticity_off_raises():
+    sim = _sim("compiled")
+    idx = [None, None, None]
+    with pytest.raises(ValueError, match="plasticity"):
+        sim.run_batch(_trains(), learned=idx)
+
+
+def test_apply_reward_needs_reward_mode():
+    sim = _sim("compiled", STDP)
+    sim.run_batch(_trains())
+    with pytest.raises(ValueError, match="reward"):
+        sim.apply_reward(1.0)
+
+
+def test_apply_reward_needs_a_completed_run():
+    sim = _sim("compiled", REWARD)
+    with pytest.raises(ValueError, match="completed"):
+        sim.apply_reward(1.0)
+
+
+def test_vector_reward_width_mismatch_raises():
+    # layers=None makes BOTH hidden layers learnable (96 and 96 and 16
+    # wide) — a 16-wide error vector cannot broadcast onto all of them
+    all_learn = dataclasses.replace(REWARD, layers=None)
+    sim = _sim("compiled", all_learn)
+    sim.run_batch(_trains())
+    with pytest.raises(ValueError, match="readout"):
+        sim.apply_reward(np.ones(SIZES[-1], np.float32))
+
+
+def test_plasticity_requires_table_exact_codebooks():
+    with pytest.raises(ValueError, match="table-exact"):
+        ChipSimulator(_weights(), engine="compiled",
+                      plasticity=STDP).plasticity_tables()
+
+
+def test_bad_mode_raises():
+    with pytest.raises(ValueError, match="mode"):
+        PlasticityConfig(enabled=True, mode="hebbian")
+
+
+def test_empty_layer_selection_raises():
+    cfg = PlasticityConfig(enabled=True, layers=(99,))
+    with pytest.raises(ValueError, match="selects none"):
+        ChipSimulator(_weights(), engine="compiled", quant_cfg=QUANT,
+                      plasticity=cfg).plasticity_tables()

@@ -91,28 +91,122 @@ def test_chip_model_chip_never_beats_core():
 def test_snn_qat_matches_ptq_or_better():
     """Training WITH fake-quant (STE) should be at least as robust to the
     chip's 16x8 codebook as post-training quantization."""
+    from repro.core.quant import dequantize, quantize
     from repro.models import snn as SNN
+    from repro.train.snn_trainer import SNNTrainConfig, SNNTrainer
 
     ev = EventStream(timesteps=6, height=10, width=10, seed=3)
     base = SNN.SNNConfig(layer_sizes=(ev.n_inputs, 96, 10), timesteps=6)
     qat = dataclasses.replace(base, qat=True)
 
     def train(cfg):
-        params = SNN.init_params(cfg, jax.random.PRNGKey(1))
-        for step in range(40):
-            sp, lb = ev.batch(64, step)
-            params, _, _ = SNN.sgd_step(params, cfg, sp, lb, lr=0.3)
+        params, _ = SNNTrainer(
+            cfg, SNNTrainConfig(steps=40, batch=64, lr=4e-3, log_every=0)
+        ).fit(lambda step: ev.batch(64, step))
         return params
 
+    def chip_acc(params, cfg):
+        deq = [dequantize(quantize(w, cfg.quant)) for w in params]
+        return float(SNN.accuracy(deq, base, sp, lb))
+
     sp, lb = ev.batch(128, 7777)
-    p_fp = train(base)
-    acc_ptq = float(SNN.accuracy(
-        SNN.dequantized(SNN.quantize_for_chip(p_fp, base)), base, sp, lb))
-    p_qat = train(qat)
-    acc_qat = float(SNN.accuracy(
-        SNN.dequantized(SNN.quantize_for_chip(p_qat, qat)), base, sp, lb))
+    acc_ptq = chip_acc(train(base), base)
+    acc_qat = chip_acc(train(qat), qat)
     assert acc_qat >= acc_ptq - 0.08, (acc_qat, acc_ptq)
     assert acc_qat > 0.75
+
+
+# ---------------------------------------------------------------------------
+# codebook projection (the on-chip plasticity write constraint)
+# ---------------------------------------------------------------------------
+#
+# `quant.project_to_codebook` is the only way a learning rule can touch a
+# synapse (core/plasticity.py): float candidate -> nearest W-bit table
+# level.  The engine differential contract rides on three properties,
+# checked over every chip table geometry (N, W) in {4, 8, 16}^2:
+# idempotence (a projected weight re-projects to the same index, even
+# with duplicate table levels), exact fixed points on the levels
+# themselves, and bit-exact scalar/batched agreement.
+
+
+def _table_levels(rng, n: int, w: int, distinct: bool) -> np.ndarray:
+    """A plausible chip table: N signed W-bit words x a fixed-point step."""
+    lo, hi = -(2 ** (w - 1)), 2 ** (w - 1) - 1
+    words = rng.choice(np.arange(lo, hi + 1), size=n, replace=not distinct)
+    scale = np.float32(10.0 ** rng.uniform(-3, 1))
+    return (words.astype(np.float32) * scale).astype(np.float32)
+
+
+@settings(max_examples=40, deadline=None)
+@given(n=st.sampled_from((4, 8, 16)), w=st.sampled_from((4, 8, 16)),
+       seed=st.integers(0, 1000), distinct=st.booleans())
+def test_project_to_codebook_idempotent(n, w, seed, distinct):
+    """project(dequant(project(v))) == project(v) — duplicate levels
+    included (first-occurrence tie-breaking makes re-projection stable,
+    so dw == 0 can never be counted as a register write)."""
+    from repro.core.quant import project_to_codebook
+
+    rng = np.random.default_rng(seed)
+    cb = _table_levels(rng, n, w, distinct)
+    v = rng.normal(0, float(np.abs(cb).max() or 1.0), (5, 7)
+                   ).astype(np.float32)
+    idx = project_to_codebook(v, cb)
+    assert idx.dtype == jnp.int8
+    assert int(idx.min()) >= 0 and int(idx.max()) < n
+    again = project_to_codebook(cb[np.asarray(idx)], cb)
+    np.testing.assert_array_equal(np.asarray(idx), np.asarray(again))
+
+
+@settings(max_examples=40, deadline=None)
+@given(n=st.sampled_from((4, 8, 16)), w=st.sampled_from((4, 8, 16)),
+       seed=st.integers(0, 1000))
+def test_project_to_codebook_fixed_points(n, w, seed):
+    """Every distinct table level is an exact fixed point: projecting the
+    level vector itself returns 0..N-1 identically."""
+    from repro.core.quant import project_to_codebook
+
+    rng = np.random.default_rng(seed)
+    cb = _table_levels(rng, n, w, distinct=True)
+    idx = project_to_codebook(cb, cb)
+    np.testing.assert_array_equal(np.asarray(idx), np.arange(n))
+
+
+@settings(max_examples=25, deadline=None)
+@given(n=st.sampled_from((4, 8, 16)), w=st.sampled_from((4, 8, 16)),
+       seed=st.integers(0, 1000))
+def test_project_to_codebook_scalar_batched_agree(n, w, seed):
+    """One batched projection == N scalar projections, bit-exact — the
+    engines project whole (K, N) blocks in-scan while the reference
+    oracle could project element-wise; they must never disagree."""
+    from repro.core.quant import project_to_codebook
+
+    rng = np.random.default_rng(seed)
+    cb = _table_levels(rng, n, w, distinct=False)
+    v = rng.normal(0, float(np.abs(cb).max() or 1.0), (3, 6)
+                   ).astype(np.float32)
+    batched = np.asarray(project_to_codebook(v, cb))
+    scalar = np.array([[int(project_to_codebook(np.float32(x), cb))
+                        for x in row] for row in v], batched.dtype)
+    np.testing.assert_array_equal(batched, scalar)
+
+
+def test_project_to_codebook_per_column_tables():
+    """(N, cols) per-column form == column-wise 1-D projections (the
+    layout the engines carry when core slices program different
+    RegisterTables), and shape mismatches fail loudly."""
+    from repro.core.quant import project_to_codebook
+
+    rng = np.random.default_rng(9)
+    cols = 5
+    cb2 = np.stack([_table_levels(rng, 8, 8, True) for _ in range(cols)],
+                   axis=1)                                 # (N, cols)
+    v = rng.normal(0, 1, (4, cols)).astype(np.float32)
+    got = np.asarray(project_to_codebook(v, cb2))
+    want = np.stack([np.asarray(project_to_codebook(v[:, j], cb2[:, j]))
+                     for j in range(cols)], axis=1)
+    np.testing.assert_array_equal(got, want)
+    with pytest.raises(ValueError, match="codebook"):
+        project_to_codebook(v, cb2[:, :3])
 
 
 # ---------------------------------------------------------------------------

@@ -34,7 +34,9 @@ def test_qat_forward_equals_dequantized_forward():
     params = SNN.init_params(qat_cfg, jax.random.PRNGKey(5))
     sp, lb = EV.batch(16, 0)
     counts_qat, stats_qat = SNN.forward(params, qat_cfg, sp)
-    deq = SNN.dequantized(SNN.quantize_for_chip(params, qat_cfg))
+    from repro.core.quant import dequantize, quantize
+
+    deq = [dequantize(quantize(w, qat_cfg.quant)) for w in params]
     counts_deq, stats_deq = SNN.forward(deq, CFG, sp)
     np.testing.assert_array_equal(np.asarray(counts_qat),
                                   np.asarray(counts_deq))

@@ -23,31 +23,35 @@ from repro.models.common import ArchConfig
 
 def test_snn_trains_on_event_data():
     """Surrogate-gradient BPTT reaches >90% on the synthetic event task."""
+    from repro.train.snn_trainer import SNNTrainConfig, SNNTrainer
+
     ev = EventStream(timesteps=8, height=12, width=12, seed=1)
     cfg = SNN.SNNConfig(layer_sizes=(ev.n_inputs, 128, 10), timesteps=8)
-    params = SNN.init_params(cfg, jax.random.PRNGKey(0))
-    for step in range(30):
-        sp, lb = ev.batch(64, step)
-        params, loss, stats = SNN.sgd_step(params, cfg, sp, lb, lr=0.3)
+    params, history = SNNTrainer(
+        cfg, SNNTrainConfig(steps=60, batch=64, lr=4e-3, log_every=0)
+    ).fit(lambda step: ev.batch(64, step))
     sp, lb = ev.batch(128, 10_001)
     acc = float(SNN.accuracy(params, cfg, sp, lb))
     assert acc > 0.9, acc
     # event workloads run in the paper's sparsity regime
+    _, stats = SNN.forward(params, cfg, sp)
     assert 0.7 < float(stats["sparsity"]) < 0.99
 
 
 def test_snn_quantized_accuracy_holds():
     """PTQ to the chip's 16x8-bit codebooks costs <5% accuracy."""
+    from repro.core.quant import dequantize, quantize
+    from repro.train.snn_trainer import SNNTrainConfig, SNNTrainer
+
     ev = EventStream(timesteps=8, height=12, width=12, seed=2)
     cfg = SNN.SNNConfig(layer_sizes=(ev.n_inputs, 128, 10), timesteps=8)
-    params = SNN.init_params(cfg, jax.random.PRNGKey(0))
-    for step in range(30):
-        sp, lb = ev.batch(64, step)
-        params, _, _ = SNN.sgd_step(params, cfg, sp, lb, lr=0.3)
+    params, _ = SNNTrainer(
+        cfg, SNNTrainConfig(steps=60, batch=64, lr=4e-3, log_every=0)
+    ).fit(lambda step: ev.batch(64, step))
     sp, lb = ev.batch(128, 10_002)
     acc_fp = float(SNN.accuracy(params, cfg, sp, lb))
-    qparams = SNN.quantize_for_chip(params, cfg)
-    acc_q = float(SNN.accuracy(SNN.dequantized(qparams), cfg, sp, lb))
+    deq = [dequantize(quantize(w, cfg.quant)) for w in params]
+    acc_q = float(SNN.accuracy(deq, cfg, sp, lb))
     assert acc_q > acc_fp - 0.05, (acc_fp, acc_q)
 
 
